@@ -1,0 +1,55 @@
+"""Paper Fig. 4: global-model Acc over rounds for AFL / EAFLM / VAFL in
+each experiment.  Prints CSV rows experiment,algorithm,round,acc and
+optionally writes a matplotlib figure."""
+from __future__ import annotations
+
+import argparse
+
+from benchmarks.fl_common import ALGS, EXPERIMENTS, BenchScale, run_experiment
+
+
+def run(model="mlp", scale=None, experiments=None, png=None):
+    scale = scale or BenchScale()
+    curves = {}
+    print("experiment,algorithm,round,acc")
+    for exp in (experiments or EXPERIMENTS):
+        for alg in ALGS:
+            res = run_experiment(exp, alg, model=model, scale=scale)
+            curves[(exp, alg)] = [(r.round, r.global_acc) for r in res.records]
+            for rnd, acc in curves[(exp, alg)]:
+                print(f"{exp},{alg},{rnd},{acc:.4f}")
+    if png:
+        import matplotlib
+        matplotlib.use("Agg")
+        import matplotlib.pyplot as plt
+        exps = sorted({e for e, _ in curves})
+        fig, axes = plt.subplots(1, len(exps), figsize=(4 * len(exps), 3.2),
+                                 squeeze=False)
+        for i, exp in enumerate(exps):
+            ax = axes[0][i]
+            for alg in ALGS:
+                xs, ys = zip(*curves[(exp, alg)])
+                ax.plot(xs, ys, label=alg.upper())
+            ax.set_title(f"experiment {exp}")
+            ax.set_xlabel("round")
+            ax.set_ylabel("Acc")
+            ax.legend()
+        fig.tight_layout()
+        fig.savefig(png, dpi=120)
+        print(f"# wrote {png}")
+    return curves
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--model", default="mlp")
+    ap.add_argument("--rounds", type=int, default=30)
+    ap.add_argument("--exp", default=None)
+    ap.add_argument("--png", default=None)
+    a = ap.parse_args()
+    run(model=a.model, scale=BenchScale(rounds=a.rounds),
+        experiments=list(a.exp) if a.exp else None, png=a.png)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,169 @@
+"""Roofline analysis (deliverable g): three terms per (arch x shape) from
+the compiled dry-run artifacts.
+
+    compute term    = HLO_FLOPs_per_chip / peak_FLOPs          [s]
+    memory term     = HLO_bytes_per_chip / HBM_bw              [s]
+    collective term = collective_bytes_per_chip / ICI_link_bw  [s]
+
+Sources: per-layer-group probes (trip-count-honest, see launch/probe.py)
+when present, else the full-step cost_analysis (flagged `scan-undercount`).
+The compiled module is the per-device SPMD program, so all numbers are
+per-chip.  MODEL_FLOPS uses 6*N*D (train) / 2*N*D (prefill) / 2*N*B
+(decode step) with N = *active* params; the ratio MODEL_FLOPS/HLO_FLOPs
+shows how much compiled compute is "useful".
+
+Usage: PYTHONPATH=src python -m benchmarks.roofline [--dir artifacts/dryrun]
+       [--csv] [--md artifacts/roofline.md]
+"""
+from __future__ import annotations
+
+import argparse
+import glob
+import json
+import os
+
+PEAK = 197e12        # bf16 FLOP/s per v5e chip
+HBM = 819e9          # bytes/s
+ICI = 50e9           # bytes/s per link (conservative: single link)
+CHIPS = 256          # single pod
+
+
+def model_flops_per_chip(rec):
+    n = rec["params_active"]
+    from repro.configs.base import INPUT_SHAPES
+    shp = INPUT_SHAPES[rec["shape"]]
+    if rec["kind"] == "train":
+        total = 6 * n * shp.global_batch * shp.seq_len
+    elif rec["kind"] == "prefill":
+        total = 2 * n * shp.global_batch * shp.seq_len
+    else:  # decode: one token per sequence
+        total = 2 * n * shp.global_batch
+    return total / CHIPS
+
+
+def hbm_lower_bound(rec):
+    """Structural HBM-traffic lower bound per chip [bytes]: parameters and
+    state that MUST move regardless of fusion.  The XLA 'bytes accessed'
+    figure is the no-fusion upper bound; true HBM traffic lies between.
+      train : params fp32 read fwd+bwd + grad write + Adam m/v read+write
+              (~9 param passes)
+      prefill/decode: one param pass + KV/state cache traffic."""
+    n = rec["params_total"] / CHIPS
+    if rec["kind"] == "train":
+        return 9 * n * 4
+    if rec["kind"] == "prefill":
+        return n * 4
+    # decode: all params + full cache once per token
+    cache = rec.get("memory", {}).get("argument_size_in_bytes", 0)
+    return n * 4 + cache
+
+
+def terms(rec):
+    probe = rec.get("probe", {}).get("totals")
+    if probe:
+        flops, bbytes, coll = (probe["flops"], probe["bytes"],
+                               probe["collective_bytes"])
+        src = "probe"
+    else:
+        flops = rec["cost"].get("flops", 0.0)
+        bbytes = sum(v for k, v in rec["cost"].items() if k.startswith("bytes accessed"))
+        coll = rec.get("collective_bytes", {}).get("total", 0.0)
+        src = "full(scan-undercount)"
+    t_c = flops / PEAK
+    t_m = bbytes / HBM          # upper bound: unfused op-level traffic
+    t_m_lb = hbm_lower_bound(rec) / HBM
+    t_x = coll / ICI
+    # bottleneck judged on the geometric mean of the memory bounds — the
+    # unfused figure alone would call everything memory-bound
+    t_m_mid = (t_m * max(t_m_lb, 1e-12)) ** 0.5
+    dom = max(("compute", t_c), ("memory", t_m_mid), ("collective", t_x),
+              key=lambda kv: kv[1])[0]
+    mf = model_flops_per_chip(rec)
+    return {
+        "arch": rec["arch"], "shape": rec["shape"], "mesh": rec["mesh"],
+        "kind": rec["kind"], "source": src,
+        "flops": flops, "bytes": bbytes, "coll_bytes": coll,
+        "t_compute_s": t_c, "t_memory_s": t_m, "t_memory_lb_s": t_m_lb,
+        "t_memory_mid_s": t_m_mid, "t_collective_s": t_x,
+        "bottleneck": dom,
+        "model_flops": mf,
+        "useful_ratio": mf / flops if flops else 0.0,
+        "advice": ADVICE[dom](rec),
+    }
+
+
+ADVICE = {
+    "compute": lambda r: ("raise useful-FLOP fraction (MoE dispatch einsums / "
+                          "remat recompute are the usual excess)"
+                          if r.get("probe") else
+                          "reduce recompute/remat or excess dispatch FLOPs"),
+    "memory": lambda r: ("increase arithmetic intensity: fuse elementwise "
+                         "chains, keep KV/state tiles in VMEM (Pallas kernels), "
+                         "or grow per-chip batch"),
+    "collective": lambda r: ("reshard to cut cross-chip traffic: fewer "
+                             "all-gathers of weights (bigger FSDP blocks), "
+                             "overlap collectives with compute, or gate "
+                             "cross-pod syncs (VAFL)"),
+}
+
+
+def load(dirpath):
+    recs = []
+    for f in sorted(glob.glob(os.path.join(dirpath, "*.json"))):
+        with open(f) as fh:
+            recs.append(json.load(fh))
+    return recs
+
+
+def fmt_s(x):
+    if x >= 1:
+        return f"{x:.2f}s"
+    if x >= 1e-3:
+        return f"{x*1e3:.2f}ms"
+    return f"{x*1e6:.1f}us"
+
+
+def run(dirpath="artifacts/dryrun", csv=False, md=None, mesh="16x16"):
+    rows = [terms(r) for r in load(dirpath)
+            if r["mesh"] == mesh and not r.get("fl")]
+    rows.sort(key=lambda r: (r["shape"], r["arch"]))
+    if csv:
+        print("arch,shape,t_compute_s,t_memory_ub_s,t_memory_lb_s,"
+              "t_collective_s,bottleneck,model_flops,hlo_flops,useful_ratio,source")
+        for r in rows:
+            print(f"{r['arch']},{r['shape']},{r['t_compute_s']:.6g},"
+                  f"{r['t_memory_s']:.6g},{r['t_memory_lb_s']:.6g},"
+                  f"{r['t_collective_s']:.6g},"
+                  f"{r['bottleneck']},{r['model_flops']:.4g},{r['flops']:.4g},"
+                  f"{r['useful_ratio']:.3f},{r['source']}")
+    lines = ["| arch | shape | compute | memory (lb–ub) | collective | "
+             "bottleneck | useful FLOP ratio | what would move it |",
+             "|---|---|---|---|---|---|---|---|"]
+    for r in rows:
+        lines.append(
+            f"| {r['arch']} | {r['shape']} | {fmt_s(r['t_compute_s'])} | "
+            f"{fmt_s(r['t_memory_lb_s'])}–{fmt_s(r['t_memory_s'])} | "
+            f"{fmt_s(r['t_collective_s'])} | "
+            f"**{r['bottleneck']}** | {r['useful_ratio']:.2f} | {r['advice']} |")
+    table = "\n".join(lines)
+    if md:
+        with open(md, "w") as f:
+            f.write(table + "\n")
+        print(f"# wrote {md}")
+    if not csv:
+        print(table)
+    return rows
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--dir", default="artifacts/dryrun")
+    ap.add_argument("--csv", action="store_true")
+    ap.add_argument("--md", default=None)
+    ap.add_argument("--mesh", default="16x16")
+    a = ap.parse_args()
+    run(a.dir, csv=a.csv, md=a.md, mesh=a.mesh)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,95 @@
+"""Benchmark entry point — one section per paper table/figure.
+
+    PYTHONPATH=src python -m benchmarks.run [--fast] [--full]
+
+Sections:
+  [table3]   paper Table III — comm times + CCR, experiments a-d
+  [fig4]     paper Fig. 4    — convergence curves per algorithm
+  [fig5/6]   paper Fig. 5/6  — per-client + cross-experiment VAFL Acc
+  [kernels]  grad_diff_norm / linear_scan microbenchmarks
+  [roofline] three-term roofline per (arch x shape) from dry-run artifacts
+  [gated]    cross-pod gated-collective accounting (multi-pod artifacts)
+
+--fast shrinks rounds/samples (CI-friendly); default is the EXPERIMENTS.md
+configuration; --full approaches paper scale (slow on CPU).
+"""
+from __future__ import annotations
+
+import argparse
+import os
+import sys
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), ".."))
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--fast", action="store_true")
+    ap.add_argument("--full", action="store_true")
+    ap.add_argument("--skip", default="", help="comma list of sections")
+    args = ap.parse_args()
+    skip = set(args.skip.split(",")) if args.skip else set()
+
+    from benchmarks.fl_common import BenchScale
+    if args.fast:
+        scale = BenchScale(samples_per_client=400, rounds=8, test_samples=500,
+                           target_acc=0.90)
+        exps = ["a", "c"]
+    elif args.full:
+        scale = BenchScale(samples_per_client=2500, rounds=60,
+                           test_samples=2000, local_rounds=5)
+        exps = None
+    else:
+        scale = BenchScale()
+        exps = None
+
+    if "table3" not in skip:
+        print("== [table3] communication times + CCR (paper Table III) ==")
+        from benchmarks.table3_ccr import run as t3
+        t3(scale=scale, experiments=exps,
+           out_json="artifacts/table3.json" if os.path.isdir("artifacts") else None)
+        print()
+
+    if "fig4" not in skip:
+        print("== [fig4] convergence curves (paper Fig. 4) ==")
+        from benchmarks.fig4_convergence import run as f4
+        f4(scale=scale, experiments=exps or ["a", "d"],
+           png="artifacts/fig4.png" if os.path.isdir("artifacts") else None)
+        print()
+
+    if "fig5" not in skip:
+        print("== [fig5/6] per-client Acc under VAFL (paper Fig. 5/6) ==")
+        from benchmarks.fig5_clients import run as f5
+        f5(scale=scale, experiments=exps or ["a", "d"])
+        print()
+
+    if "ablation" not in skip and not args.fast:
+        print("== [ablation] Eq.1 ingredients (clean + 2 corrupted clients) ==")
+        from benchmarks.ablation_value import run as ab
+        from benchmarks.fl_common import BenchScale as BS
+        ab("d", BS(samples_per_client=600, rounds=12, test_samples=500,
+                   target_acc=0.94), corrupt_clients=2)
+        print()
+
+    if "kernels" not in skip:
+        print("== [kernels] microbenchmarks ==")
+        from benchmarks.kernel_bench import run as kb
+        kb()
+        print()
+
+    if "roofline" not in skip and os.path.isdir("artifacts/dryrun"):
+        print("== [roofline] per-(arch x shape) roofline terms ==")
+        from benchmarks.roofline import run as rl
+        rl("artifacts/dryrun", csv=True)
+        print()
+
+    if "gated" not in skip and os.path.isdir("artifacts/dryrun"):
+        print("== [gated] cross-pod gated collective ==")
+        from benchmarks.gated_collective import run as gc
+        gc("artifacts/dryrun")
+        print()
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,89 @@
+"""Cross-silo VAFL on a multi-pod mesh (placeholder devices on CPU).
+
+Demonstrates the TPU-native realisation of the paper: each pod is a
+federated silo training an LLM; the Eq. 2 gate decides which silos join
+the cross-pod aggregation each step, and the explicit shard_map gated
+collective (distributed/gated.py) performs the masked weighted psum.
+
+    PYTHONPATH=src python examples/multipod_vafl.py [--steps 8]
+"""
+import argparse
+import os
+import sys
+
+os.environ.setdefault("XLA_FLAGS", "--xla_force_host_platform_device_count=8")
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--steps", type=int, default=8)
+    ap.add_argument("--arch", default="minicpm_2b")
+    ap.add_argument("--seq", type=int, default=64)
+    args = ap.parse_args()
+
+    import jax
+    import jax.numpy as jnp
+    import numpy as np
+    from jax.sharding import NamedSharding, PartitionSpec as P
+
+    from repro.common.pytree import tree_sq_diff_norm
+    from repro.data.synthetic import token_stream
+    from repro.distributed.gated import make_gated_allreduce
+    from repro.launch.mesh import make_host_mesh
+    from repro.models import decoder
+    from repro.models.registry import get_smoke_config
+
+    cfg = get_smoke_config(args.arch)
+    mesh = make_host_mesh(pods=2)
+    PODS = mesh.devices.shape[0]
+    print(f"mesh: {dict(zip(mesh.axis_names, mesh.devices.shape))} "
+          f"({PODS} silos)")
+
+    params = decoder.init_params(cfg, jax.random.key(0))
+    # per-silo replicas + data streams (different seeds -> non-IID silos)
+    silo_params = [params] * PODS
+    prev_grads = [jax.tree.map(lambda x: jnp.zeros_like(x, jnp.float32), params)
+                  for _ in range(PODS)]
+    streams = [token_stream(args.steps * 4, args.seq, cfg.vocab_size, seed=p)
+               for p in range(PODS)]
+
+    specs = jax.tree.map(lambda _: P(), params)
+    gated = make_gated_allreduce(mesh, specs)
+
+    @jax.jit
+    def local_grad(p, batch):
+        return jax.value_and_grad(
+            lambda q: decoder.loss_fn(cfg, q, batch)[0])(p)
+
+    lr = 0.3
+    with mesh:
+        for s in range(args.steps):
+            grads, Vs, losses = [], [], []
+            for p in range(PODS):
+                tb = jnp.asarray(streams[p][0][s * 4:(s + 1) * 4])
+                lb = jnp.asarray(streams[p][1][s * 4:(s + 1) * 4])
+                loss, g = local_grad(silo_params[p], {"tokens": tb, "labels": lb})
+                v = float(tree_sq_diff_norm(prev_grads[p], g)) * \
+                    (1 + PODS / 1e3) ** float(jnp.exp(-loss))
+                grads.append(g)
+                prev_grads[p] = g
+                Vs.append(v)
+                losses.append(float(loss))
+            stacked = jax.tree.map(lambda *xs: jnp.stack(xs), *grads)
+            agg, sel, any_sel = gated(stacked, jnp.asarray(Vs, jnp.float32),
+                                      jnp.ones(PODS))
+            # all silos apply the gated aggregate (server broadcast)
+            new = jax.tree.map(lambda x, gg: (x - lr * gg).astype(x.dtype),
+                               silo_params[0], agg)
+            silo_params = [new] * PODS
+            sel = np.asarray(sel).ravel()
+            print(f"step {s:2d} loss={np.mean(losses):.4f} "
+                  f"V={np.array2string(np.asarray(Vs), precision=3)} "
+                  f"synced={int(sel.sum())}/{PODS}")
+    print("\ncross-pod traffic per step: V all-gather = "
+          f"{PODS * 4} B vs full-model psum only for selected silos")
+
+
+if __name__ == "__main__":
+    main()

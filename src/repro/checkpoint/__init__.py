@@ -1,0 +1,2 @@
+from repro.checkpoint.store import (latest_step, load_pytree, restore,
+                                    save_pytree, save)

@@ -1,0 +1,77 @@
+"""Checkpointing: npz-based pytree save/restore with step metadata.
+
+Pytrees are flattened to path-keyed arrays ("groups/0/attn/wq" style) so
+checkpoints are stable across library versions and partially loadable.
+FL server state (global params + per-client grads + counters) checkpoints
+through the same path.
+"""
+from __future__ import annotations
+
+import json
+import os
+import re
+from typing import Any, Dict, Optional
+
+import jax
+import numpy as np
+
+
+def _flatten(tree) -> Dict[str, np.ndarray]:
+    flat = {}
+    for path, leaf in jax.tree_util.tree_flatten_with_path(tree)[0]:
+        key = "/".join(_key_str(p) for p in path)
+        flat[key] = np.asarray(leaf)
+    return flat
+
+
+def _key_str(p) -> str:
+    if hasattr(p, "key"):
+        return str(p.key)
+    if hasattr(p, "idx"):
+        return str(p.idx)
+    return str(p)
+
+
+def save_pytree(path: str, tree, metadata: Optional[Dict[str, Any]] = None):
+    os.makedirs(os.path.dirname(path) or ".", exist_ok=True)
+    flat = _flatten(tree)
+    np.savez(path if path.endswith(".npz") else path + ".npz", **flat)
+    if metadata is not None:
+        with open(re.sub(r"\.npz$", "", path) + ".meta.json", "w") as f:
+            json.dump(metadata, f, indent=1, default=str)
+
+
+def load_pytree(path: str, like):
+    """Restore into the structure of `like` (shapes/dtypes preserved)."""
+    if not path.endswith(".npz"):
+        path += ".npz"
+    data = np.load(path)
+    paths, treedef = jax.tree_util.tree_flatten_with_path(like)
+    leaves = []
+    for p, leaf in paths:
+        key = "/".join(_key_str(x) for x in p)
+        arr = data[key]
+        assert arr.shape == tuple(leaf.shape), (key, arr.shape, leaf.shape)
+        leaves.append(arr.astype(leaf.dtype) if hasattr(leaf, "dtype") else arr)
+    return jax.tree_util.tree_unflatten(treedef, leaves)
+
+
+def save(ckpt_dir: str, step: int, tree, metadata=None):
+    md = {"step": step}
+    md.update(metadata or {})
+    save_pytree(os.path.join(ckpt_dir, f"step_{step:08d}"), tree, md)
+
+
+def latest_step(ckpt_dir: str) -> Optional[int]:
+    if not os.path.isdir(ckpt_dir):
+        return None
+    steps = [int(m.group(1)) for f in os.listdir(ckpt_dir)
+             if (m := re.match(r"step_(\d+)\.npz", f))]
+    return max(steps) if steps else None
+
+
+def restore(ckpt_dir: str, like, step: Optional[int] = None):
+    step = step if step is not None else latest_step(ckpt_dir)
+    if step is None:
+        raise FileNotFoundError(f"no checkpoints in {ckpt_dir}")
+    return load_pytree(os.path.join(ckpt_dir, f"step_{step:08d}"), like), step

@@ -1,0 +1,91 @@
+"""Pytree utilities shared across the framework.
+
+These are the small, heavily-reused numeric helpers: flat norms, tree
+arithmetic, parameter counting.  Everything is functional and jit-safe.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def tree_add(a, b):
+    return jax.tree.map(jnp.add, a, b)
+
+
+def tree_sub(a, b):
+    return jax.tree.map(jnp.subtract, a, b)
+
+
+def tree_scale(a, s):
+    return jax.tree.map(lambda x: x * s, a)
+
+
+def tree_zeros_like(a):
+    return jax.tree.map(jnp.zeros_like, a)
+
+
+def tree_dot(a, b):
+    """Sum of elementwise products across two same-structure trees."""
+    leaves = jax.tree.map(lambda x, y: jnp.sum(x.astype(jnp.float32) * y.astype(jnp.float32)), a, b)
+    return jax.tree.reduce(jnp.add, leaves, jnp.float32(0.0))
+
+
+def tree_sq_norm(a):
+    """Squared L2 norm of all leaves (fp32 accumulation)."""
+    leaves = jax.tree.map(lambda x: jnp.sum(jnp.square(x.astype(jnp.float32))), a)
+    return jax.tree.reduce(jnp.add, leaves, jnp.float32(0.0))
+
+
+def global_norm(a):
+    return jnp.sqrt(tree_sq_norm(a))
+
+
+def tree_sq_diff_norm(a, b):
+    """||a - b||^2 without materialising the full difference tree at once."""
+    leaves = jax.tree.map(
+        lambda x, y: jnp.sum(jnp.square(x.astype(jnp.float32) - y.astype(jnp.float32))), a, b
+    )
+    return jax.tree.reduce(jnp.add, leaves, jnp.float32(0.0))
+
+
+def count_params(tree) -> int:
+    return int(sum(x.size for x in jax.tree.leaves(tree)))
+
+
+def tree_bytes(tree) -> int:
+    return int(sum(x.size * x.dtype.itemsize for x in jax.tree.leaves(tree)))
+
+
+def tree_cast(tree, dtype):
+    return jax.tree.map(lambda x: x.astype(dtype) if jnp.issubdtype(x.dtype, jnp.floating) else x, tree)
+
+
+def tree_where(pred, a, b):
+    """Select between two same-structure trees with a scalar predicate."""
+    return jax.tree.map(lambda x, y: jnp.where(pred, x, y), a, b)
+
+
+def tree_weighted_sum(trees, weights):
+    """weights: 1-D array of len(trees). Returns sum_i w_i * tree_i."""
+    out = tree_scale(trees[0], weights[0])
+    for t, w in zip(trees[1:], weights[1:]):
+        out = tree_add(out, tree_scale(t, w))
+    return out
+
+
+def stacked_index(stacked, i):
+    """Index the leading axis of a stacked pytree (as built by jax.vmap-ed init)."""
+    return jax.tree.map(lambda x: x[i], stacked)
+
+
+def stacked_set(stacked, i, tree):
+    return jax.tree.map(lambda s, x: s.at[i].set(x), stacked, tree)
+
+
+def tree_stack(trees):
+    return jax.tree.map(lambda *xs: jnp.stack(xs), *trees)
+
+
+def tree_unstack(stacked, n):
+    return [stacked_index(stacked, i) for i in range(n)]

@@ -1,0 +1,6 @@
+# The paper's primary contribution: VAFL — communication-value-gated
+# asynchronous federated learning (value calc, selection, aggregation,
+# async scheduler, server runtimes).
+from repro.core import aggregation, client, metrics, scheduler, server, value
+from repro.core.server import (ALGORITHMS, FLRunConfig, run_event_driven,
+                               run_round_based)

@@ -1,0 +1,63 @@
+"""Server-side aggregation: masked weighted FedAvg (Algorithm 1 lines
+9-16) plus the staleness-decay variant used by the event-driven runtime.
+
+All aggregation is mask-based so it jits cleanly and maps 1:1 onto the
+value-gated cross-pod collective in ``repro.distributed.gated`` (the TPU
+realisation of the same math).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def aggregation_weights(mask: jax.Array, sample_counts: jax.Array) -> jax.Array:
+    """Algorithm 1 line 16: theta <- sum_i (n_i / n) theta_i over selected
+    clients; n = total samples of the selected set.  Returns per-client
+    weights (zero for unselected); sums to 1 when any client is selected."""
+    m = mask.astype(jnp.float32)
+    w = m * sample_counts.astype(jnp.float32)
+    tot = jnp.sum(w)
+    return jnp.where(tot > 0, w / jnp.maximum(tot, 1e-9), jnp.zeros_like(w))
+
+
+def masked_weighted_average(stacked_params, mask, sample_counts):
+    """Weighted average over the leading client axis of a stacked pytree.
+    If no client is selected the result is a zero tree (caller keeps the
+    previous global model in that case)."""
+    w = aggregation_weights(mask, sample_counts)
+    def avg(leaf):
+        wf = w.reshape((-1,) + (1,) * (leaf.ndim - 1)).astype(jnp.float32)
+        return jnp.sum(leaf.astype(jnp.float32) * wf, axis=0).astype(leaf.dtype)
+    return jax.tree.map(avg, stacked_params)
+
+
+def aggregate_or_keep(global_params, stacked_params, mask, sample_counts):
+    """Masked FedAvg; falls back to the current global model when the mask
+    is empty (jit-safe select)."""
+    any_sel = jnp.any(mask)
+    agg = masked_weighted_average(stacked_params, mask, sample_counts)
+    return jax.tree.map(
+        lambda g, a: jnp.where(any_sel, a.astype(g.dtype), g), global_params, agg)
+
+
+def staleness_weight(staleness, kind: str = "poly", a: float = 0.5):
+    """FedAsync-style staleness decay s(tau). kind: 'poly' (1+tau)^-a,
+    'const' 1.  Used by the event-driven runtime (beyond-paper option)."""
+    tau = jnp.asarray(staleness, jnp.float32)
+    if kind == "poly":
+        return (1.0 + tau) ** (-a)
+    if kind == "const":
+        return jnp.ones_like(tau)
+    raise ValueError(kind)
+
+
+def async_mix(global_params, client_params, rho):
+    """Single-client asynchronous mix: theta <- (1-rho) theta + rho theta_i
+    (the classic async-FedAvg server step, used on each arrival in the
+    event-driven runtime)."""
+    rho = jnp.asarray(rho, jnp.float32)
+    return jax.tree.map(
+        lambda g, c: ((1.0 - rho) * g.astype(jnp.float32)
+                      + rho * c.astype(jnp.float32)).astype(g.dtype),
+        global_params, client_params)

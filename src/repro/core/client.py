@@ -1,0 +1,145 @@
+"""Client-side local training for the FL runtime.
+
+Clients are simulated on-device as a *stacked* pytree (leading axis =
+client) and trained with one vmapped jitted update — the TPU-native
+realisation of "N heterogeneous edge devices train locally".  Per-client
+sample masks handle quantity skew (vmap needs equal buffer shapes).
+
+The "effective gradient" of a local round is (theta_start - theta_end)/lr
+— the quantity whose round-over-round difference feeds Eq. 1.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+from functools import partial
+from typing import Callable
+
+import jax
+import jax.numpy as jnp
+
+
+@dataclass(frozen=True)
+class LocalSpec:
+    batch_size: int = 32
+    local_epochs: int = 1       # E in the paper
+    local_rounds: int = 5       # r in the paper (gradient rounds per report)
+    lr: float = 0.1             # eta
+    # FedProx (Li et al., cited by the paper as [9]): proximal term
+    # mu/2 * ||theta - theta_global||^2 added to every local step — tames
+    # client drift under non-IID data.  0 = plain FedAvg local SGD.
+    prox_mu: float = 0.0
+    # DP-style upload sanitisation: clip the local update to L2 norm
+    # dp_clip and add N(0, (dp_clip*dp_noise)^2) — the standard DP-FedAvg
+    # client mechanism (per-round; accounting left to the operator).
+    dp_clip: float = 0.0        # 0 = off
+    dp_noise: float = 0.0       # noise multiplier sigma
+
+
+def make_local_update(loss_fn: Callable, spec: LocalSpec):
+    """loss_fn(params, batch) -> (loss, metrics); batch has 'images',
+    'labels', 'weights'.  Returns a jitted function over stacked clients:
+
+    (stacked_params, data, rng) -> (new_params, eff_grad, mean_loss)
+    data: {"images": (N,M,...), "labels": (N,M), "mask": (N,M)}
+    """
+    B = spec.batch_size
+
+    def one_client(params, images, labels, mask, rng):
+        M = images.shape[0]
+        nb = max(M // B, 1)
+        p0 = params  # the downloaded global model (FedProx anchor / DP base)
+
+        def epoch(carry, erng):
+            p = carry
+            perm = jax.random.permutation(erng, M)
+            xb = images[perm][:nb * B].reshape(nb, B, *images.shape[1:])
+            yb = labels[perm][:nb * B].reshape(nb, B)
+            wb = mask[perm][:nb * B].reshape(nb, B)
+
+            def step(p, b):
+                def weighted(p_):
+                    loss, _ = loss_fn(p_, {"images": b[0], "labels": b[1],
+                                           "weights": b[2]})
+                    if spec.prox_mu:
+                        from repro.common.pytree import tree_sq_diff_norm
+                        loss = loss + 0.5 * spec.prox_mu * tree_sq_diff_norm(p_, p0)
+                    return loss
+                loss, g = jax.value_and_grad(weighted)(p)
+                newp = jax.tree.map(
+                    lambda x, gg: (x.astype(jnp.float32) - spec.lr * gg.astype(jnp.float32)
+                                   ).astype(x.dtype), p, g)
+                return newp, loss
+
+            p, losses = jax.lax.scan(step, p, (xb, yb, wb))
+            return p, jnp.mean(losses)
+
+        n_ep = spec.local_epochs * spec.local_rounds
+        erngs = jax.random.split(rng, n_ep + 1)
+        newp, losses = jax.lax.scan(epoch, params, erngs[:-1])
+
+        if spec.dp_clip:
+            # clip the round delta and add Gaussian noise (DP-FedAvg client op)
+            from repro.common.pytree import tree_sq_norm
+            delta = jax.tree.map(
+                lambda a, b_: a.astype(jnp.float32) - b_.astype(jnp.float32),
+                newp, p0)
+            nrm = jnp.sqrt(tree_sq_norm(delta))
+            scale = jnp.minimum(1.0, spec.dp_clip / jnp.maximum(nrm, 1e-9))
+            leaves, treedef = jax.tree.flatten(delta)
+            nrngs = jax.random.split(erngs[-1], len(leaves))
+            sigma = spec.dp_clip * spec.dp_noise
+            noised = [d * scale + sigma * jax.random.normal(k, d.shape)
+                      for d, k in zip(leaves, nrngs)]
+            delta = jax.tree.unflatten(treedef, noised)
+            newp = jax.tree.map(
+                lambda b_, d: (b_.astype(jnp.float32) + d).astype(b_.dtype),
+                p0, delta)
+
+        eff_grad = jax.tree.map(
+            lambda a, b_: (a.astype(jnp.float32) - b_.astype(jnp.float32)) / spec.lr,
+            params, newp)
+        return newp, eff_grad, jnp.mean(losses)
+
+    @jax.jit
+    def update(stacked_params, data, rng):
+        N = data["labels"].shape[0]
+        rngs = jax.random.split(rng, N)
+        return jax.vmap(one_client)(stacked_params, data["images"],
+                                    data["labels"], data["mask"], rngs)
+
+    return update
+
+
+def make_weighted_classifier_loss(forward_fn, cfg):
+    """Wraps a classifier forward into a sample-weighted loss (mask-aware)."""
+    def loss_fn(params, batch):
+        logits = forward_fn(cfg, params, batch["images"])
+        labels = batch["labels"]
+        w = batch.get("weights")
+        logp = jax.nn.log_softmax(logits.astype(jnp.float32), axis=-1)
+        nll = -jnp.take_along_axis(logp, labels[:, None], axis=-1)[:, 0]
+        if w is not None:
+            loss = jnp.sum(nll * w) / jnp.maximum(jnp.sum(w), 1.0)
+        else:
+            loss = jnp.mean(nll)
+        return loss, {}
+    return loss_fn
+
+
+def make_evaluator(forward_fn, cfg, test_images, test_labels, batch: int = 1000):
+    """Returns jitted accuracy evaluator params -> scalar acc."""
+    xi = jnp.asarray(test_images)
+    yi = jnp.asarray(test_labels)
+    nb = len(yi) // batch
+
+    @jax.jit
+    def evaluate(params):
+        def body(acc, i):
+            xb = jax.lax.dynamic_slice_in_dim(xi, i * batch, batch)
+            yb = jax.lax.dynamic_slice_in_dim(yi, i * batch, batch)
+            logits = forward_fn(cfg, params, xb)
+            return acc + jnp.sum((jnp.argmax(logits, -1) == yb).astype(jnp.float32)), None
+        tot, _ = jax.lax.scan(body, jnp.float32(0.0), jnp.arange(nb))
+        return tot / (nb * batch)
+
+    return evaluate

@@ -1,0 +1,75 @@
+"""FL experiment metrics: communication accounting (the paper's headline
+numbers), CCR (Eq. 4), accuracy tracking, time-to-accuracy."""
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+from typing import List, Optional
+
+
+@dataclass
+class CommStats:
+    """Communication accounting.  The paper's 'communication times' = model
+    uploads; scalar V reports are tracked separately (they are what VAFL
+    trades the heavy uploads for)."""
+    model_uploads: int = 0
+    scalar_reports: int = 0
+    broadcasts: int = 0
+    model_bytes: int = 0          # bytes per model transfer
+    uplink_bytes: int = 0
+    downlink_bytes: int = 0
+
+    def record_upload(self, n: int = 1):
+        self.model_uploads += n
+        self.uplink_bytes += n * self.model_bytes
+
+    def record_report(self, n: int = 1):
+        self.scalar_reports += n
+        self.uplink_bytes += n * 4  # one fp32 scalar
+
+    def record_broadcast(self, n: int = 1):
+        self.broadcasts += n
+        self.downlink_bytes += n * self.model_bytes
+
+
+def ccr(c_t0: float, c_t1: float) -> float:
+    """Eq. 4: communication compression rate (C_t0 - C_t1)/C_t0.
+    C_t0 = communications before compression (the AFL baseline),
+    C_t1 = after (the gated algorithm)."""
+    if c_t0 <= 0:
+        return 0.0
+    return (c_t0 - c_t1) / c_t0
+
+
+@dataclass
+class RoundRecord:
+    round: int
+    time: float
+    global_acc: float
+    uploads_so_far: int
+    selected: List[int] = field(default_factory=list)
+    values: Optional[List[float]] = None
+    client_accs: Optional[List[float]] = None
+
+
+@dataclass
+class RunResult:
+    algorithm: str
+    records: List[RoundRecord]
+    comm: CommStats
+    target_acc: float
+    uploads_to_target: Optional[int] = None   # comm times when target first hit
+    rounds_to_target: Optional[int] = None
+    time_to_target: Optional[float] = None
+
+    @property
+    def best_acc(self) -> float:
+        return max((r.global_acc for r in self.records), default=0.0)
+
+    def finalize_target(self):
+        for r in self.records:
+            if r.global_acc >= self.target_acc:
+                self.uploads_to_target = r.uploads_so_far
+                self.rounds_to_target = r.round
+                self.time_to_target = r.time
+                break
+        return self

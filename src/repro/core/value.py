@@ -1,0 +1,87 @@
+"""Communication-value calculation — the paper's Eq. 1 (VAFL) and the
+EAFLM comparison rule (Eq. 3).
+
+    V_i = ||grad_i^{k-1} - grad_i^k||^2 * (1 + N/1e3)^{Acc_i}        (Eq. 1)
+
+The squared gradient-difference norm is the obsolescence check ("is the
+client's model still moving?"); the (1+N/1e3)^Acc term amplifies the value
+of accurate clients more strongly as the federation grows.
+
+At datacenter scale the grad-diff norm is a single-pass fused reduction —
+``repro.kernels.grad_diff_norm`` provides the Pallas TPU kernel; here the
+default backend is the pure-jnp tree reduction (identical semantics, used
+on CPU and as the kernel's oracle).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.common.pytree import tree_sq_diff_norm, tree_sq_norm
+
+N_SCALE = 1e3  # the paper's 10^3 denominator in (1 + N/10^3)
+
+
+def value_base(n_clients) -> jax.Array:
+    """The power-function base (1 + N/10^3)."""
+    return 1.0 + jnp.asarray(n_clients, jnp.float32) / N_SCALE
+
+
+def communication_value(grad_prev, grad_cur, acc, n_clients, *,
+                        sq_diff_fn=tree_sq_diff_norm) -> jax.Array:
+    """Eq. 1.  grad_prev/grad_cur: same-structure pytrees (client gradients at
+    rounds k-1 and k); acc: scalar in [0,1]; n_clients: static or traced.
+    sq_diff_fn is pluggable so the Pallas kernel can be swapped in."""
+    diff_sq = sq_diff_fn(grad_prev, grad_cur)
+    amp = value_base(n_clients) ** jnp.asarray(acc, jnp.float32)
+    return (diff_sq * amp).astype(jnp.float32)
+
+
+def communication_values_stacked(grads_prev, grads_cur, accs, n_clients, *,
+                                 sq_diff_fn=tree_sq_diff_norm) -> jax.Array:
+    """Vectorised Eq. 1 over stacked client pytrees (leading axis = client)."""
+    return jax.vmap(
+        lambda gp, gc, a: communication_value(gp, gc, a, n_clients,
+                                              sq_diff_fn=sq_diff_fn)
+    )(grads_prev, grads_cur, accs)
+
+
+def vafl_threshold(values: jax.Array) -> jax.Array:
+    """Eq. 2 threshold: mean communication value over the federation."""
+    return jnp.mean(values)
+
+
+def vafl_mask(values: jax.Array) -> jax.Array:
+    """Eq. 2: upload iff V_i >= mean_j V_j.  In exact arithmetic the max is
+    always >= the mean; in fp32 the mean can round *above* every element
+    (found by hypothesis), so the max element is explicitly kept — the
+    selection is guaranteed non-empty."""
+    values = jnp.asarray(values, jnp.float32)
+    return (values >= vafl_threshold(values)) | (values >= jnp.max(values))
+
+
+# ----------------------------------------------------------------- EAFLM ---
+
+def eaflm_threshold(server_param_deltas, alpha: float, beta: float, m: int,
+                    xi=None) -> jax.Array:
+    """RHS of Eq. 3: (1/(alpha^2 beta m^2)) * ||sum_d xi_d (theta^{k-d} -
+    theta^{k-1-d})||^2.  ``server_param_deltas`` is a list of D pytrees
+    (theta^{k-d} - theta^{k-1-d}); the paper uses D=1, xi_d=1/D."""
+    D = len(server_param_deltas)
+    xi = xi if xi is not None else [1.0 / D] * D
+    acc = jax.tree.map(lambda x: x * xi[0], server_param_deltas[0])
+    for d in range(1, D):
+        acc = jax.tree.map(lambda a, x: a + xi[d] * x, acc, server_param_deltas[d])
+    return tree_sq_norm(acc) / (alpha ** 2 * beta * m ** 2)
+
+
+def eaflm_suppress(grad, threshold: jax.Array) -> jax.Array:
+    """LHS of Eq. 3: the client is 'lazy' (upload suppressed) when its
+    gradient norm falls at/below the threshold."""
+    return tree_sq_norm(grad) <= threshold
+
+
+def eaflm_mask_stacked(grads, threshold) -> jax.Array:
+    """Upload mask over stacked client grads: True = upload (not lazy)."""
+    norms = jax.vmap(tree_sq_norm)(grads)
+    return norms > threshold

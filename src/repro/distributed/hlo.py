@@ -1,0 +1,72 @@
+"""HLO text analysis: collective-byte accounting for the roofline.
+
+``compiled.cost_analysis()`` reports FLOPs and memory traffic but not
+collective traffic; we parse the optimised HLO for all-gather /
+all-reduce / reduce-scatter / all-to-all / collective-permute ops and sum
+their result-shape bytes.  While-loop bodies appear once in the module —
+``loop_trip_counts`` lets callers scale specific computations if needed
+(our layer scans are handled analytically in benchmarks/roofline.py).
+"""
+from __future__ import annotations
+
+import re
+from collections import defaultdict
+from typing import Dict
+
+_DTYPE_BYTES = {
+    "f64": 8, "f32": 4, "bf16": 2, "f16": 2, "f8e4m3fn": 1, "f8e5m2": 1,
+    "s64": 8, "u64": 8, "s32": 4, "u32": 4, "s16": 2, "u16": 2,
+    "s8": 1, "u8": 1, "pred": 1, "c64": 8, "c128": 16,
+}
+
+COLLECTIVES = ("all-gather", "all-reduce", "reduce-scatter", "all-to-all",
+               "collective-permute")
+
+# e.g.  %all-reduce.5 = bf16[4,1024]{1,0} all-reduce(...)
+#       ROOT %t = (f32[8]{0}, f32[8]{0}) tuple(...)
+_OP_RE = re.compile(
+    r"=\s*(?P<shape>\(?[a-z0-9]+\[[0-9,]*\][^ ]*\)?)\s+(?P<op>[a-z\-]+)\(")
+_SHAPE_RE = re.compile(r"(?P<dt>[a-z0-9]+)\[(?P<dims>[0-9,]*)\]")
+
+
+def shape_bytes(shape_str: str) -> int:
+    """Bytes of an HLO shape string (sums tuple elements)."""
+    total = 0
+    for m in _SHAPE_RE.finditer(shape_str):
+        dt = m.group("dt")
+        if dt not in _DTYPE_BYTES:
+            continue
+        dims = m.group("dims")
+        n = 1
+        if dims:
+            for d in dims.split(","):
+                n *= int(d)
+        total += n * _DTYPE_BYTES[dt]
+    return total
+
+
+def collective_bytes(hlo_text: str) -> Dict[str, int]:
+    """Sum of result bytes per collective kind (+ 'total') in the module."""
+    out = defaultdict(int)
+    for line in hlo_text.splitlines():
+        m = _OP_RE.search(line)
+        if not m:
+            continue
+        op = m.group("op")
+        # strip "-start"/"-done" async suffixes; count only the -start
+        base = op.replace("-start", "")
+        if base in COLLECTIVES and not op.endswith("-done"):
+            out[base] += shape_bytes(m.group("shape"))
+    out["total"] = sum(v for k, v in out.items() if k != "total")
+    return dict(out)
+
+
+def collective_counts(hlo_text: str) -> Dict[str, int]:
+    out = defaultdict(int)
+    for line in hlo_text.splitlines():
+        m = _OP_RE.search(line)
+        if m:
+            base = m.group("op").replace("-start", "")
+            if base in COLLECTIVES and not m.group("op").endswith("-done"):
+                out[base] += 1
+    return dict(out)

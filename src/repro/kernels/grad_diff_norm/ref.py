@@ -1,0 +1,22 @@
+"""Pure-jnp oracle for the grad_diff_norm kernel."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def grad_diff_sq_norm_2d(a, b):
+    d = a.astype(jnp.float32) - b.astype(jnp.float32)
+    return jnp.sum(d * d)
+
+
+def tree_grad_diff_sq_norm(tree_a, tree_b):
+    leaves = jax.tree.map(
+        lambda x, y: jnp.sum(jnp.square(x.astype(jnp.float32) - y.astype(jnp.float32))),
+        tree_a, tree_b)
+    return jax.tree.reduce(jnp.add, leaves, jnp.float32(0.0))
+
+
+def communication_value(tree_a, tree_b, acc, n_clients):
+    diff = tree_grad_diff_sq_norm(tree_a, tree_b)
+    return diff * (1.0 + n_clients / 1e3) ** jnp.asarray(acc, jnp.float32)

@@ -1,0 +1,105 @@
+"""Pallas TPU kernel: chunked gated linear recurrence (Mamba2/RWKV6 core).
+
+Computes, per (batch*head) grid row with the chunk axis innermost:
+
+    S_t = diag(exp(la_t)) S_{t-1} + k_t v_t^T
+    y_t = q_t^T S_t                          (include_current=True, Mamba2)
+    y_t = q_t^T (S_{t-1} + diag(u) k_t v_t^T)  (RWKV6 bonus form)
+
+The (K, V) state lives in VMEM scratch and is carried across the
+sequential chunk grid — the HBM traffic is exactly one read of q/k/v/la
+and one write of y (roofline-optimal for this op).  Within a chunk the
+quadratic intra-chunk form runs on the MXU ((L,K)x(K,L) and (L,L)x(L,V)
+matmuls), mirroring repro.models.recurrence.linear_recurrence's math
+(factorised per-dim decay with the same clamp).
+
+Shapes: q,k,la (BH, S, K); v (BH, S, V); u (BH, K) or None.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+LOG_A_MIN = -8.0
+
+
+def _kernel(q_ref, k_ref, v_ref, la_ref, u_ref, y_ref, s_scr, *,
+            chunk: int, include_current: bool, use_u: bool):
+    ci = pl.program_id(1)
+
+    @pl.when(ci == 0)
+    def _init():
+        s_scr[...] = jnp.zeros_like(s_scr)
+
+    q = q_ref[0].astype(jnp.float32)               # (L, K)
+    k = k_ref[0].astype(jnp.float32)
+    v = v_ref[0].astype(jnp.float32)               # (L, V)
+    la = jnp.clip(la_ref[0].astype(jnp.float32), LOG_A_MIN, 0.0)
+    L = chunk
+
+    cum = jnp.cumsum(la, axis=0)                   # (L, K)
+    shift = cum if include_current else cum - la
+
+    # inter-chunk: y += (q * exp(shift)) @ S_in
+    s_in = s_scr[...]                              # (K, V)
+    qd = q * jnp.exp(shift)
+    y = jax.lax.dot(qd, s_in)                      # (L, V)
+
+    # intra-chunk: factorised decay scores, causal mask
+    qf = q * jnp.exp(shift)
+    kf = k * jnp.exp(-cum)
+    scores = jax.lax.dot_general(qf, kf, (((1,), (1,)), ((), ())))  # (L, L)
+    off = 0 if include_current else -1
+    ii = jax.lax.broadcasted_iota(jnp.int32, (L, L), 0)
+    jj = jax.lax.broadcasted_iota(jnp.int32, (L, L), 1)
+    tri = (ii + off) >= jj
+    scores = jnp.where(tri, scores, 0.0)
+    if use_u:
+        u = u_ref[0].astype(jnp.float32)           # (K,)
+        cur = jnp.sum(q * u[None, :] * k, axis=1)  # (L,)
+        scores = scores + jnp.diag(cur)            # current-token bonus
+    y = y + jax.lax.dot(scores, v)
+
+    # state update: S_out = exp(tot) * S_in + sum_s exp(tot - cum_s) k_s v_s
+    tot = cum[-1]                                  # (K,)
+    kdec = k * jnp.exp(tot[None, :] - cum)         # (L, K)
+    s_scr[...] = (jnp.exp(tot)[:, None] * s_in
+                  + jax.lax.dot_general(kdec, v, (((0,), (0,)), ((), ()))))
+
+    y_ref[0] = y.astype(y_ref.dtype)
+
+
+@functools.partial(jax.jit, static_argnames=("chunk", "include_current",
+                                             "interpret"))
+def linear_scan(q, k, v, la, u=None, *, chunk: int = 64,
+                include_current: bool = True, interpret: bool = True):
+    """Returns y (BH, S, V).  u (BH, K) enables the RWKV6 bonus term
+    (pass include_current=False with it)."""
+    BH, S, K = q.shape
+    V = v.shape[-1]
+    assert S % chunk == 0, (S, chunk)
+    use_u = u is not None
+    if u is None:
+        u = jnp.zeros((BH, K), q.dtype)
+    grid = (BH, S // chunk)
+    kern = functools.partial(_kernel, chunk=chunk,
+                             include_current=include_current, use_u=use_u)
+    return pl.pallas_call(
+        kern,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, chunk, K), lambda b, c: (b, c, 0)),
+            pl.BlockSpec((1, chunk, K), lambda b, c: (b, c, 0)),
+            pl.BlockSpec((1, chunk, V), lambda b, c: (b, c, 0)),
+            pl.BlockSpec((1, chunk, K), lambda b, c: (b, c, 0)),
+            pl.BlockSpec((1, K), lambda b, c: (b, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, chunk, V), lambda b, c: (b, c, 0)),
+        out_shape=jax.ShapeDtypeStruct((BH, S, V), v.dtype),
+        scratch_shapes=[pltpu.VMEM((K, V), jnp.float32)],
+        interpret=interpret,
+    )(q, k, v, la, u)

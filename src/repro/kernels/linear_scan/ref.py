@@ -1,0 +1,30 @@
+"""Pure-jnp oracle for the linear_scan kernel: exact sequential recurrence."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+LOG_A_MIN = -8.0
+
+
+def linear_scan(q, k, v, la, u=None, *, include_current: bool = True):
+    """q,k,la (BH,S,K); v (BH,S,V) -> y (BH,S,V). Same clamp as the kernel."""
+    BH, S, K = q.shape
+    V = v.shape[-1]
+    la = jnp.clip(la.astype(jnp.float32), LOG_A_MIN, 0.0)
+
+    def step(state, inp):
+        qt, kt, vt, lat = inp
+        kv = kt[:, :, None] * vt[:, None, :]       # (BH,K,V)
+        if include_current:
+            new = jnp.exp(lat)[..., None] * state + kv
+            y = jnp.einsum("bk,bkv->bv", qt, new)
+        else:
+            att = state + (u[:, :, None] * kv if u is not None else kv)
+            y = jnp.einsum("bk,bkv->bv", qt, att)
+            new = jnp.exp(lat)[..., None] * state + kv
+        return new, y
+
+    xs = tuple(jnp.moveaxis(t.astype(jnp.float32), 1, 0) for t in (q, k, v, la))
+    _, ys = jax.lax.scan(step, jnp.zeros((BH, K, V), jnp.float32), xs)
+    return jnp.moveaxis(ys, 0, 1).astype(v.dtype)

@@ -1,0 +1,258 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+"""Multi-pod dry-run: prove every (architecture x input shape x mesh)
+combination lowers, partitions, and compiles on the production mesh.
+
+    PYTHONPATH=src python -m repro.launch.dryrun --arch minicpm_2b \
+        --shape train_4k [--multipod] [--out artifacts/dryrun]
+
+The two lines above MUST run before any other import (jax locks the
+device count at first init); 512 placeholder host devices back the
+(2,16,16) production mesh.  Nothing is allocated: parameters, optimizer
+state, batches and caches enter as ShapeDtypeStructs.
+
+Artifacts (JSON per combination) record compiled memory analysis, HLO
+cost analysis and collective-byte accounting — the inputs to
+benchmarks/roofline.py and EXPERIMENTS.md §Dry-run/§Roofline.
+"""
+import argparse
+import json
+import time
+import traceback
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from repro.configs.base import INPUT_SHAPES
+from repro.distributed.hlo import collective_bytes, collective_counts
+from repro.distributed.sharding import (SERVE_RULES, TRAIN_RULES, param_specs)
+from repro.launch.mesh import make_production_mesh
+from repro.launch.specs import input_specs
+from repro.launch.steps import (make_fl_train_step, make_prefill_step,
+                                make_serve_step, make_train_step)
+from repro.models import decoder
+from repro.models.factory import abstract_to_shape_dtype
+from repro.models.registry import ARCH_IDS, get_config, skip_reason
+
+
+def _sharding_tree(mesh, spec_tree):
+    return jax.tree.map(lambda s: NamedSharding(mesh, s), spec_tree,
+                        is_leaf=lambda x: isinstance(x, P))
+
+
+def _mem_analysis(compiled):
+    try:
+        ma = compiled.memory_analysis()
+        if ma is None:
+            return {}
+        return {k: int(getattr(ma, k)) for k in
+                ("argument_size_in_bytes", "output_size_in_bytes",
+                 "temp_size_in_bytes", "generated_code_size_in_bytes")
+                if hasattr(ma, k)}
+    except Exception:
+        return {}
+
+
+def _cost(compiled):
+    try:
+        ca = compiled.cost_analysis()
+        if isinstance(ca, list):
+            ca = ca[0]
+        return {k: float(v) for k, v in ca.items()
+                if isinstance(v, (int, float)) and (
+                    "flops" in k or "bytes" in k or k in ("transcendentals",))}
+    except Exception:
+        return {}
+
+
+def lower_one(arch: str, shape_name: str, *, multi_pod: bool,
+              moe_dispatch: str = "einsum", q_chunk: int = 512,
+              fl: bool = False, collect_hlo: bool = True,
+              probe: bool = False, pad_vocab: int = 1,
+              fl_local_steps: int = 1, fl_comm_bf16: bool = False,
+              prefill_cache: bool = False):
+    """Lower + compile one combination; returns the result record."""
+    cfg = get_config(arch)
+    if pad_vocab > 1:
+        cfg = cfg.replace(pad_vocab_to=pad_vocab)
+    shape = INPUT_SHAPES[shape_name]
+    mesh = make_production_mesh(multi_pod=multi_pod)
+    t0 = time.time()
+
+    abstract = decoder.abstract_params(cfg)
+    rules = TRAIN_RULES if shape.kind == "train" else SERVE_RULES
+    pspecs = param_specs(abstract, rules, mesh)
+    pshapes = abstract_to_shape_dtype(abstract)
+    inputs, parts = input_specs(cfg, shape, mesh)
+
+    with mesh:
+        if shape.kind == "train":
+            if fl and multi_pod:
+                n_pods = mesh.devices.shape[0]
+                step_fn, opt_init = make_fl_train_step(
+                    cfg, n_pods=n_pods, q_chunk=q_chunk, moe_dispatch=moe_dispatch,
+                    local_steps=fl_local_steps,
+                    comm_dtype=jnp.bfloat16 if fl_comm_bf16 else None)
+                B, Stok = inputs["tokens"].shape
+                if fl_local_steps > 1:
+                    H = fl_local_steps
+                    pb = {k: jax.ShapeDtypeStruct(
+                        (n_pods, H, B // (n_pods * H)) + v.shape[1:], v.dtype)
+                        for k, v in inputs.items()}
+                    pparts = {k: P(*(("pod", None) + tuple(parts[k]))) for k in inputs}
+                else:
+                    pb = {k: jax.ShapeDtypeStruct((n_pods, B // n_pods) + v.shape[1:],
+                                                  v.dtype) for k, v in inputs.items()}
+                    pparts = {k: P(*(("pod",) + tuple(parts[k]))) for k in inputs}
+                ostate = jax.eval_shape(opt_init, pshapes)
+                ospec = jax.tree.map(lambda _: pspecs, {"m": 0, "v": 0})
+                gshapes = jax.tree.map(
+                    lambda s: jax.ShapeDtypeStruct((n_pods,) + s.shape, jnp.float32),
+                    pshapes)
+                gspecs = jax.tree.map(lambda s: P(*(("pod",) + tuple(s))), pspecs,
+                                      is_leaf=lambda x: isinstance(x, P))
+                jitted = jax.jit(
+                    step_fn,
+                    in_shardings=(_sharding_tree(mesh, pspecs),
+                                  _sharding_tree(mesh, ospec),
+                                  _sharding_tree(mesh, gspecs),
+                                  _sharding_tree(mesh, pparts),
+                                  NamedSharding(mesh, P())),
+                    donate_argnums=(0, 1, 2))
+                lowered = jitted.lower(pshapes, ostate, gshapes, pb,
+                                       jax.ShapeDtypeStruct((), jnp.int32))
+            else:
+                step_fn, opt_init = make_train_step(cfg, q_chunk=q_chunk,
+                                                    moe_dispatch=moe_dispatch)
+                ostate = jax.eval_shape(opt_init, pshapes)
+                ospec = jax.tree.map(lambda _: pspecs, {"m": 0, "v": 0})
+                jitted = jax.jit(
+                    step_fn,
+                    in_shardings=(_sharding_tree(mesh, pspecs),
+                                  _sharding_tree(mesh, ospec),
+                                  _sharding_tree(mesh, parts),
+                                  NamedSharding(mesh, P())),
+                    donate_argnums=(0, 1))
+                lowered = jitted.lower(pshapes, ostate, inputs,
+                                       jax.ShapeDtypeStruct((), jnp.int32))
+        elif shape.kind == "prefill":
+            step_fn = make_prefill_step(cfg, q_chunk=q_chunk,
+                                        moe_dispatch=moe_dispatch,
+                                        fill_cache=prefill_cache,
+                                        cache_len=shape.seq_len)
+            if prefill_cache:
+                from repro.launch.specs import cache_specs as _cs
+                _, cspec = _cs(cfg, shape.global_batch, shape.seq_len, mesh)
+                out_sh = (None, _sharding_tree(mesh, cspec))
+                jitted = jax.jit(step_fn,
+                                 in_shardings=(_sharding_tree(mesh, pspecs),
+                                               _sharding_tree(mesh, parts)),
+                                 out_shardings=out_sh)
+            else:
+                jitted = jax.jit(step_fn,
+                                 in_shardings=(_sharding_tree(mesh, pspecs),
+                                               _sharding_tree(mesh, parts)))
+            lowered = jitted.lower(pshapes, inputs)
+        else:  # decode
+            step_fn = make_serve_step(cfg, moe_dispatch=moe_dispatch)
+            jitted = jax.jit(step_fn,
+                             in_shardings=(_sharding_tree(mesh, pspecs),
+                                           _sharding_tree(mesh, parts["cache"]),
+                                           _sharding_tree(mesh, parts["token"]),
+                                           NamedSharding(mesh, P())),
+                             donate_argnums=(1,))
+            lowered = jitted.lower(pshapes, inputs["cache"], inputs["token"],
+                                   inputs["pos"])
+
+        t_lower = time.time() - t0
+        compiled = lowered.compile()
+        t_compile = time.time() - t0 - t_lower
+
+    rec = {
+        "arch": arch, "shape": shape_name,
+        "mesh": "2x16x16" if multi_pod else "16x16",
+        "kind": shape.kind, "fl": fl,
+        "moe_dispatch": moe_dispatch, "q_chunk": q_chunk,
+        "lower_s": round(t_lower, 1), "compile_s": round(t_compile, 1),
+        "memory": _mem_analysis(compiled),
+        "cost": _cost(compiled),
+    }
+    if collect_hlo:
+        txt = compiled.as_text()
+        rec["collective_bytes"] = collective_bytes(txt)
+        rec["collective_counts"] = collective_counts(txt)
+        rec["hlo_chars"] = len(txt)
+    counts = cfg.param_counts()
+    rec["params_total"] = counts["total"]
+    rec["params_active"] = counts["active"]
+    if probe:
+        # trip-count-honest per-device costs (see launch/probe.py docstring)
+        from repro.launch.probe import probe_all
+        rec["probe"] = probe_all(cfg, shape, mesh, rules,
+                                 moe_dispatch=moe_dispatch)
+    return rec
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="all")
+    ap.add_argument("--shape", default="all")
+    ap.add_argument("--multipod", action="store_true")
+    ap.add_argument("--both", action="store_true", help="single-pod AND multi-pod")
+    ap.add_argument("--fl", action="store_true",
+                    help="lower the VAFL fl_train_step (train shapes, multi-pod)")
+    ap.add_argument("--moe-dispatch", default="einsum", choices=("einsum", "sort"))
+    ap.add_argument("--q-chunk", type=int, default=512)
+    ap.add_argument("--probe", action="store_true",
+                    help="add per-layer-group cost probes (roofline inputs)")
+    ap.add_argument("--pad-vocab", type=int, default=1,
+                    help="pad vocab to a multiple (re-enables vocab sharding)")
+    ap.add_argument("--fl-local-steps", type=int, default=1,
+                    help="r local SGD steps per gated sync (paper's local rounds)")
+    ap.add_argument("--fl-comm-bf16", action="store_true",
+                    help="bf16 cross-pod aggregation payload")
+    ap.add_argument("--prefill-cache", action="store_true",
+                    help="prefill shapes return the filled decode cache "
+                         "(serving prefill) instead of last-token logits")
+    ap.add_argument("--out", default="artifacts/dryrun")
+    args = ap.parse_args()
+
+    archs = ARCH_IDS if args.arch == "all" else [args.arch.replace("-", "_")]
+    shapes = list(INPUT_SHAPES) if args.shape == "all" else [args.shape]
+    meshes = [False, True] if args.both else [args.multipod]
+    os.makedirs(args.out, exist_ok=True)
+
+    failures = 0
+    for arch in archs:
+        for shape in shapes:
+            why = skip_reason(arch, shape)
+            if why:
+                print(f"SKIP  {arch:24s} {shape:12s} — {why}")
+                continue
+            for mp in meshes:
+                tag = f"{arch}__{shape}__{'2x16x16' if mp else '16x16'}" + \
+                      ("__fl" if args.fl else "")
+                try:
+                    rec = lower_one(arch, shape, multi_pod=mp, fl=args.fl,
+                                    moe_dispatch=args.moe_dispatch,
+                                    q_chunk=args.q_chunk, probe=args.probe,
+                                    pad_vocab=args.pad_vocab,
+                                    fl_local_steps=args.fl_local_steps,
+                                    fl_comm_bf16=args.fl_comm_bf16,
+                                    prefill_cache=args.prefill_cache)
+                    with open(os.path.join(args.out, tag + ".json"), "w") as f:
+                        json.dump(rec, f, indent=1)
+                    c = rec["cost"]
+                    print(f"OK    {tag:60s} compile={rec['compile_s']:6.1f}s "
+                          f"flops={c.get('flops', 0):.3e} "
+                          f"coll={rec.get('collective_bytes', {}).get('total', 0):.3e}B")
+                except Exception as e:
+                    failures += 1
+                    print(f"FAIL  {tag}: {type(e).__name__}: {e}")
+                    traceback.print_exc(limit=4)
+    raise SystemExit(1 if failures else 0)
+
+
+if __name__ == "__main__":
+    main()

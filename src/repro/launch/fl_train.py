@@ -1,0 +1,87 @@
+"""Cross-silo VAFL training driver — the paper's technique at pod scale.
+
+Each pod of the multi-pod mesh is a federated silo; per step each silo
+computes its own gradient, its Eq. 1 communication value, and the Eq. 2
+gate decides which silos contribute to the cross-pod aggregation (the
+value-gated collective of DESIGN.md §2).
+
+Runs on CPU with placeholder devices for demonstration:
+
+    PYTHONPATH=src python -m repro.launch.fl_train --arch minicpm_2b \
+        --smoke --steps 10 --pods 2 --batch-per-pod 4 --seq 128
+
+On real hardware the same step lowers against make_production_mesh
+(multi_pod=True) — proven by `dryrun --fl --multipod`.
+"""
+from __future__ import annotations
+
+import argparse
+
+import numpy as np
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", required=True)
+    ap.add_argument("--smoke", action="store_true")
+    ap.add_argument("--steps", type=int, default=10)
+    ap.add_argument("--pods", type=int, default=2)
+    ap.add_argument("--batch-per-pod", type=int, default=4)
+    ap.add_argument("--seq", type=int, default=128)
+    ap.add_argument("--lr", type=float, default=1e-3)
+    ap.add_argument("--algorithm", default="vafl", choices=("vafl", "afl"))
+    ap.add_argument("--devices", type=int, default=8,
+                    help="placeholder host devices (0 = use existing)")
+    args = ap.parse_args()
+
+    if args.devices:
+        import os
+        os.environ.setdefault(
+            "XLA_FLAGS", f"--xla_force_host_platform_device_count={args.devices}")
+    import jax
+    import jax.numpy as jnp
+    from jax.sharding import NamedSharding, PartitionSpec as P
+
+    from repro.data.synthetic import token_stream
+    from repro.launch.mesh import make_host_mesh
+    from repro.launch.steps import make_fl_train_step
+    from repro.models import decoder
+    from repro.models.registry import get_config, get_smoke_config
+
+    cfg = get_smoke_config(args.arch) if args.smoke else get_config(args.arch)
+    mesh = make_host_mesh(pods=args.pods)
+    P_pods = mesh.devices.shape[0]
+    step_fn, opt_init = make_fl_train_step(
+        cfg, n_pods=P_pods, lr=args.lr, q_chunk=None, algorithm=args.algorithm)
+
+    params = decoder.init_params(cfg, jax.random.key(0))
+    opt_state = opt_init(params)
+    prev_grads = jax.tree.map(
+        lambda x: jnp.zeros((P_pods,) + x.shape, jnp.float32), params)
+
+    B, S = args.batch_per_pod, args.seq
+    # per-silo data: different seeds => non-IID silo streams
+    silo_toks = [token_stream(args.steps * B, S, cfg.vocab_size, seed=100 + p)
+                 for p in range(P_pods)]
+
+    jstep = jax.jit(step_fn, donate_argnums=(0, 1, 2))
+    with mesh:
+        for s in range(args.steps):
+            tb = np.stack([silo_toks[p][0][s * B:(s + 1) * B] for p in range(P_pods)])
+            lb = np.stack([silo_toks[p][1][s * B:(s + 1) * B] for p in range(P_pods)])
+            batch = {"tokens": jax.device_put(
+                         jnp.asarray(tb), NamedSharding(mesh, P("pod"))),
+                     "labels": jax.device_put(
+                         jnp.asarray(lb), NamedSharding(mesh, P("pod")))}
+            params, opt_state, prev_grads, info = jstep(
+                params, opt_state, prev_grads, batch, jnp.int32(s))
+            mask = np.asarray(info["mask"])
+            print(f"step {s:3d} loss={float(info['loss']):.4f} "
+                  f"V={np.array2string(np.asarray(info['V']), precision=2)} "
+                  f"silos_synced={int(mask.sum())}/{P_pods}")
+    print("done — uploads gated by Eq.2 on every step; "
+          "comm saved = (1 - synced/pods) of cross-pod all-reduce rounds")
+
+
+if __name__ == "__main__":
+    main()

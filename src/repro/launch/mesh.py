@@ -1,0 +1,43 @@
+"""Production mesh definitions.
+
+Target hardware: TPU v5e pods — 256 chips/pod (16x16 ICI torus),
+197 TFLOP/s bf16, 16 GB HBM @ 819 GB/s, ~50 GB/s/link ICI.
+
+Meshes are built by FUNCTIONS (never at module import) so importing this
+module does not touch jax device state; the dry-run sets
+XLA_FLAGS=--xla_force_host_platform_device_count=512 before any jax
+import to obtain placeholder devices.
+"""
+from __future__ import annotations
+
+import jax
+
+# v5e constants used by the roofline (benchmarks/roofline.py)
+PEAK_FLOPS_BF16 = 197e12        # per chip
+HBM_BW = 819e9                  # bytes/s per chip
+ICI_BW = 50e9                   # bytes/s per link
+
+
+def make_production_mesh(*, multi_pod: bool = False):
+    """Single pod: (16,16) ("data","model").  Multi-pod: (2,16,16)
+    ("pod","data","model") — "pod" is the federated-silo axis for VAFL."""
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    return jax.make_mesh(
+        shape, axes,
+        axis_types=(jax.sharding.AxisType.Auto,) * len(axes))
+
+
+def make_host_mesh(*, pods: int = 2):
+    """Small mesh over whatever devices exist (CPU tests/examples):
+    (pods, 1, n_dev/pods) with the production axis names."""
+    n = jax.device_count()
+    if n % pods:
+        pods = 1
+    return jax.make_mesh(
+        (pods, 1, n // pods), ("pod", "data", "model"),
+        axis_types=(jax.sharding.AxisType.Auto,) * 3)
+
+
+def axis_size(mesh, name: str) -> int:
+    return dict(zip(mesh.axis_names, mesh.devices.shape)).get(name, 1)

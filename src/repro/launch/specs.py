@@ -1,0 +1,111 @@
+"""Input specifications: ShapeDtypeStruct stand-ins + PartitionSpecs for
+every (architecture x input shape) combination — the dry-run's contract.
+
+``input_specs(cfg, shape)`` returns (abstract_inputs, partition_specs) for
+the step function that the shape's kind lowers:
+  train_*    -> train_step(params, opt_state, batch, step)
+  prefill_*  -> prefill_step(params, batch) -> last-token logits
+  decode_*   -> serve_step(params, cache, token, pos)
+
+Modality stubs (assignment carve-out): VLM patch embeddings and audio
+frame embeddings appear here as precomputed (B, P, d) bf16 inputs.
+"""
+from __future__ import annotations
+
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+
+from repro.configs.base import InputShape
+from repro.distributed.sharding import batch_spec, cache_spec
+from repro.models import decoder
+
+
+def _sds(shape, dtype):
+    return jax.ShapeDtypeStruct(tuple(int(s) for s in shape), jnp.dtype(dtype))
+
+
+def _tok_batch(cfg, shape: InputShape, mesh, with_labels: bool):
+    """Token batch (+ stub modality inputs) for train/prefill."""
+    B, S = shape.global_batch, shape.seq_len
+    specs, parts = {}, {}
+    P_tok = S
+    if cfg.frontend is not None and cfg.frontend.num_prefix_tokens:
+        P_tok = S - cfg.frontend.num_prefix_tokens
+        specs["prefix_embeds"] = _sds((B, cfg.frontend.num_prefix_tokens,
+                                       cfg.d_model), jnp.bfloat16)
+        parts["prefix_embeds"] = batch_spec(specs["prefix_embeds"].shape, mesh)
+    specs["tokens"] = _sds((B, P_tok), jnp.int32)
+    parts["tokens"] = batch_spec(specs["tokens"].shape, mesh)
+    if with_labels:
+        specs["labels"] = _sds((B, P_tok), jnp.int32)
+        parts["labels"] = parts["tokens"]
+    if cfg.encoder is not None:
+        specs["encoder_embeds"] = _sds((B, cfg.encoder.num_frames, cfg.d_model),
+                                       jnp.bfloat16)
+        parts["encoder_embeds"] = batch_spec(specs["encoder_embeds"].shape, mesh)
+    return specs, parts
+
+
+def cache_specs(cfg, batch: int, cache_len: int, mesh) -> Tuple[dict, dict]:
+    """Abstract KV/state cache + PartitionSpec tree (flash-decoding layout:
+    batch -> data, cache length -> model; SSM/conv states batch-sharded)."""
+    def build():
+        enc = None
+        if cfg.encoder is not None:
+            enc = jnp.zeros((batch, cfg.encoder.num_frames, cfg.d_model),
+                            jnp.bfloat16)
+        # params only matter for whisper cross-KV shapes: use abstract eval
+        params = decoder.abstract_params(cfg)
+        from repro.models.factory import abstract_to_shape_dtype
+        pshapes = abstract_to_shape_dtype(params)
+        return jax.eval_shape(
+            lambda p, e: decoder.init_cache(cfg, p, batch, cache_len,
+                                            encoder_embeds=e),
+            pshapes, enc)
+
+    cache = build()
+
+    def spec_of(leaf):
+        # leaves: (layers, B, C, ...) attn caches | (layers, B, ...) states
+        # cache length (full OR sliding-window) shards over "model" —
+        # flash-decoding layout; un-sharded window caches cost a full cache
+        # all-gather per decode layer (§Perf iteration 7)
+        shape = leaf.shape
+        parts = [None] * len(shape)
+        if len(shape) >= 2:
+            from repro.distributed.sharding import _axis_size
+            if "data" in mesh.axis_names and shape[1] % _axis_size(mesh, "data") == 0:
+                parts[1] = "data"
+            if (len(shape) >= 4 and "model" in mesh.axis_names
+                    and shape[2] % _axis_size(mesh, "model") == 0):
+                parts[2] = "model"
+        return P(*parts)
+
+    return cache, jax.tree.map(spec_of, cache)
+
+
+def input_specs(cfg, shape: InputShape, mesh):
+    """Returns (inputs: dict of ShapeDtypeStruct, partition_specs: dict)."""
+    if shape.kind == "train":
+        return _tok_batch(cfg, shape, mesh, with_labels=True)
+    if shape.kind == "prefill":
+        return _tok_batch(cfg, shape, mesh, with_labels=False)
+    if shape.kind == "decode":
+        B = shape.global_batch
+        cache_len = shape.seq_len
+        if cfg.serve_window:
+            cache_len_alloc = min(cfg.serve_window, cache_len)
+        else:
+            cache_len_alloc = cache_len
+        cache, cspec = cache_specs(cfg, B, cache_len, mesh)
+        specs = {"cache": cache,
+                 "token": _sds((B, 1), jnp.int32),
+                 "pos": _sds((), jnp.int32)}
+        parts = {"cache": cspec,
+                 "token": batch_spec((B, 1), mesh),
+                 "pos": P()}
+        return specs, parts
+    raise ValueError(shape.kind)

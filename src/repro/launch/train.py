@@ -1,0 +1,81 @@
+"""Training driver.
+
+CPU-executable at smoke scale and the launch entry point for real TPU
+meshes (same code path the dry-run lowers):
+
+    PYTHONPATH=src python -m repro.launch.train --arch minicpm_2b --smoke \
+        --steps 20 --batch 8 --seq 128
+
+At production scale run under your TPU launcher (one process per host);
+``--mesh prod`` builds the (16,16) pod mesh and shards params/batch with
+the TRAIN_RULES FSDPxTP layout.
+"""
+from __future__ import annotations
+
+import argparse
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.checkpoint import save
+from repro.data.synthetic import token_stream
+from repro.launch.steps import make_train_step
+from repro.models import decoder
+from repro.models.registry import get_config, get_smoke_config
+
+
+def run(arch: str, *, smoke: bool, steps: int, batch: int, seq: int,
+        lr: float, ckpt_dir=None, log_every: int = 5, moe_dispatch="einsum"):
+    cfg = get_smoke_config(arch) if smoke else get_config(arch)
+    q_chunk = None if seq <= 512 else 512
+    step_fn, opt_init = make_train_step(cfg, lr=lr, q_chunk=q_chunk,
+                                        moe_dispatch=moe_dispatch)
+    params = decoder.init_params(cfg, jax.random.key(0))
+    opt_state = opt_init(params)
+    jstep = jax.jit(step_fn, donate_argnums=(0, 1))
+
+    toks, labs = token_stream(max(steps * batch, batch), seq, cfg.vocab_size, seed=1)
+    losses = []
+    t0 = time.time()
+    for s in range(steps):
+        lo = (s * batch) % (len(toks) - batch + 1)
+        b = {"tokens": jnp.asarray(toks[lo:lo + batch]),
+             "labels": jnp.asarray(labs[lo:lo + batch])}
+        if cfg.frontend is not None and cfg.frontend.num_prefix_tokens:
+            b["prefix_embeds"] = jnp.zeros(
+                (batch, cfg.frontend.num_prefix_tokens, cfg.d_model), jnp.bfloat16)
+            b["labels"] = b["labels"]
+        if cfg.encoder is not None:
+            b["encoder_embeds"] = 0.02 * jax.random.normal(
+                jax.random.key(s), (batch, cfg.encoder.num_frames, cfg.d_model),
+                jnp.bfloat16)
+        params, opt_state, info = jstep(params, opt_state, b, jnp.int32(s))
+        losses.append(float(info["loss"]))
+        if (s + 1) % log_every == 0:
+            print(f"step {s+1:4d} loss={losses[-1]:.4f} "
+                  f"({(time.time()-t0)/(s+1):.2f}s/step)")
+    if ckpt_dir:
+        save(ckpt_dir, steps, params, {"arch": cfg.name, "loss": losses[-1]})
+    return losses
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", required=True)
+    ap.add_argument("--smoke", action="store_true")
+    ap.add_argument("--steps", type=int, default=20)
+    ap.add_argument("--batch", type=int, default=8)
+    ap.add_argument("--seq", type=int, default=128)
+    ap.add_argument("--lr", type=float, default=3e-4)
+    ap.add_argument("--ckpt-dir", default=None)
+    ap.add_argument("--moe-dispatch", default="einsum", choices=("einsum", "sort"))
+    a = ap.parse_args()
+    losses = run(a.arch, smoke=a.smoke, steps=a.steps, batch=a.batch, seq=a.seq,
+                 lr=a.lr, ckpt_dir=a.ckpt_dir, moe_dispatch=a.moe_dispatch)
+    print(f"final loss {losses[-1]:.4f} (start {losses[0]:.4f})")
+
+
+if __name__ == "__main__":
+    main()

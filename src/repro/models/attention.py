@@ -1,0 +1,322 @@
+"""Attention layers: GQA (full / sliding-window / chunked-memory-efficient)
+and MLA (multi-head latent attention, MiniCPM3/DeepSeek-V2 style), with
+decode paths against a KV cache.
+
+Shapes: x (B, S, D); q (B, S, H, hd); k/v (B, S, KV, hd).
+KV caches: GQA -> {"k": (B, C, KV, hd), "v": ..., "pos": ()} where C is the
+cache length (seq_len, or the sliding window for long-context serving).
+MLA -> compressed cache {"ckv": (B, C, kv_lora), "krope": (B, C, rope_dim)}.
+"""
+from __future__ import annotations
+
+from functools import partial
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.factory import ParamFactory
+from repro.models.layers import apply_rope, rms_normalize
+
+NEG_INF = -1e30
+
+
+# ================================================================== GQA ===
+
+def init_attention(fac: ParamFactory, cfg):
+    d, H, KV, hd = cfg.d_model, cfg.num_heads, cfg.num_kv_heads, cfg.head_dim
+    p = {
+        "wq": fac.param((d, H * hd), ("embed", "heads")),
+        "wk": fac.param((d, KV * hd), ("embed", "heads")),
+        "wv": fac.param((d, KV * hd), ("embed", "heads")),
+        "wo": fac.param((H * hd, d), ("heads", "embed")),
+    }
+    if cfg.use_bias:
+        p["bq"] = fac.param((H * hd,), ("heads",), init="zeros")
+        p["bk"] = fac.param((KV * hd,), ("heads",), init="zeros")
+        p["bv"] = fac.param((KV * hd,), ("heads",), init="zeros")
+        p["bo"] = fac.param((d,), ("embed",), init="zeros")
+    if cfg.qk_norm:
+        p["q_norm"] = fac.param((hd,), (None,), init="ones")
+        p["k_norm"] = fac.param((hd,), (None,), init="ones")
+    return p
+
+
+def _project_qkv(p, cfg, x):
+    B, S, _ = x.shape
+    H, KV, hd = cfg.num_heads, cfg.num_kv_heads, cfg.head_dim
+    q = x @ p["wq"]
+    k = x @ p["wk"]
+    v = x @ p["wv"]
+    if "bq" in p:
+        q, k, v = q + p["bq"], k + p["bk"], v + p["bv"]
+    q = q.reshape(B, S, H, hd)
+    k = k.reshape(B, S, KV, hd)
+    v = v.reshape(B, S, KV, hd)
+    if cfg.qk_norm:
+        q = rms_normalize(q) * p["q_norm"]
+        k = rms_normalize(k) * p["k_norm"]
+    return q, k, v
+
+
+def _out_proj(p, attn_out):
+    B, S = attn_out.shape[:2]
+    y = attn_out.reshape(B, S, -1) @ p["wo"]
+    if "bo" in p:
+        y = y + p["bo"]
+    return y
+
+
+def _causal_scores_mask(q_pos, k_pos, window: Optional[int]):
+    """(..., Sq, Sk) boolean mask: True = attend."""
+    m = q_pos[..., :, None] >= k_pos[..., None, :]
+    if window is not None:
+        m &= (q_pos[..., :, None] - k_pos[..., None, :]) < window
+    return m
+
+
+def _sdpa(q, k, v, mask, scale):
+    """q (B,Sq,H,hd), k/v (B,Sk,KV,hd) grouped-query attention, fp32 softmax."""
+    B, Sq, H, hd = q.shape
+    KV = k.shape[2]
+    G = H // KV
+    qg = q.reshape(B, Sq, KV, G, hd)
+    scores = jnp.einsum("bqkgd,bskd->bkgqs", qg, k).astype(jnp.float32) * scale
+    scores = jnp.where(mask[:, None, None], scores, NEG_INF)
+    probs = jax.nn.softmax(scores, axis=-1).astype(v.dtype)
+    out = jnp.einsum("bkgqs,bskd->bqkgd", probs, v)
+    return out.reshape(B, Sq, H, hd)
+
+
+def attention_forward(p, cfg, x, positions, *, window: Optional[int] = None,
+                      q_chunk: Optional[int] = None, kv_override=None,
+                      return_kv: bool = False):
+    """Training/prefill causal self-attention.
+
+    q_chunk: if set and S > q_chunk, use the memory-efficient chunked path
+    (lax.scan over query blocks, rematerialised) so the S x S score matrix
+    is never fully materialised.
+    kv_override: (k, v) pair for cross-attention (positions then index q only).
+    return_kv: also return the post-rope (k, v) — used by the batched
+    prefill path to fill the decode cache in one pass.
+    """
+    B, S, _ = x.shape
+    q, k, v = _project_qkv(p, cfg, x)
+    scale = 1.0 / (cfg.head_dim ** 0.5)
+    cross = kv_override is not None
+    if cross:
+        k, v = kv_override
+        q = q  # no rope on cross-attention
+    else:
+        q = apply_rope(q, positions, cfg.rope_theta)
+        k = apply_rope(k, positions, cfg.rope_theta)
+
+    def out(y):
+        return (y, (k, v)) if return_kv else y
+
+    Sk = k.shape[1]
+    if q_chunk is None or S <= q_chunk:
+        if cross:
+            mask = jnp.ones((B, S, Sk), dtype=bool)
+        else:
+            mask = _causal_scores_mask(positions[None] if positions.ndim == 1 else positions,
+                                       positions[None] if positions.ndim == 1 else positions,
+                                       window)
+            if mask.shape[0] == 1:
+                mask = jnp.broadcast_to(mask, (B, S, Sk))
+        o = _sdpa(q, k, v, mask, scale)
+        return out(_out_proj(p, o))
+
+    # ---- chunked path: scan over query blocks --------------------------
+    assert not cross, "chunked path is for causal self-attention"
+    assert S % q_chunk == 0, (S, q_chunk)
+    nq = S // q_chunk
+    pos = positions if positions.ndim == 1 else positions[0]
+    qb = q.reshape(B, nq, q_chunk, *q.shape[2:]).transpose(1, 0, 2, 3, 4)
+    posb = pos.reshape(nq, q_chunk)
+
+    @jax.checkpoint
+    def body(carry, inp):
+        qc, pc = inp  # (B, q_chunk, H, hd), (q_chunk,)
+        mask = _causal_scores_mask(pc, pos, window)  # (q_chunk, Sk)
+        mask = jnp.broadcast_to(mask[None], (B, q_chunk, Sk))
+        oc = _sdpa(qc, k, v, mask, scale)
+        return carry, oc
+
+    _, ob = jax.lax.scan(body, (), (qb, posb))
+    o = ob.transpose(1, 0, 2, 3, 4).reshape(B, S, q.shape[2], q.shape[3])
+    return out(_out_proj(p, o))
+
+
+def init_attn_cache(cfg, batch: int, cache_len: int, dtype=jnp.bfloat16):
+    KV, hd = cfg.num_kv_heads, cfg.head_dim
+    return {
+        "k": jnp.zeros((batch, cache_len, KV, hd), dtype),
+        "v": jnp.zeros((batch, cache_len, KV, hd), dtype),
+    }
+
+
+def attention_decode(p, cfg, x, cache, pos, *, window: Optional[int] = None):
+    """Single-token decode. x (B, 1, D); pos scalar int32 (current index).
+
+    The cache holds `cache_len` slots; with a sliding window the slot is
+    pos % cache_len (rotating buffer), and positions for RoPE/masking are
+    reconstructed from pos.  Returns (y, new_cache).
+    """
+    B = x.shape[0]
+    q, k, v = _project_qkv(p, cfg, x)
+    q = apply_rope(q, jnp.full((1,), pos, jnp.int32), cfg.rope_theta)
+    k = apply_rope(k, jnp.full((1,), pos, jnp.int32), cfg.rope_theta)
+
+    C = cache["k"].shape[1]
+    slot = pos % C if window is not None else pos
+    ck = jax.lax.dynamic_update_slice(cache["k"], k.astype(cache["k"].dtype), (0, slot, 0, 0))
+    cv = jax.lax.dynamic_update_slice(cache["v"], v.astype(cache["v"].dtype), (0, slot, 0, 0))
+
+    # effective absolute position of each cache slot
+    idx = jnp.arange(C, dtype=jnp.int32)
+    if window is not None:
+        # rotating buffer: slot i holds the largest t <= pos with t % C == i
+        turn = (pos // C) * C + idx
+        k_pos = jnp.where(turn > pos, turn - C, turn)
+        valid = (k_pos >= 0) & (k_pos >= pos - (window - 1)) & (k_pos <= pos)
+    else:
+        k_pos = idx
+        valid = idx <= pos
+
+    scale = 1.0 / (cfg.head_dim ** 0.5)
+    H, KV, hd = cfg.num_heads, cfg.num_kv_heads, cfg.head_dim
+    G = H // KV
+    qg = q.reshape(B, KV, G, hd)
+    scores = jnp.einsum("bkgd,bskd->bkgs", qg, ck.astype(q.dtype)).astype(jnp.float32) * scale
+    scores = jnp.where(valid[None, None, None, :], scores, NEG_INF)
+    probs = jax.nn.softmax(scores, axis=-1).astype(cv.dtype)
+    out = jnp.einsum("bkgs,bskd->bkgd", probs, cv)
+    y = _out_proj(p, out.reshape(B, 1, H * hd)[:, :, :].reshape(B, 1, H, hd))
+    return y, {"k": ck, "v": cv}
+
+
+# ================================================================== MLA ===
+
+def init_mla(fac: ParamFactory, cfg):
+    d, H = cfg.d_model, cfg.num_heads
+    m = cfg.mla
+    qk_head = m.qk_nope_head_dim + m.qk_rope_head_dim
+    return {
+        "wq_a": fac.param((d, m.q_lora_rank), ("embed", "qlora")),
+        "q_norm": fac.param((m.q_lora_rank,), (None,), init="ones"),
+        "wq_b": fac.param((m.q_lora_rank, H * qk_head), ("qlora", "heads")),
+        "wkv_a": fac.param((d, m.kv_lora_rank + m.qk_rope_head_dim), ("embed", None)),
+        "kv_norm": fac.param((m.kv_lora_rank,), (None,), init="ones"),
+        "wkv_b": fac.param((m.kv_lora_rank, H * (m.qk_nope_head_dim + m.v_head_dim)),
+                           ("kvlora", "heads")),
+        "wo": fac.param((H * m.v_head_dim, d), ("heads", "embed")),
+    }
+
+
+def _mla_q(p, cfg, x):
+    B, S, _ = x.shape
+    m, H = cfg.mla, cfg.num_heads
+    qk_head = m.qk_nope_head_dim + m.qk_rope_head_dim
+    ql = rms_normalize(x @ p["wq_a"]) * p["q_norm"]
+    q = (ql @ p["wq_b"]).reshape(B, S, H, qk_head)
+    return jnp.split(q, [m.qk_nope_head_dim], axis=-1)  # q_nope, q_rope
+
+
+def _mla_ckv(p, cfg, x):
+    m = cfg.mla
+    kv = x @ p["wkv_a"]
+    ckv, krope = jnp.split(kv, [m.kv_lora_rank], axis=-1)
+    ckv = rms_normalize(ckv) * p["kv_norm"]
+    return ckv, krope
+
+
+def mla_forward(p, cfg, x, positions, *, q_chunk: Optional[int] = None,
+                return_ckv: bool = False):
+    """Training/prefill MLA (expanded form).  return_ckv also returns the
+    compressed (ckv, roped krope) pair for decode-cache prefill."""
+    B, S, _ = x.shape
+    m, H = cfg.mla, cfg.num_heads
+    q_nope, q_rope = _mla_q(p, cfg, x)
+    ckv, krope = _mla_ckv(p, cfg, x)
+    kvb = (ckv @ p["wkv_b"]).reshape(B, S, H, m.qk_nope_head_dim + m.v_head_dim)
+    k_nope, v = jnp.split(kvb, [m.qk_nope_head_dim], axis=-1)
+
+    q_rope = apply_rope(q_rope, positions, cfg.rope_theta)
+    krope = apply_rope(krope[:, :, None, :], positions, cfg.rope_theta)  # (B,S,1,rope)
+    cache_kv = (ckv, krope[:, :, 0, :])  # compressed decode-cache contents
+
+    q = jnp.concatenate([q_nope, q_rope], axis=-1)
+    k = jnp.concatenate([k_nope, jnp.broadcast_to(krope, (*k_nope.shape[:3], m.qk_rope_head_dim))],
+                        axis=-1)
+    scale = 1.0 / ((m.qk_nope_head_dim + m.qk_rope_head_dim) ** 0.5)
+
+    pos = positions if positions.ndim == 1 else positions[0]
+    if q_chunk is None or S <= q_chunk:
+        mask = _causal_scores_mask(pos, pos, None)[None]
+        scores = jnp.einsum("bqhd,bshd->bhqs", q, k).astype(jnp.float32) * scale
+        scores = jnp.where(mask[:, None], scores, NEG_INF)
+        probs = jax.nn.softmax(scores, axis=-1).astype(v.dtype)
+        out = jnp.einsum("bhqs,bshd->bqhd", probs, v)
+    else:
+        nq = S // q_chunk
+        qb = q.reshape(B, nq, q_chunk, H, -1).transpose(1, 0, 2, 3, 4)
+        posb = pos.reshape(nq, q_chunk)
+
+        @jax.checkpoint
+        def body(carry, inp):
+            qc, pc = inp
+            mask = _causal_scores_mask(pc, pos, None)[None, None]
+            sc = jnp.einsum("bqhd,bshd->bhqs", qc, k).astype(jnp.float32) * scale
+            sc = jnp.where(mask, sc, NEG_INF)
+            pr = jax.nn.softmax(sc, axis=-1).astype(v.dtype)
+            return carry, jnp.einsum("bhqs,bshd->bqhd", pr, v)
+
+        _, ob = jax.lax.scan(body, (), (qb, posb))
+        out = ob.transpose(1, 0, 2, 3, 4).reshape(B, S, H, m.v_head_dim)
+
+    y = out.reshape(B, S, -1) @ p["wo"]
+    return (y, cache_kv) if return_ckv else y
+
+
+def init_mla_cache(cfg, batch: int, cache_len: int, dtype=jnp.bfloat16):
+    m = cfg.mla
+    return {
+        "ckv": jnp.zeros((batch, cache_len, m.kv_lora_rank), dtype),
+        "krope": jnp.zeros((batch, cache_len, m.qk_rope_head_dim), dtype),
+    }
+
+
+def mla_decode(p, cfg, x, cache, pos):
+    """Single-token MLA decode using the *absorbed* formulation: attention is
+    computed directly in the compressed kv_lora space, so the cache stays
+    (C, kv_lora + rope) per token — MLA's memory advantage."""
+    B = x.shape[0]
+    m, H = cfg.mla, cfg.num_heads
+    q_nope, q_rope = _mla_q(p, cfg, x)            # (B,1,H,nope),(B,1,H,rope)
+    ckv_new, krope_new = _mla_ckv(p, cfg, x)      # (B,1,kvl),(B,1,rope)
+    pos_arr = jnp.full((1,), pos, jnp.int32)
+    q_rope = apply_rope(q_rope, pos_arr, cfg.rope_theta)
+    krope_new = apply_rope(krope_new[:, :, None, :], pos_arr, cfg.rope_theta)[:, :, 0, :]
+
+    ckv = jax.lax.dynamic_update_slice(cache["ckv"], ckv_new.astype(cache["ckv"].dtype), (0, pos, 0))
+    krp = jax.lax.dynamic_update_slice(cache["krope"], krope_new.astype(cache["krope"].dtype), (0, pos, 0))
+
+    # absorb W_kv_b: split into K-part (kvl, H, nope) and V-part (kvl, H, vdim)
+    wkvb = p["wkv_b"].reshape(m.kv_lora_rank, H, m.qk_nope_head_dim + m.v_head_dim)
+    wk, wv = jnp.split(wkvb, [m.qk_nope_head_dim], axis=-1)
+    # q_nope -> compressed space: (B,1,H,kvl)
+    qc = jnp.einsum("bqhn,chn->bqhc", q_nope, wk)
+    C = ckv.shape[1]
+    idx = jnp.arange(C, dtype=jnp.int32)
+    valid = idx <= pos
+    scale = 1.0 / ((m.qk_nope_head_dim + m.qk_rope_head_dim) ** 0.5)
+    scores = (jnp.einsum("bqhc,bsc->bhqs", qc, ckv.astype(qc.dtype))
+              + jnp.einsum("bqhr,bsr->bhqs", q_rope, krp.astype(q_rope.dtype)))
+    scores = scores.astype(jnp.float32) * scale
+    scores = jnp.where(valid[None, None, None, :], scores, NEG_INF)
+    probs = jax.nn.softmax(scores, axis=-1).astype(ckv.dtype)
+    out_c = jnp.einsum("bhqs,bsc->bqhc", probs, ckv)          # (B,1,H,kvl)
+    out = jnp.einsum("bqhc,chv->bqhv", out_c.astype(wv.dtype), wv)  # (B,1,H,vdim)
+    y = out.reshape(B, 1, -1) @ p["wo"]
+    return y, {"ckv": ckv, "krope": krp}

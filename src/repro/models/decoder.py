@@ -1,0 +1,553 @@
+"""Composable decoder stack covering all architecture families in the zoo:
+
+  dense GQA (llama/mistral/starcoder2/command-r style), MLA (MiniCPM3),
+  MoE (granite/qwen3-moe), Mamba2 hybrid with shared attention (Zamba2),
+  RWKV6, enc-dec (Whisper), and stub-frontend VLM/audio wrappers.
+
+Layers are grouped into maximal runs of identical block type and executed
+with ``lax.scan`` over stacked parameters — one traced body per run keeps
+HLO size (and GSPMD compile time) independent of depth.
+
+Public API (all pure functions of (cfg, params, ...)):
+  init_params / abstract_params
+  forward(cfg, params, tokens, ...)        -> logits, aux
+  loss_fn(cfg, params, batch)              -> loss, metrics
+  init_cache(cfg, params, batch, cache_len, [encoder_embeds])
+  decode_step(cfg, params, cache, token, pos) -> logits, cache
+"""
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import attention as attn
+from repro.models import moe as moe_lib
+from repro.models import recurrence as rec
+from repro.models.factory import AbstractParam, ParamFactory, is_abstract_leaf
+from repro.models.layers import (apply_mlp, apply_norm, embed_tokens,
+                                 init_embedding, init_mlp, init_norm,
+                                 init_unembed, unembed)
+
+
+# ------------------------------------------------------------- grouping ---
+
+def layer_tags(cfg):
+    return tuple((kind, cfg.is_moe_layer(i)) for i, kind in enumerate(cfg.pattern()))
+
+
+def layer_groups(cfg):
+    """Run-length encoding of layer tags -> ((tag, count), ...)."""
+    tags = layer_tags(cfg)
+    groups = []
+    for t in tags:
+        if groups and groups[-1][0] == t:
+            groups[-1][1] += 1
+        else:
+            groups.append([t, 1])
+    return tuple((t, c) for t, c in groups)
+
+
+# ----------------------------------------------------------------- init ---
+
+def _init_layer(fac, cfg, tag, cross: bool):
+    kind, is_moe = tag
+    p = {"norm1": init_norm(fac, cfg.d_model, cfg.norm, cfg.use_bias)}
+    if kind == "attn":
+        p["attn"] = attn.init_mla(fac, cfg) if cfg.attention == "mla" else attn.init_attention(fac, cfg)
+    elif kind == "shared_attn":
+        pass  # weights live at top level
+    elif kind == "mamba2":
+        p["mamba"] = rec.init_mamba2(fac, cfg)
+        return p
+    elif kind == "rwkv6":
+        p["tm"] = rec.init_rwkv6(fac, cfg)
+        p["norm2"] = init_norm(fac, cfg.d_model, cfg.norm, cfg.use_bias)
+        return p
+    else:
+        raise ValueError(kind)
+    if cross:
+        p["cross_norm"] = init_norm(fac, cfg.d_model, cfg.norm, cfg.use_bias)
+        p["cross_attn"] = attn.init_attention(fac, cfg)
+    if not cfg.parallel_block:
+        p["norm2"] = init_norm(fac, cfg.d_model, cfg.norm, cfg.use_bias)
+    if is_moe:
+        p["moe"] = moe_lib.init_moe(fac, cfg)
+    else:
+        p["mlp"] = init_mlp(fac, cfg.d_model, cfg.d_ff, cfg.activation, cfg.use_bias)
+    return p
+
+
+def _stack_layers(fac, cfg, tag, count, cross):
+    if fac.abstract:
+        one = _init_layer(fac, cfg, tag, cross)
+        return jax.tree.map(
+            lambda a: AbstractParam((count,) + a.shape, (None,) + a.axes, a.dtype),
+            one, is_leaf=is_abstract_leaf)
+    layers = [_init_layer(fac, cfg, tag, cross) for _ in range(count)]
+    return jax.tree.map(lambda *xs: jnp.stack(xs), *layers)
+
+
+def _build_params(fac, cfg):
+    cross = cfg.encoder is not None
+    params = {
+        "embed": init_embedding(fac, cfg.padded_vocab(), cfg.d_model),
+        "groups": [_stack_layers(fac, cfg, tag, count, cross)
+                   for tag, count in layer_groups(cfg)],
+        "final_norm": init_norm(fac, cfg.d_model, cfg.norm, cfg.use_bias),
+    }
+    if not cfg.tie_embeddings:
+        params["unembed"] = init_unembed(fac, cfg.d_model, cfg.padded_vocab())
+    if any(k == "shared_attn" for k in cfg.pattern()):
+        params["shared_attn"] = attn.init_attention(fac, cfg)
+    if cfg.encoder is not None:
+        enc_tag = ("attn", False)
+        params["encoder"] = {
+            "groups": [_stack_layers(fac, cfg, enc_tag, cfg.encoder.num_layers, False)],
+            "final_norm": init_norm(fac, cfg.d_model, cfg.norm, cfg.use_bias),
+        }
+    return params
+
+
+def init_params(cfg, key):
+    dtype = jnp.dtype(cfg.param_dtype)
+    return _build_params(ParamFactory(key=key, dtype=dtype), cfg)
+
+
+def abstract_params(cfg):
+    dtype = jnp.dtype(cfg.param_dtype)
+    return _build_params(ParamFactory(abstract=True, dtype=dtype), cfg)
+
+
+# -------------------------------------------------------------- forward ---
+
+def _cast_params(cfg, params):
+    """Cast float params to the compute dtype (master copies stay fp32 in the
+    optimizer; this is the standard bf16-compute cast, fused away by XLA).
+    fp32-sensitive code paths (norms, softmax, recurrence states) upcast
+    internally."""
+    ct = jnp.dtype(cfg.compute_dtype)
+    return jax.tree.map(
+        lambda x: x.astype(ct) if jnp.issubdtype(x.dtype, jnp.floating) else x, params)
+
+
+def _mask_padded_vocab(cfg, logits):
+    """Padded vocab columns (sharding-only rows) must never win softmax/argmax."""
+    Vp, V = cfg.padded_vocab(), cfg.vocab_size
+    if Vp == V:
+        return logits
+    col = jax.lax.broadcasted_iota(jnp.int32, logits.shape, logits.ndim - 1)
+    return jnp.where(col < V, logits, jnp.asarray(-1e30, logits.dtype))
+
+def _residual_scale(cfg):
+    if cfg.scale_depth is None:
+        return 1.0
+    return cfg.scale_depth / (cfg.num_layers ** 0.5)
+
+
+def _apply_layer(cfg, lp, shared, x, positions, tag, *, enc_out=None,
+                 q_chunk=None, moe_dispatch="einsum", window=None):
+    """One layer forward (training/prefill). Returns (x, aux_loss)."""
+    kind, is_moe = tag
+    rs = _residual_scale(cfg)
+    aux = jnp.float32(0.0)
+    if kind == "mamba2":
+        h = apply_norm(lp["norm1"], x, cfg.norm, cfg.norm_eps)
+        y, _ = rec.mamba2_forward(lp["mamba"], cfg, h)
+        return x + y * rs, aux
+    if kind == "rwkv6":
+        h = apply_norm(lp["norm1"], x, cfg.norm, cfg.norm_eps)
+        y, _ = rec.rwkv6_time_mix(lp["tm"], cfg, h)
+        x = x + y * rs
+        h = apply_norm(lp["norm2"], x, cfg.norm, cfg.norm_eps)
+        y, _ = rec.rwkv6_channel_mix(lp["tm"], h)
+        return x + y * rs, aux
+
+    h = apply_norm(lp["norm1"], x, cfg.norm, cfg.norm_eps)
+    ap = shared if kind == "shared_attn" else lp["attn"]
+    if cfg.attention == "mla" and kind == "attn":
+        a = attn.mla_forward(ap, cfg, h, positions, q_chunk=q_chunk)
+    else:
+        a = attn.attention_forward(ap, cfg, h, positions, window=window, q_chunk=q_chunk)
+    if cfg.parallel_block:
+        m = apply_mlp(lp["mlp"], h, cfg.activation)
+        return x + (a + m) * rs, aux
+    x = x + a * rs
+    if enc_out is not None:
+        h = apply_norm(lp["cross_norm"], x, cfg.norm, cfg.norm_eps)
+        kc, vc = _cross_kv(lp["cross_attn"], cfg, enc_out)
+        c = attn.attention_forward(lp["cross_attn"], cfg, h, positions, kv_override=(kc, vc))
+        x = x + c * rs
+    h = apply_norm(lp["norm2"], x, cfg.norm, cfg.norm_eps)
+    if is_moe:
+        y, aux = moe_lib.moe_forward(lp["moe"], cfg, h, dispatch=moe_dispatch)
+    else:
+        y = apply_mlp(lp["mlp"], h, cfg.activation)
+    return x + y * rs, aux
+
+
+def _cross_kv(ap, cfg, enc_out):
+    B, S, _ = enc_out.shape
+    KV, hd = cfg.num_kv_heads, cfg.head_dim
+    k = (enc_out @ ap["wk"]).reshape(B, S, KV, hd)
+    v = (enc_out @ ap["wv"]).reshape(B, S, KV, hd)
+    if "bk" in ap:
+        k = k + ap["bk"].reshape(KV, hd)
+        v = v + ap["bv"].reshape(KV, hd)
+    return k, v
+
+
+def _scan_group(cfg, gp, tag, x, positions, shared, *, enc_out, q_chunk,
+                moe_dispatch, window, remat):
+    def body(carry, lp):
+        h, aux = carry
+        h2, a = _apply_layer(cfg, lp, shared, h, positions, tag, enc_out=enc_out,
+                             q_chunk=q_chunk, moe_dispatch=moe_dispatch, window=window)
+        return (h2, aux + a), None
+
+    if remat:
+        body = jax.checkpoint(body)
+    (x, aux), _ = jax.lax.scan(body, (x, jnp.float32(0.0)), gp)
+    return x, aux
+
+
+def forward(cfg, params, tokens, *, prefix_embeds=None, encoder_embeds=None,
+            q_chunk: Optional[int] = None, moe_dispatch: str = "einsum",
+            remat: bool = True):
+    """tokens (B, S_tok). prefix_embeds (B, P, d) are prepended (VLM stub).
+    encoder_embeds (B, F, d) feed the encoder tower (audio stub).
+    Returns (logits (B, S_total, V), aux_losses)."""
+    params = _cast_params(cfg, params)
+    x = embed_tokens(params["embed"], tokens) * cfg.scale_emb
+    if prefix_embeds is not None:
+        x = jnp.concatenate([prefix_embeds.astype(x.dtype), x], axis=1)
+    x = x.astype(jnp.dtype(cfg.compute_dtype))
+    B, S, _ = x.shape
+    positions = jnp.arange(S, dtype=jnp.int32)
+
+    enc_out = None
+    if cfg.encoder is not None:
+        assert encoder_embeds is not None
+        e = encoder_embeds.astype(x.dtype)
+        e_pos = jnp.arange(e.shape[1], dtype=jnp.int32)
+        for gp in params["encoder"]["groups"]:
+            def ebody(carry, lp):
+                h = apply_norm(lp["norm1"], carry, cfg.norm, cfg.norm_eps)
+                a = _enc_self_attn(lp["attn"], cfg, h, e_pos)
+                h2 = carry + a
+                hh = apply_norm(lp["norm2"], h2, cfg.norm, cfg.norm_eps)
+                return h2 + apply_mlp(lp["mlp"], hh, cfg.activation), None
+            if remat:
+                ebody = jax.checkpoint(ebody)
+            e, _ = jax.lax.scan(ebody, e, gp)
+        enc_out = apply_norm(params["encoder"]["final_norm"], e, cfg.norm, cfg.norm_eps)
+
+    aux_total = jnp.float32(0.0)
+    shared = params.get("shared_attn")
+    for gp, (tag, count) in zip(params["groups"], layer_groups(cfg)):
+        x, aux = _scan_group(cfg, gp, tag, x, positions, shared, enc_out=enc_out,
+                             q_chunk=q_chunk, moe_dispatch=moe_dispatch,
+                             window=cfg.sliding_window, remat=remat)
+        aux_total = aux_total + aux
+
+    x = apply_norm(params["final_norm"], x, cfg.norm, cfg.norm_eps)
+    tied = params["embed"]["table"] if cfg.tie_embeddings else None
+    logits = unembed(params.get("unembed"), x, tied_table=tied) * cfg.logits_scale
+    logits = _mask_padded_vocab(cfg, logits)
+    return logits, aux_total
+
+
+def _enc_self_attn(ap, cfg, x, positions):
+    """Non-causal encoder self-attention (no rope — stub embeddings carry
+    positional info; whisper uses sinusoidal added upstream)."""
+    B, S, _ = x.shape
+    q, k, v = attn._project_qkv(ap, cfg, x)
+    scale = 1.0 / (cfg.head_dim ** 0.5)
+    mask = jnp.ones((B, S, S), bool)
+    out = attn._sdpa(q, k, v, mask, scale)
+    return attn._out_proj(ap, out)
+
+
+# ----------------------------------------------------------------- loss ---
+
+def loss_fn(cfg, params, batch, *, q_chunk=None, moe_dispatch="einsum", remat=True):
+    """batch: {"tokens": (B,S), "labels": (B,S) with -1 = masked,
+    optional "prefix_embeds"/"encoder_embeds"}."""
+    logits, aux = forward(cfg, params, batch["tokens"],
+                          prefix_embeds=batch.get("prefix_embeds"),
+                          encoder_embeds=batch.get("encoder_embeds"),
+                          q_chunk=q_chunk, moe_dispatch=moe_dispatch, remat=remat)
+    labels = batch["labels"]
+    P = logits.shape[1] - labels.shape[1]
+    if P:  # prefix positions carry no loss
+        logits = logits[:, P:]
+    mask = (labels >= 0).astype(jnp.float32)
+    labels_c = jnp.maximum(labels, 0)
+    logp = jax.nn.log_softmax(logits.astype(jnp.float32), axis=-1)
+    nll = -jnp.take_along_axis(logp, labels_c[..., None], axis=-1)[..., 0]
+    loss = jnp.sum(nll * mask) / jnp.maximum(jnp.sum(mask), 1.0)
+    if cfg.moe is not None:
+        loss = loss + cfg.moe.router_aux_coef * aux
+    return loss, {"nll": loss, "aux": aux}
+
+
+# -------------------------------------------------------------- prefill ---
+
+def _pack_rotating(t, alen, dtype):
+    """t (B, S, ...) -> rotating cache buffer (B, alen, ...): slot p%alen
+    holds the latest position p (matches attention_decode's layout)."""
+    B, S = t.shape[:2]
+    buf = jnp.zeros((B, alen) + t.shape[2:], dtype)
+    take = min(S, alen)
+    tail = t[:, S - take:]
+    slots = (jnp.arange(S - take, S)) % alen
+    return buf.at[:, slots].set(tail.astype(dtype))
+
+
+def _apply_layer_prefill(cfg, lp, shared, x, positions, tag, cache_len, *,
+                         enc_out=None, q_chunk=None, moe_dispatch="einsum",
+                         cache_dtype=jnp.bfloat16):
+    """Like _apply_layer, but also emits this layer's filled decode cache."""
+    kind, is_moe = tag
+    rs = _residual_scale(cfg)
+    if kind == "mamba2":
+        h = apply_norm(lp["norm1"], x, cfg.norm, cfg.norm_eps)
+        y, (conv, ssm) = rec.mamba2_forward(lp["mamba"], cfg, h)
+        return x + y * rs, {"conv": conv, "ssm": ssm}
+    if kind == "rwkv6":
+        h = apply_norm(lp["norm1"], x, cfg.norm, cfg.norm_eps)
+        y, (sh, wkv) = rec.rwkv6_time_mix(lp["tm"], cfg, h)
+        x = x + y * rs
+        h = apply_norm(lp["norm2"], x, cfg.norm, cfg.norm_eps)
+        y, cm_sh = rec.rwkv6_channel_mix(lp["tm"], h)
+        return x + y * rs, {"tm_shift": sh, "wkv": wkv, "cm_shift": cm_sh}
+
+    h = apply_norm(lp["norm1"], x, cfg.norm, cfg.norm_eps)
+    ap = shared if kind == "shared_attn" else lp["attn"]
+    window = cfg.serve_window
+    alen = min(cache_len, window) if window else cache_len
+    if cfg.attention == "mla" and kind == "attn":
+        a, (ckv, krope) = attn.mla_forward(ap, cfg, h, positions,
+                                           q_chunk=q_chunk, return_ckv=True)
+        # MLA cache is always full-length (compressed)
+        S = ckv.shape[1]
+        lcache = {
+            "ckv": jnp.zeros((x.shape[0], cache_len, ckv.shape[-1]),
+                             cache_dtype).at[:, :S].set(ckv.astype(cache_dtype)),
+            "krope": jnp.zeros((x.shape[0], cache_len, krope.shape[-1]),
+                               cache_dtype).at[:, :S].set(krope.astype(cache_dtype)),
+        }
+    else:
+        a, (k, v) = attn.attention_forward(
+            ap, cfg, h, positions, window=cfg.sliding_window, q_chunk=q_chunk,
+            return_kv=True)
+        lcache = {"k": _pack_rotating(k, alen, cache_dtype),
+                  "v": _pack_rotating(v, alen, cache_dtype)}
+    if cfg.parallel_block:
+        m = apply_mlp(lp["mlp"], h, cfg.activation)
+        return x + (a + m) * rs, lcache
+    x = x + a * rs
+    if enc_out is not None:
+        h = apply_norm(lp["cross_norm"], x, cfg.norm, cfg.norm_eps)
+        kc, vc = _cross_kv(lp["cross_attn"], cfg, enc_out)
+        c = attn.attention_forward(lp["cross_attn"], cfg, h, positions,
+                                   kv_override=(kc, vc))
+        x = x + c * rs
+    h = apply_norm(lp["norm2"], x, cfg.norm, cfg.norm_eps)
+    if is_moe:
+        y, _ = moe_lib.moe_forward(lp["moe"], cfg, h, dispatch=moe_dispatch)
+    else:
+        y = apply_mlp(lp["mlp"], h, cfg.activation)
+    return x + y * rs, lcache
+
+
+def prefill(cfg, params, tokens, cache_len: int, *, prefix_embeds=None,
+            encoder_embeds=None, q_chunk=None, moe_dispatch: str = "einsum",
+            cache_dtype=jnp.bfloat16):
+    """Batched prompt processing: one forward pass that returns
+    (last_position_logits, filled_cache, next_pos).  ~S times faster than
+    stepping decode_step over the prompt; exact same cache contents
+    (tests/test_prefill.py)."""
+    params = _cast_params(cfg, params)
+    x = embed_tokens(params["embed"], tokens) * cfg.scale_emb
+    if prefix_embeds is not None:
+        x = jnp.concatenate([prefix_embeds.astype(x.dtype), x], axis=1)
+    x = x.astype(jnp.dtype(cfg.compute_dtype))
+    B, S, _ = x.shape
+    positions = jnp.arange(S, dtype=jnp.int32)
+
+    enc_out = None
+    if cfg.encoder is not None:
+        assert encoder_embeds is not None
+        enc_out = _encode(cfg, params, encoder_embeds)
+
+    shared = params.get("shared_attn")
+    caches = []
+    for gp, (tag, count) in zip(params["groups"], layer_groups(cfg)):
+        def body(carry, lp):
+            h, = carry
+            h2, lc = _apply_layer_prefill(cfg, lp, shared, h, positions, tag,
+                                          cache_len, enc_out=enc_out,
+                                          q_chunk=q_chunk,
+                                          moe_dispatch=moe_dispatch,
+                                          cache_dtype=cache_dtype)
+            return (h2,), lc
+
+        (x,), gcache = jax.lax.scan(body, (x,), gp)
+        caches.append(gcache)
+
+    cache = {"groups": caches}
+    if cfg.encoder is not None:
+        cross = []
+        for gp in params["groups"]:
+            ks, vs = jax.vmap(lambda lp: _cross_kv(lp["cross_attn"], cfg, enc_out))(gp)
+            cross.append({"k": ks.astype(cache_dtype), "v": vs.astype(cache_dtype)})
+        cache["cross"] = cross
+
+    xl = apply_norm(params["final_norm"], x[:, -1:], cfg.norm, cfg.norm_eps)
+    tied = params["embed"]["table"] if cfg.tie_embeddings else None
+    logits = unembed(params.get("unembed"), xl, tied_table=tied) * cfg.logits_scale
+    logits = _mask_padded_vocab(cfg, logits)
+    return logits, cache, jnp.int32(S)
+
+
+# --------------------------------------------------------------- decode ---
+
+def init_cache(cfg, params, batch: int, cache_len: int, *, encoder_embeds=None,
+               dtype=jnp.bfloat16):
+    """Build the per-group stacked cache pytree."""
+    window = cfg.serve_window
+    alen = min(cache_len, window) if window else cache_len
+    caches = []
+    for tag, count in layer_groups(cfg):
+        kind, _ = tag
+        if kind in ("attn", "shared_attn"):
+            if cfg.attention == "mla" and kind == "attn":
+                one = attn.init_mla_cache(cfg, batch, cache_len, dtype)
+            else:
+                one = attn.init_attn_cache(cfg, batch, alen, dtype)
+        elif kind == "mamba2":
+            one = rec.init_mamba2_state(cfg, batch)
+            one = {"conv": one[0], "ssm": one[1]}
+        elif kind == "rwkv6":
+            s = rec.init_rwkv6_state(cfg, batch)
+            one = {"tm_shift": s[0], "wkv": s[1], "cm_shift": s[2]}
+        caches.append(jax.tree.map(lambda a: jnp.broadcast_to(a, (count,) + a.shape), one))
+
+    cache = {"groups": caches}
+    if cfg.encoder is not None:
+        assert encoder_embeds is not None
+        enc_out = _encode(cfg, params, encoder_embeds)
+        # precompute cross K/V per decoder layer (stacked over the group)
+        cross = []
+        for gp in params["groups"]:
+            ks, vs = jax.vmap(lambda lp: _cross_kv(lp["cross_attn"], cfg, enc_out))(gp)
+            cross.append({"k": ks.astype(dtype), "v": vs.astype(dtype)})
+        cache["cross"] = cross
+    return cache
+
+
+def _encode(cfg, params, encoder_embeds):
+    params = _cast_params(cfg, params)
+    e = encoder_embeds.astype(jnp.dtype(cfg.compute_dtype))
+    e_pos = jnp.arange(e.shape[1], dtype=jnp.int32)
+    for gp in params["encoder"]["groups"]:
+        def ebody(carry, lp):
+            h = apply_norm(lp["norm1"], carry, cfg.norm, cfg.norm_eps)
+            a = _enc_self_attn(lp["attn"], cfg, h, e_pos)
+            h2 = carry + a
+            hh = apply_norm(lp["norm2"], h2, cfg.norm, cfg.norm_eps)
+            return h2 + apply_mlp(lp["mlp"], hh, cfg.activation), None
+        e, _ = jax.lax.scan(ebody, e, gp)
+    return apply_norm(params["encoder"]["final_norm"], e, cfg.norm, cfg.norm_eps)
+
+
+def _decode_layer(cfg, lp, shared, x, lcache, pos, tag, cross_kv=None,
+                  moe_dispatch="einsum"):
+    kind, is_moe = tag
+    rs = _residual_scale(cfg)
+    if kind == "mamba2":
+        h = apply_norm(lp["norm1"], x, cfg.norm, cfg.norm_eps)
+        y, (cv, st) = rec.mamba2_forward(lp["mamba"], cfg, h,
+                                         conv_state=lcache["conv"], ssm_state=lcache["ssm"])
+        return x + y * rs, {"conv": cv, "ssm": st}
+    if kind == "rwkv6":
+        h = apply_norm(lp["norm1"], x, cfg.norm, cfg.norm_eps)
+        y, (sh, wkv) = rec.rwkv6_time_mix(lp["tm"], cfg, h,
+                                          shift_state=lcache["tm_shift"], wkv_state=lcache["wkv"])
+        x = x + y * rs
+        h = apply_norm(lp["norm2"], x, cfg.norm, cfg.norm_eps)
+        y, cm_sh = rec.rwkv6_channel_mix(lp["tm"], h, shift_state=lcache["cm_shift"])
+        return x + y * rs, {"tm_shift": sh, "wkv": wkv, "cm_shift": cm_sh}
+
+    h = apply_norm(lp["norm1"], x, cfg.norm, cfg.norm_eps)
+    ap = shared if kind == "shared_attn" else lp["attn"]
+    if cfg.attention == "mla" and kind == "attn":
+        a, new_cache = attn.mla_decode(ap, cfg, h, lcache, pos)
+    else:
+        a, new_cache = attn.attention_decode(ap, cfg, h, lcache, pos,
+                                             window=cfg.serve_window)
+    if cfg.parallel_block:
+        m = apply_mlp(lp["mlp"], h, cfg.activation)
+        return x + (a + m) * rs, new_cache
+    x = x + a * rs
+    if cross_kv is not None:
+        h = apply_norm(lp["cross_norm"], x, cfg.norm, cfg.norm_eps)
+        c = _cross_decode(lp["cross_attn"], cfg, h, cross_kv)
+        x = x + c * rs
+    h = apply_norm(lp["norm2"], x, cfg.norm, cfg.norm_eps)
+    if is_moe:
+        y, _ = moe_lib.moe_forward(lp["moe"], cfg, h, dispatch=moe_dispatch)
+    else:
+        y = apply_mlp(lp["mlp"], h, cfg.activation)
+    return x + y * rs, new_cache
+
+
+def _cross_decode(ap, cfg, x, cross_kv):
+    B = x.shape[0]
+    H, KV, hd = cfg.num_heads, cfg.num_kv_heads, cfg.head_dim
+    q = (x @ ap["wq"]).reshape(B, 1, H, hd)
+    if "bq" in ap:
+        q = q + ap["bq"].reshape(H, hd)
+    k, v = cross_kv["k"], cross_kv["v"]
+    scale = 1.0 / (hd ** 0.5)
+    G = H // KV
+    qg = q.reshape(B, KV, G, hd)
+    scores = jnp.einsum("bkgd,bskd->bkgs", qg, k.astype(q.dtype)).astype(jnp.float32) * scale
+    probs = jax.nn.softmax(scores, axis=-1).astype(v.dtype)
+    out = jnp.einsum("bkgs,bskd->bkgd", probs, v)
+    return attn._out_proj(ap, out.reshape(B, 1, H, hd))
+
+
+def decode_step(cfg, params, cache, token, pos, *, moe_dispatch: str = "einsum"):
+    """token (B, 1) int32; pos scalar int32. Returns (logits (B,1,V), cache)."""
+    params = _cast_params(cfg, params)
+    x = embed_tokens(params["embed"], token) * cfg.scale_emb
+    x = x.astype(jnp.dtype(cfg.compute_dtype))
+    shared = params.get("shared_attn")
+    new_groups = []
+    for gi, (gp, (tag, count)) in enumerate(zip(params["groups"], layer_groups(cfg))):
+        cross = cache.get("cross")
+        gc = cache["groups"][gi]
+
+        def body(carry, inp):
+            h = carry
+            lp, lc, ck = inp
+            h2, nc = _decode_layer(cfg, lp, shared, h, lc, pos, tag, cross_kv=ck,
+                                   moe_dispatch=moe_dispatch)
+            return h2, nc
+
+        if cross is None:
+            x, new_gc = jax.lax.scan(lambda c, i: body(c, (i[0], i[1], None)), x, (gp, gc))
+        else:
+            x, new_gc = jax.lax.scan(lambda c, i: body(c, i), x, (gp, gc, cross[gi]))
+        new_groups.append(new_gc)
+
+    x = apply_norm(params["final_norm"], x, cfg.norm, cfg.norm_eps)
+    tied = params["embed"]["table"] if cfg.tie_embeddings else None
+    logits = unembed(params.get("unembed"), x, tied_table=tied) * cfg.logits_scale
+    logits = _mask_padded_vocab(cfg, logits)
+    new_cache = dict(cache)
+    new_cache["groups"] = new_groups
+    return logits, new_cache

@@ -1,0 +1,84 @@
+"""Parameter factory: builds param pytrees and, in abstract mode, the
+parallel tree of logical sharding axes.
+
+Every parameter in the model zoo is created through ``ParamFactory.param``
+with a tuple of *logical axis names* (one per dim).  Sharding rules
+(``repro/distributed/sharding.py``) map logical names -> mesh axes to
+produce PartitionSpec trees with the exact same structure as the params.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+
+@dataclass(frozen=True)
+class AbstractParam:
+    """Placeholder leaf used in abstract mode (records shape/axes/dtype)."""
+    shape: Tuple[int, ...]
+    axes: Tuple[Optional[str], ...]
+    dtype: str
+
+    # make it usable as a pytree *leaf*
+    def __hash__(self):
+        return hash((self.shape, self.axes, self.dtype))
+
+
+def is_abstract_leaf(x) -> bool:
+    return isinstance(x, AbstractParam)
+
+
+class ParamFactory:
+    """Deterministic parameter creator.
+
+    ``abstract=True`` builds an AbstractParam tree (no RNG, no memory) used
+    for sharding-spec derivation and jax.eval_shape-style plumbing.
+    """
+
+    def __init__(self, key: Optional[jax.Array] = None, abstract: bool = False,
+                 dtype=jnp.float32):
+        self.key = key
+        self.abstract = abstract
+        self.dtype = dtype
+        self._counter = 0
+
+    def _next_key(self):
+        self._counter += 1
+        return jax.random.fold_in(self.key, self._counter)
+
+    def param(self, shape, axes, init: str = "fan_in", scale: Optional[float] = None,
+              dtype=None):
+        shape = tuple(int(s) for s in shape)
+        axes = tuple(axes)
+        assert len(axes) == len(shape), f"axes {axes} vs shape {shape}"
+        dtype = dtype or self.dtype
+        if self.abstract:
+            return AbstractParam(shape, axes, jnp.dtype(dtype).name)
+        k = self._next_key()
+        if init == "zeros":
+            return jnp.zeros(shape, dtype)
+        if init == "ones":
+            return jnp.ones(shape, dtype)
+        if init == "normal":
+            std = scale if scale is not None else 0.02
+            return (jax.random.normal(k, shape) * std).astype(dtype)
+        if init == "fan_in":
+            fan_in = shape[0] if len(shape) >= 2 else max(shape[0], 1)
+            std = (scale if scale is not None else 1.0) / (fan_in ** 0.5)
+            return (jax.random.normal(k, shape) * std).astype(dtype)
+        if init == "uniform":
+            lim = scale if scale is not None else 1.0 / (shape[0] ** 0.5)
+            return jax.random.uniform(k, shape, minval=-lim, maxval=lim).astype(dtype)
+        if init == "constant":
+            return jnp.full(shape, scale, dtype)
+        raise ValueError(f"unknown init {init}")
+
+
+def abstract_to_shape_dtype(tree):
+    """AbstractParam tree -> jax.ShapeDtypeStruct tree (for eval_shape etc.)."""
+    return jax.tree.map(
+        lambda a: jax.ShapeDtypeStruct(a.shape, jnp.dtype(a.dtype)),
+        tree, is_leaf=is_abstract_leaf)

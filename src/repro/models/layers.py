@@ -1,0 +1,135 @@
+"""Basic neural-net layers: norms, RoPE, MLPs, embeddings.
+
+All layers are pure functions over params-dicts created by a ParamFactory.
+Logical sharding axes used here:
+  "embed"  — d_model dim           (rule: -> data axis, FSDP-style)
+  "mlp"    — d_ff dim              (rule: -> model axis, tensor parallel)
+  "vocab"  — vocabulary dim        (rule: -> model axis)
+  "heads"  — fused num_heads*head_dim   (rule: -> model axis)
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.factory import ParamFactory
+
+
+# ---------------------------------------------------------------- norms ---
+
+def init_norm(fac: ParamFactory, d: int, kind: str, use_bias: bool):
+    p = {"scale": fac.param((d,), ("embed",), init="ones")}
+    if kind == "layernorm" and use_bias:
+        p["bias"] = fac.param((d,), ("embed",), init="zeros")
+    return p
+
+
+def apply_norm(p, x, kind: str, eps: float):
+    x32 = x.astype(jnp.float32)
+    if kind == "rmsnorm":
+        var = jnp.mean(jnp.square(x32), axis=-1, keepdims=True)
+        y = x32 * jax.lax.rsqrt(var + eps)
+    elif kind == "layernorm":
+        mu = jnp.mean(x32, axis=-1, keepdims=True)
+        var = jnp.var(x32, axis=-1, keepdims=True)
+        y = (x32 - mu) * jax.lax.rsqrt(var + eps)
+    else:
+        raise ValueError(kind)
+    y = y * p["scale"].astype(jnp.float32)
+    if "bias" in p:
+        y = y + p["bias"].astype(jnp.float32)
+    return y.astype(x.dtype)
+
+
+def rms_normalize(x, eps: float = 1e-6):
+    """Scale-free RMS normalisation (used by qk-norm with its own scale)."""
+    x32 = x.astype(jnp.float32)
+    var = jnp.mean(jnp.square(x32), axis=-1, keepdims=True)
+    return (x32 * jax.lax.rsqrt(var + eps)).astype(x.dtype)
+
+
+def init_group_norm(fac: ParamFactory, heads: int, head_dim: int):
+    return {"scale": fac.param((heads, head_dim), (None, None), init="ones"),
+            "bias": fac.param((heads, head_dim), (None, None), init="zeros")}
+
+
+def apply_group_norm(p, x, eps: float = 64e-5):
+    """Per-head LayerNorm over head_dim, x: (..., H, hd). (RWKV ln_x)"""
+    x32 = x.astype(jnp.float32)
+    mu = jnp.mean(x32, axis=-1, keepdims=True)
+    var = jnp.var(x32, axis=-1, keepdims=True)
+    y = (x32 - mu) * jax.lax.rsqrt(var + eps)
+    return (y * p["scale"] + p["bias"]).astype(x.dtype)
+
+
+# ----------------------------------------------------------------- rope ---
+
+def rope_angles(positions, head_dim: int, theta: float):
+    """positions: (...,) int -> cos,sin of shape (..., head_dim//2)."""
+    half = head_dim // 2
+    freqs = 1.0 / (theta ** (jnp.arange(0, half, dtype=jnp.float32) / half))
+    ang = positions.astype(jnp.float32)[..., None] * freqs
+    return jnp.cos(ang), jnp.sin(ang)
+
+
+def apply_rope(x, positions, theta: float):
+    """x: (B, S, H, hd) (llama-style non-interleaved halves); positions (B,S) or (S,)."""
+    hd = x.shape[-1]
+    cos, sin = rope_angles(positions, hd, theta)  # (B,S,half) or (S,half)
+    if cos.ndim == 2:  # (S, half) -> broadcast batch
+        cos, sin = cos[None], sin[None]
+    cos, sin = cos[..., None, :], sin[..., None, :]  # head axis
+    x1, x2 = jnp.split(x.astype(jnp.float32), 2, axis=-1)
+    out = jnp.concatenate([x1 * cos - x2 * sin, x1 * sin + x2 * cos], axis=-1)
+    return out.astype(x.dtype)
+
+
+# ------------------------------------------------------------------ mlp ---
+
+def init_mlp(fac: ParamFactory, d: int, d_ff: int, activation: str, use_bias: bool):
+    p = {}
+    if activation == "silu":  # SwiGLU
+        p["w_gate"] = fac.param((d, d_ff), ("embed", "mlp"))
+        p["w_up"] = fac.param((d, d_ff), ("embed", "mlp"))
+    else:
+        p["w_up"] = fac.param((d, d_ff), ("embed", "mlp"))
+        if use_bias:
+            p["b_up"] = fac.param((d_ff,), ("mlp",), init="zeros")
+    p["w_down"] = fac.param((d_ff, d), ("mlp", "embed"))
+    if use_bias:
+        p["b_down"] = fac.param((d,), ("embed",), init="zeros")
+    return p
+
+
+def apply_mlp(p, x, activation: str):
+    if activation == "silu":
+        h = jax.nn.silu(x @ p["w_gate"]) * (x @ p["w_up"])
+    else:
+        h = x @ p["w_up"]
+        if "b_up" in p:
+            h = h + p["b_up"]
+        h = jax.nn.gelu(h)
+    y = h @ p["w_down"]
+    if "b_down" in p:
+        y = y + p["b_down"]
+    return y
+
+
+# ----------------------------------------------------------- embeddings ---
+
+def init_embedding(fac: ParamFactory, vocab: int, d: int):
+    return {"table": fac.param((vocab, d), ("vocab", "embed"), init="normal", scale=0.02)}
+
+
+def embed_tokens(p, tokens):
+    return p["table"][tokens]
+
+
+def unembed(p_out, x, tied_table=None):
+    """Final logits projection. p_out holds 'w' unless embeddings are tied."""
+    w = tied_table.T if tied_table is not None else p_out["w"]
+    return x @ w
+
+
+def init_unembed(fac: ParamFactory, d: int, vocab: int):
+    return {"w": fac.param((d, vocab), ("embed", "vocab"), init="normal", scale=0.02)}

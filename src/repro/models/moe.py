@@ -1,0 +1,178 @@
+"""Mixture-of-Experts layer: top-k softmax router + expert FFNs.
+
+Two dispatch strategies, selectable per-call (used by the perf hillclimb):
+
+* ``einsum`` — classic GShard/Switch capacity-based one-hot dispatch.
+  Tokens are processed in groups; each group builds a (g, E, C) one-hot
+  dispatch tensor contracted against activations.  Simple, GSPMD-friendly,
+  but the dispatch einsums cost O(g*E*C*d) MXU FLOPs.
+* ``sort`` — argsort-based dispatch: tokens are sorted by expert id and
+  scattered into the (E, C, d) buffer with pure data movement (gather/
+  scatter), so HLO FLOPs ≈ expert FFN FLOPs only.
+
+Both drop overflow tokens beyond per-expert capacity C (the classic
+capacity-factor contract); the router uses softmax-then-top-k with
+renormalised weights and a Switch-style load-balance auxiliary loss.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.factory import ParamFactory
+
+
+def init_moe(fac: ParamFactory, cfg):
+    d, m = cfg.d_model, cfg.moe
+    E, f = m.num_experts, m.d_ff_expert
+    d_ax = "embed" if m.shard_expert_dmodel else None
+    p = {
+        # expert weights: expert-parallel over "model" when E divides the
+        # axis, otherwise the per-expert ff dim takes it (spec_for dedupes
+        # the mesh axis); d_model dim optionally FSDP-sharded over "data"
+        # (see MoEConfig.shard_expert_dmodel)
+        "router": fac.param((d, E), ("embed", None), init="normal", scale=0.02),
+        "w_gate": fac.param((E, d, f), ("expert", d_ax, "mlp")),
+        "w_up": fac.param((E, d, f), ("expert", d_ax, "mlp")),
+        "w_down": fac.param((E, f, d), ("expert", "mlp", d_ax)),
+    }
+    if m.num_shared_experts:
+        fs = f * m.num_shared_experts
+        p["shared"] = {
+            "w_gate": fac.param((d, fs), ("embed", "mlp")),
+            "w_up": fac.param((d, fs), ("embed", "mlp")),
+            "w_down": fac.param((fs, d), ("mlp", "embed")),
+        }
+    return p
+
+
+def _expert_ffn(p, xe):
+    """xe: (E, C, d) -> (E, C, d), vmapped SwiGLU over experts."""
+    h = jax.nn.silu(jnp.einsum("ecd,edf->ecf", xe, p["w_gate"]))
+    h = h * jnp.einsum("ecd,edf->ecf", xe, p["w_up"])
+    return jnp.einsum("ecf,efd->ecd", h, p["w_down"])
+
+
+def _route(p, cfg, x2d):
+    """x2d (T, d) -> (weights (T,k), ids (T,k), aux_loss)."""
+    m = cfg.moe
+    logits = (x2d.astype(jnp.float32) @ p["router"].astype(jnp.float32))
+    probs = jax.nn.softmax(logits, axis=-1)                     # (T, E)
+    w, ids = jax.lax.top_k(probs, m.top_k)                      # (T, k)
+    w = w / jnp.maximum(jnp.sum(w, axis=-1, keepdims=True), 1e-9)
+    # Switch-style load balance loss: E * sum_e f_e * P_e
+    T = x2d.shape[0]
+    onehot = jax.nn.one_hot(ids[:, 0], m.num_experts, dtype=jnp.float32)
+    f_e = jnp.mean(onehot, axis=0)
+    P_e = jnp.mean(probs, axis=0)
+    aux = m.num_experts * jnp.sum(f_e * P_e)
+    return w.astype(x2d.dtype), ids, aux
+
+
+def _capacity(group: int, cfg) -> int:
+    """Per-expert slot budget: capacity factor 1.25 at scale; small groups
+    (decode steps, smoke tests) get full capacity so nothing drops where
+    dropping would be a correctness surprise rather than a throughput
+    trade-off."""
+    m = cfg.moe
+    c = int(group * m.top_k * 1.25 / m.num_experts) + 1
+    return max(min(group, max(c, 16)), 1)
+
+
+def moe_forward_einsum(p, cfg, x, group: int = 2048):
+    """GShard-style grouped one-hot dispatch."""
+    B, S, d = x.shape
+    m = cfg.moe
+    T = B * S
+    g = min(group, T)
+    assert T % g == 0, (T, g)
+    G = T // g
+    C = _capacity(g, cfg)
+    xg = x.reshape(G, g, d)
+    w, ids, aux = _route(p, cfg, x.reshape(T, d))
+    w = w.reshape(G, g, m.top_k)
+    ids = ids.reshape(G, g, m.top_k)
+
+    # position of each (token, k) inside its expert queue
+    oh = jax.nn.one_hot(ids, m.num_experts, dtype=jnp.int32)    # (G,g,k,E)
+    ohf = oh.reshape(G, g * m.top_k, m.num_experts)
+    pos = jnp.cumsum(ohf, axis=1) - ohf                         # (G,g*k,E)
+    pos = pos.reshape(G, g, m.top_k, m.num_experts)
+    slot = jnp.sum(pos * oh, axis=-1)                           # (G,g,k)
+    keep = slot < C
+    # dispatch tensor (G, g, E, C): one-hot over (expert, slot)
+    disp = (oh[..., None] * jax.nn.one_hot(slot, C, dtype=x.dtype)[..., None, :]
+            * keep[..., None, None].astype(x.dtype))            # (G,g,k,E,C)
+    disp_tok = jnp.sum(disp, axis=2)                            # (G,g,E,C)
+    combine = jnp.sum(disp * w[..., None, None].astype(x.dtype), axis=2)
+
+    xe = jnp.einsum("gtec,gtd->gecd", disp_tok, xg)             # (G,E,C,d)
+    ye = jax.vmap(lambda xs: _expert_ffn(p, xs))(xe)            # (G,E,C,d)
+    y = jnp.einsum("gtec,gecd->gtd", combine, ye)
+    y = y.reshape(B, S, d)
+    if m.num_shared_experts:
+        sp = p["shared"]
+        y = y + (jax.nn.silu(x @ sp["w_gate"]) * (x @ sp["w_up"])) @ sp["w_down"]
+    return y, aux
+
+
+def moe_forward_sort(p, cfg, x, group: int = 2048):
+    """Sort-based dispatch, GROUP-LOCAL: tokens are sorted by expert id
+    *within* fixed-size groups, so every index is group-relative and the
+    leading group axis keeps the batch's data-parallel sharding (a global
+    argsort/gather makes GSPMD replicate the whole token buffer across the
+    mesh — measured 7x worse; see EXPERIMENTS.md §Perf iteration 1).
+    Dispatch is pure data movement (sort + one-hot-free scatter/gather);
+    MXU FLOPs ≈ expert FFN only."""
+    B, S, d = x.shape
+    m = cfg.moe
+    T = B * S
+    g = min(group, T)
+    assert T % g == 0, (T, g)
+    G = T // g
+    C = _capacity(g, cfg)
+    E = m.num_experts
+    xg = x.reshape(G, g, d)
+    w, ids, aux = _route(p, cfg, x.reshape(T, d))
+    w = w.reshape(G, g * m.top_k)
+    ids = ids.reshape(G, g * m.top_k)
+
+    order = jnp.argsort(ids, axis=1)                            # per-group sort
+    tok_of = jnp.take_along_axis(
+        jnp.broadcast_to(jnp.arange(g * m.top_k)[None] // m.top_k,
+                         (G, g * m.top_k)), order, axis=1)      # (G, g*k)
+    eid_sorted = jnp.take_along_axis(ids, order, axis=1)
+    # slot within (group, expert): position among same-expert entries
+    oh = jax.nn.one_hot(ids, E, dtype=jnp.int32)                # (G, g*k, E)
+    pos = jnp.cumsum(oh, axis=1) - oh
+    slot = jnp.take_along_axis(
+        pos.reshape(G, g * m.top_k, E),
+        ids[..., None], axis=2)[..., 0]                         # (G, g*k)
+    slot_sorted = jnp.take_along_axis(slot, order, axis=1)
+    keep = slot_sorted < C
+    dest = eid_sorted * C + jnp.where(keep, slot_sorted, 0)     # (G, g*k)
+
+    xs = jnp.take_along_axis(xg, tok_of[..., None], axis=1)     # (G, g*k, d)
+    xs = jnp.where(keep[..., None], xs, 0.0)
+    buf = jnp.zeros((G, E * C, d), x.dtype)
+    buf = jax.vmap(lambda b, dst, v: b.at[dst].add(v))(buf, dest, xs)
+    ye = jax.vmap(lambda xe: _expert_ffn(p, xe.reshape(E, C, d)))(buf)
+    out = jnp.take_along_axis(ye.reshape(G, E * C, d), dest[..., None], axis=1)
+    out = jnp.where(keep[..., None], out, 0.0)
+    w_sorted = jnp.take_along_axis(w, order, axis=1)
+    contrib = out * w_sorted[..., None].astype(x.dtype)
+    y = jnp.zeros((G, g, d), x.dtype)
+    y = jax.vmap(lambda yy, t, c: yy.at[t].add(c))(y, tok_of, contrib)
+    y = y.reshape(B, S, d)
+    if m.num_shared_experts:
+        sp = p["shared"]
+        y = y + (jax.nn.silu(x @ sp["w_gate"]) * (x @ sp["w_up"])) @ sp["w_down"]
+    return y, aux
+
+
+def moe_forward(p, cfg, x, dispatch: str = "einsum", group: int = 2048):
+    if dispatch == "einsum":
+        return moe_forward_einsum(p, cfg, x, group)
+    if dispatch == "sort":
+        return moe_forward_sort(p, cfg, x, group)
+    raise ValueError(dispatch)

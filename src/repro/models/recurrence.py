@@ -1,0 +1,335 @@
+"""Linear-recurrence blocks: Mamba2 (SSD) and RWKV6 (Finch).
+
+Both are instances of the gated linear recurrence
+
+    S_t = diag(exp(log_a_t)) @ S_{t-1} + k_t v_t^T          S: (K, V)
+    y_t = q_t^T S_t                      (include_current=True, Mamba2)
+    y_t = q_t^T (S_{t-1} + diag(u) k_t v_t^T)               (RWKV6 bonus)
+
+computed with a two-level chunked algorithm: an exact intra-chunk pass and
+a short cross-chunk scan of states — the TPU-friendly SSD decomposition
+(sequential depth = chunk + n_chunks instead of S).
+
+Numerics: per-HEAD scalar decay (Mamba2) uses the exact exponent-difference
+score matrix.  Per-DIM decay (RWKV6) uses the factorised q*exp(c) / k*exp(-c)
+form, which is exact while |cumulative chunk decay| stays inside fp32
+exponent range; we clamp per-step log-decay at LOG_A_MIN and use chunk<=64
+so the factorisation cannot overflow (see DESIGN.md hardware notes).
+"""
+from __future__ import annotations
+
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.factory import ParamFactory
+from repro.models.layers import apply_group_norm, init_group_norm
+
+LOG_A_MIN = -8.0  # per-step clamp for per-dim decay (chunk<=64 -> exp<=512 safe in fp32)
+
+
+# ============================================ chunked linear recurrence ===
+
+def linear_recurrence_scan(q, k, v, log_a, u=None, include_current=True,
+                           initial_state=None):
+    """Exact sequential reference. q,k,log_a (B,S,H,K); v (B,S,H,V).
+    Returns y (B,S,H,V), final state (B,H,K,V)."""
+    B, S, H, K = q.shape
+    V = v.shape[-1]
+    S0 = initial_state if initial_state is not None else jnp.zeros((B, H, K, V), jnp.float32)
+
+    def step(state, inp):
+        qt, kt, vt, lat = inp  # (B,H,K),(B,H,K),(B,H,V),(B,H,K)
+        kv = kt[..., :, None] * vt[..., None, :]
+        if include_current:
+            new = jnp.exp(lat)[..., None] * state + kv
+            y = jnp.einsum("bhk,bhkv->bhv", qt, new)
+        else:
+            att = state + (u[None, :, :, None] * kv if u is not None else kv)
+            y = jnp.einsum("bhk,bhkv->bhv", qt, att)
+            new = jnp.exp(lat)[..., None] * state + kv
+        return new, y
+
+    xs = tuple(jnp.moveaxis(t.astype(jnp.float32), 1, 0) for t in (q, k, v, log_a))
+    final, ys = jax.lax.scan(step, S0, xs)
+    return jnp.moveaxis(ys, 0, 1).astype(v.dtype), final
+
+
+def _intra_chunk_per_head(qc, kc, vc, la, u, include_current):
+    """Exact intra-chunk for per-head *scalar* decay.
+    qc,kc (B,N,L,H,K) with la (B,N,L,H) scalar decays; vc (B,N,L,H,V)."""
+    cum = jnp.cumsum(la, axis=2)                                # (B,N,L,H)
+    # score[t,s] = (q_t . k_s) * exp(cum_t - cum_s)   for s<=t (or s<t)
+    diff = cum[:, :, :, None, :] - cum[:, :, None, :, :]        # (B,N,L,L,H)
+    L = qc.shape[2]
+    tri = jnp.tril(jnp.ones((L, L), bool), 0 if include_current else -1)
+    dec = jnp.where(tri[None, None, :, :, None], jnp.exp(diff), 0.0)
+    dots = jnp.einsum("bnthk,bnshk->bntsh", qc, kc)
+    scores = dots * dec
+    if not include_current and u is not None:
+        cur = jnp.einsum("bnthk,hk,bnthk->bnth", qc, u, kc)
+        scores = scores + cur[:, :, :, None, :] * jnp.eye(L)[None, None, :, :, None]
+    y = jnp.einsum("bntsh,bnshv->bnthv", scores, vc)
+    return y, cum
+
+
+def _intra_chunk_per_dim(qc, kc, vc, la, u, include_current):
+    """Factorised intra-chunk for per-dim decay. la (B,N,L,H,K)."""
+    cum = jnp.cumsum(la, axis=2)                                # (B,N,L,H,K)
+    qf = qc * jnp.exp(cum if include_current else cum - la)
+    kf = kc * jnp.exp(-cum)
+    L = qc.shape[2]
+    tri = jnp.tril(jnp.ones((L, L), bool), 0 if include_current else -1)
+    scores = jnp.einsum("bnthk,bnshk->bntsh", qf, kf)
+    scores = jnp.where(tri[None, None, :, :, None], scores, 0.0)
+    if not include_current and u is not None:
+        cur = jnp.einsum("bnthk,hk,bnthk->bnth", qc, u, kc)
+        scores = scores + cur[:, :, :, None, :] * jnp.eye(L)[None, None, :, :, None]
+    y = jnp.einsum("bntsh,bnshv->bnthv", scores, vc)
+    return y, cum
+
+
+def linear_recurrence(q, k, v, log_a, u=None, include_current=True,
+                      initial_state=None, chunk: int = 64,
+                      decay_per: str = "dim") -> Tuple[jax.Array, jax.Array]:
+    """Two-level chunked linear recurrence.  Shapes as in the scan reference.
+    log_a for decay_per=="head" may be (B,S,H) (scalar per head)."""
+    B, S, H, K = q.shape
+    V = v.shape[-1]
+    orig_S = S
+    if S % chunk:
+        pad = chunk - S % chunk
+        zq = lambda t: jnp.pad(t, [(0, 0), (0, pad)] + [(0, 0)] * (t.ndim - 2))
+        q, k, v = zq(q), zq(k), zq(v)
+        log_a = zq(log_a)
+        S = q.shape[1]
+    N, L = S // chunk, chunk
+
+    f32 = jnp.float32
+    qc = q.reshape(B, N, L, H, K).astype(f32)
+    kc = k.reshape(B, N, L, H, K).astype(f32)
+    vc = v.reshape(B, N, L, H, V).astype(f32)
+
+    if decay_per == "head":
+        la = (log_a if log_a.ndim == 3 else log_a[..., 0]).reshape(B, N, L, H).astype(f32)
+        y_intra, cum = _intra_chunk_per_head(qc, kc, vc, la, u, include_current)
+        cum_k = cum[..., None]                                  # (B,N,L,H,1)
+    else:
+        la = jnp.clip(log_a.reshape(B, N, L, H, K).astype(f32), LOG_A_MIN, 0.0)
+        y_intra, cum = _intra_chunk_per_dim(qc, kc, vc, la, u, include_current)
+        cum_k = cum                                             # (B,N,L,H,K)
+
+    # chunk-local end states: S_loc = sum_s exp(cum_L - cum_s) k_s v_s^T
+    tot = cum_k[:, :, -1:, :, :]                                # (B,N,1,H,K)
+    kdec = kc * jnp.exp(tot - cum_k)
+    s_loc = jnp.einsum("bnlhk,bnlhv->bnhkv", kdec, vc)          # (B,N,H,K,V)
+    tot = tot[:, :, 0]                                          # (B,N,H,K)
+
+    # cross-chunk scan: S_in[n] = state before chunk n
+    S0 = (initial_state.astype(f32) if initial_state is not None
+          else jnp.zeros((B, H, K, V), f32))
+
+    def xstep(state, inp):
+        t, sl = inp  # (B,H,K), (B,H,K,V)
+        new = jnp.exp(t)[..., None] * state + sl
+        return new, state
+
+    final, s_in = jax.lax.scan(xstep, S0,
+                               (jnp.moveaxis(tot, 1, 0), jnp.moveaxis(s_loc, 1, 0)))
+    s_in = jnp.moveaxis(s_in, 0, 1)                             # (B,N,H,K,V)
+
+    # inter-chunk contribution: y_t += (q_t * exp(cum_{t(-1)})) . S_in
+    shift = cum_k if include_current else cum_k - (la[..., None] if decay_per == "head" else la)
+    qdec = qc * jnp.exp(shift)
+    y_inter = jnp.einsum("bnlhk,bnhkv->bnlhv", qdec, s_in)
+    y = (y_intra + y_inter).reshape(B, S, H, V)[:, :orig_S].astype(v.dtype)
+    return y, final
+
+
+def recurrence_decode_step(state, qt, kt, vt, la_t, u=None, include_current=True):
+    """One-token state update. state (B,H,K,V); qt/kt/la_t (B,H,K); vt (B,H,V)."""
+    f32 = jnp.float32
+    out_dtype = vt.dtype
+    qt, kt, vt, la_t = (t.astype(f32) for t in (qt, kt, vt, la_t))
+    kv = kt[..., :, None] * vt[..., None, :]
+    if include_current:
+        new = jnp.exp(la_t)[..., None] * state + kv
+        y = jnp.einsum("bhk,bhkv->bhv", qt, new)
+    else:
+        att = state + (u[None, :, :, None] * kv if u is not None else kv)
+        y = jnp.einsum("bhk,bhkv->bhv", qt, att)
+        new = jnp.exp(la_t)[..., None] * state + kv
+    return y.astype(out_dtype), new
+
+
+# ================================================================ Mamba2 ===
+
+def init_mamba2(fac: ParamFactory, cfg):
+    d, s = cfg.d_model, cfg.ssm
+    d_in = s.expand * d
+    nheads = d_in // s.head_dim
+    conv_dim = d_in + 2 * s.state_dim
+    return {
+        "in_proj": fac.param((d, 2 * d_in + 2 * s.state_dim + nheads), ("embed", "mlp")),
+        "conv_w": fac.param((s.conv_width, conv_dim), (None, "mlp")),
+        "conv_b": fac.param((conv_dim,), ("mlp",), init="zeros"),
+        "dt_bias": fac.param((nheads,), (None,), init="zeros"),
+        "A_log": fac.param((nheads,), (None,), init="constant", scale=0.0),
+        "D": fac.param((nheads,), (None,), init="ones"),
+        "norm_scale": fac.param((d_in,), ("mlp",), init="ones"),
+        "out_proj": fac.param((d_in, d), ("mlp", "embed")),
+    }
+
+
+def _mamba_split(p, cfg, x):
+    d, s = cfg.d_model, cfg.ssm
+    d_in = s.expand * d
+    nheads = d_in // s.head_dim
+    zxbcdt = x @ p["in_proj"]
+    z, xin, Bc, Cc, dt = jnp.split(
+        zxbcdt, [d_in, 2 * d_in, 2 * d_in + s.state_dim, 2 * d_in + 2 * s.state_dim], axis=-1)
+    return z, xin, Bc, Cc, dt, d_in, nheads
+
+
+def _causal_conv(xs, w, b, conv_state=None):
+    """Depthwise causal conv. xs (B,S,C); w (W,C). Returns y, new_state (B,W-1,C)."""
+    W = w.shape[0]
+    if conv_state is None:
+        pad = jnp.zeros((xs.shape[0], W - 1, xs.shape[2]), xs.dtype)
+    else:
+        pad = conv_state.astype(xs.dtype)
+    xp = jnp.concatenate([pad, xs], axis=1)
+    y = sum(xp[:, i:i + xs.shape[1]] * w[i] for i in range(W)) + b
+    new_state = xp[:, xp.shape[1] - (W - 1):]
+    return jax.nn.silu(y), new_state
+
+
+def mamba2_forward(p, cfg, x, conv_state=None, ssm_state=None, chunk=None):
+    """x (B,S,d) -> (y, (conv_state, ssm_state))."""
+    B, S, _ = x.shape
+    s = cfg.ssm
+    z, xin, Bc, Cc, dt, d_in, nheads = _mamba_split(p, cfg, x)
+    conv_in = jnp.concatenate([xin, Bc, Cc], axis=-1)
+    conv_out, new_conv = _causal_conv(conv_in, p["conv_w"], p["conv_b"], conv_state)
+    xin, Bc, Cc = jnp.split(conv_out, [d_in, d_in + s.state_dim], axis=-1)
+
+    dt = jax.nn.softplus(dt.astype(jnp.float32) + p["dt_bias"])          # (B,S,H)
+    log_a = -jnp.exp(p["A_log"].astype(jnp.float32)) * dt                # (B,S,H) <= 0
+    xh = xin.reshape(B, S, nheads, s.head_dim)
+    v = xh * dt[..., None].astype(xh.dtype)                              # dt * x
+    k = jnp.broadcast_to(Bc[:, :, None, :], (B, S, nheads, s.state_dim))
+    q = jnp.broadcast_to(Cc[:, :, None, :], (B, S, nheads, s.state_dim))
+
+    if S == 1 and ssm_state is not None:
+        la0 = jnp.broadcast_to(log_a[:, 0][..., None], k[:, 0].shape)  # (B,H)->(B,H,K)
+        y, new_state = recurrence_decode_step(
+            ssm_state, q[:, 0], k[:, 0], v[:, 0], la0, include_current=True)
+        y = y[:, None]
+    else:
+        y, new_state = linear_recurrence(
+            q, k, v, log_a, include_current=True, initial_state=ssm_state,
+            chunk=chunk or s.chunk, decay_per="head")
+    y = y + xh * p["D"][None, None, :, None]
+    y = y.reshape(B, S, d_in)
+    # gated RMSNorm (Mamba2): norm(y * silu(z))
+    y = y * jax.nn.silu(z)
+    y32 = y.astype(jnp.float32)
+    var = jnp.mean(jnp.square(y32), axis=-1, keepdims=True)
+    y = (y32 * jax.lax.rsqrt(var + 1e-5) * p["norm_scale"]).astype(x.dtype)
+    return y @ p["out_proj"], (new_conv, new_state)
+
+
+def init_mamba2_state(cfg, batch: int, dtype=jnp.float32):
+    s = cfg.ssm
+    d_in = s.expand * cfg.d_model
+    nheads = d_in // s.head_dim
+    conv_dim = d_in + 2 * s.state_dim
+    return (jnp.zeros((batch, s.conv_width - 1, conv_dim), dtype),
+            jnp.zeros((batch, nheads, s.state_dim, s.head_dim), jnp.float32))
+
+
+# ================================================================ RWKV6 ===
+
+def init_rwkv6(fac: ParamFactory, cfg):
+    d, ff, r = cfg.d_model, cfg.d_ff, cfg.rwkv
+    H = d // r.head_dim
+    names = ("r", "k", "v", "g", "w")
+    p = {
+        # time-mix ddlerp: x_c = x + (shift(x)-x) * (mu_c + lora)
+        "mu": {c: fac.param((d,), ("embed",), init="uniform", scale=0.5) for c in names},
+        "mix_A": fac.param((d, 5 * cfg.rwkv.mix_lora), ("embed", None)),
+        "mix_B": {c: fac.param((r.mix_lora, d), (None, "embed")) for c in names},
+        "wr": fac.param((d, d), ("embed", "heads")),
+        "wk": fac.param((d, d), ("embed", "heads")),
+        "wv": fac.param((d, d), ("embed", "heads")),
+        "wg": fac.param((d, d), ("embed", "heads")),
+        "wo": fac.param((d, d), ("heads", "embed")),
+        "w0": fac.param((d,), ("embed",), init="constant", scale=-0.6),
+        "decay_A": fac.param((d, r.decay_lora), ("embed", None)),
+        "decay_B": fac.param((r.decay_lora, d), (None, "embed")),
+        "u": fac.param((H, r.head_dim), (None, None), init="uniform", scale=0.5),
+        "ln_x": init_group_norm(fac, H, r.head_dim),
+        # channel mix
+        "cm_mu_k": fac.param((d,), ("embed",), init="uniform", scale=0.5),
+        "cm_mu_r": fac.param((d,), ("embed",), init="uniform", scale=0.5),
+        "cm_k": fac.param((d, ff), ("embed", "mlp")),
+        "cm_v": fac.param((ff, d), ("mlp", "embed")),
+        "cm_r": fac.param((d, d), ("embed", "heads")),
+    }
+    return p
+
+
+def _token_shift(x, last=None):
+    """shift(x)_t = x_{t-1}; last (B,d) is the carry for decode/chunking."""
+    B, S, d = x.shape
+    first = jnp.zeros((B, 1, d), x.dtype) if last is None else last[:, None].astype(x.dtype)
+    return jnp.concatenate([first, x[:, :-1]], axis=1)
+
+
+def rwkv6_time_mix(p, cfg, x, shift_state=None, wkv_state=None):
+    B, S, d = x.shape
+    r_cfg = cfg.rwkv
+    H, hd = d // r_cfg.head_dim, r_cfg.head_dim
+    xx = _token_shift(x, shift_state) - x
+    lora = jnp.tanh(x @ p["mix_A"]).reshape(B, S, 5, r_cfg.mix_lora)
+    mixed = {}
+    for i, c in enumerate(("r", "k", "v", "g", "w")):
+        mu = p["mu"][c] + lora[:, :, i] @ p["mix_B"][c]
+        mixed[c] = x + xx * mu
+    r = (mixed["r"] @ p["wr"]).reshape(B, S, H, hd)
+    k = (mixed["k"] @ p["wk"]).reshape(B, S, H, hd)
+    v = (mixed["v"] @ p["wv"]).reshape(B, S, H, hd)
+    g = jax.nn.silu(mixed["g"] @ p["wg"])
+    log_w = -jnp.exp((p["w0"] + jnp.tanh(mixed["w"] @ p["decay_A"]) @ p["decay_B"]
+                      ).astype(jnp.float32))                    # (B,S,d) <= 0
+    log_a = log_w.reshape(B, S, H, hd)
+
+    if S == 1 and wkv_state is not None:
+        y, new_wkv = recurrence_decode_step(
+            wkv_state, r[:, 0], k[:, 0], v[:, 0], log_a[:, 0], u=p["u"],
+            include_current=False)
+        y = y[:, None]
+    else:
+        y, new_wkv = linear_recurrence(
+            r, k, v, log_a, u=p["u"], include_current=False,
+            initial_state=wkv_state, chunk=r_cfg.chunk, decay_per="dim")
+    y = apply_group_norm(p["ln_x"], y).reshape(B, S, d)
+    y = (y * g) @ p["wo"]
+    return y, (x[:, -1], new_wkv)
+
+
+def rwkv6_channel_mix(p, x, shift_state=None):
+    xx = _token_shift(x, shift_state) - x
+    xk = x + xx * p["cm_mu_k"]
+    xr = x + xx * p["cm_mu_r"]
+    kk = jnp.square(jax.nn.relu(xk @ p["cm_k"]))
+    return jax.nn.sigmoid(xr @ p["cm_r"]) * (kk @ p["cm_v"]), x[:, -1]
+
+
+def init_rwkv6_state(cfg, batch: int, dtype=jnp.float32):
+    d = cfg.d_model
+    H, hd = d // cfg.rwkv.head_dim, cfg.rwkv.head_dim
+    return (jnp.zeros((batch, d), dtype),                        # tm shift
+            jnp.zeros((batch, H, hd, hd), jnp.float32),          # wkv state
+            jnp.zeros((batch, d), dtype))                        # cm shift

@@ -1,0 +1,53 @@
+"""Architecture registry: maps --arch ids to config modules.
+
+Each ``repro/configs/<id>.py`` exposes ``config()`` (full production spec,
+cited) and ``smoke_config()`` (reduced family-preserving variant for CPU
+tests).  The registry also records which input shapes each arch supports
+(``long_500k`` needs sub-quadratic serving; whisper's enc-dec tops out at
+its encoder frame budget — see DESIGN.md §5).
+"""
+from __future__ import annotations
+
+import importlib
+
+ARCH_IDS = (
+    "llava_next_mistral_7b",
+    "granite_moe_3b_a800m",
+    "minicpm_2b",
+    "starcoder2_3b",
+    "command_r_35b",
+    "minicpm3_4b",
+    "zamba2_7b",
+    "qwen3_moe_30b_a3b",
+    "rwkv6_3b",
+    "whisper_small",
+)
+
+# input-shape skips (DESIGN.md §5): whisper long_500k is architecturally
+# meaningless (448-token decoder / 1500-frame encoder).
+SKIPS = {
+    ("whisper_small", "long_500k"): "enc-dec: decoder max positions 448; "
+                                    "524288-token decode context is not defined for this arch",
+}
+
+
+def normalize(arch: str) -> str:
+    return arch.replace("-", "_")
+
+
+def get_config(arch: str):
+    mod = importlib.import_module(f"repro.configs.{normalize(arch)}")
+    return mod.config()
+
+
+def get_smoke_config(arch: str):
+    mod = importlib.import_module(f"repro.configs.{normalize(arch)}")
+    return mod.smoke_config()
+
+
+def supported(arch: str, shape_name: str) -> bool:
+    return (normalize(arch), shape_name) not in SKIPS
+
+
+def skip_reason(arch: str, shape_name: str):
+    return SKIPS.get((normalize(arch), shape_name))

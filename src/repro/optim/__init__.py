@@ -1,0 +1,3 @@
+from repro.optim.optimizers import (adam, adamw, apply_updates, clip_by_global_norm,
+                                    sgd)
+from repro.optim.schedules import constant, cosine, wsd

@@ -1,0 +1,82 @@
+"""Functional optimizers (optax-style (init, update) pairs, self-contained).
+
+Each optimizer is a factory returning ``(init_fn, update_fn)``:
+    state = init_fn(params)
+    updates, state = update_fn(grads, state, params, step)
+    params = apply_updates(params, updates)
+Learning rates may be floats or schedule callables ``step -> lr``.
+"""
+from __future__ import annotations
+
+from typing import Callable, Union
+
+import jax
+import jax.numpy as jnp
+
+Schedule = Union[float, Callable]
+
+
+def _lr_at(lr: Schedule, step):
+    return lr(step) if callable(lr) else jnp.asarray(lr, jnp.float32)
+
+
+def apply_updates(params, updates):
+    return jax.tree.map(lambda p, u: (p.astype(jnp.float32) + u).astype(p.dtype),
+                        params, updates)
+
+
+def clip_by_global_norm(grads, max_norm: float):
+    from repro.common.pytree import global_norm
+    g = global_norm(grads)
+    scale = jnp.minimum(1.0, max_norm / jnp.maximum(g, 1e-9))
+    return jax.tree.map(lambda x: x * scale, grads), g
+
+
+def sgd(lr: Schedule, momentum: float = 0.0, nesterov: bool = False):
+    def init(params):
+        if momentum == 0.0:
+            return {}
+        return {"mu": jax.tree.map(lambda p: jnp.zeros_like(p, jnp.float32), params)}
+
+    def update(grads, state, params, step):
+        lr_t = _lr_at(lr, step)
+        if momentum == 0.0:
+            return jax.tree.map(lambda g: -lr_t * g.astype(jnp.float32), grads), state
+        mu = jax.tree.map(lambda m, g: momentum * m + g.astype(jnp.float32),
+                          state["mu"], grads)
+        if nesterov:
+            upd = jax.tree.map(lambda m, g: -(lr_t * (momentum * m + g.astype(jnp.float32))),
+                               mu, grads)
+        else:
+            upd = jax.tree.map(lambda m: -lr_t * m, mu)
+        return upd, {"mu": mu}
+
+    return init, update
+
+
+def adam(lr: Schedule, b1: float = 0.9, b2: float = 0.999, eps: float = 1e-8):
+    return adamw(lr, b1=b1, b2=b2, eps=eps, weight_decay=0.0)
+
+
+def adamw(lr: Schedule, b1: float = 0.9, b2: float = 0.999, eps: float = 1e-8,
+          weight_decay: float = 0.0):
+    def init(params):
+        z = lambda p: jnp.zeros_like(p, jnp.float32)
+        return {"m": jax.tree.map(z, params), "v": jax.tree.map(z, params)}
+
+    def update(grads, state, params, step):
+        lr_t = _lr_at(lr, step)
+        t = jnp.asarray(step, jnp.float32) + 1.0
+        m = jax.tree.map(lambda m_, g: b1 * m_ + (1 - b1) * g.astype(jnp.float32),
+                         state["m"], grads)
+        v = jax.tree.map(lambda v_, g: b2 * v_ + (1 - b2) * jnp.square(g.astype(jnp.float32)),
+                         state["v"], grads)
+        mhat = jax.tree.map(lambda x: x / (1 - b1 ** t), m)
+        vhat = jax.tree.map(lambda x: x / (1 - b2 ** t), v)
+        upd = jax.tree.map(lambda mh, vh: -lr_t * mh / (jnp.sqrt(vh) + eps), mhat, vhat)
+        if weight_decay:
+            upd = jax.tree.map(lambda u, p: u - lr_t * weight_decay * p.astype(jnp.float32),
+                               upd, params)
+        return upd, {"m": m, "v": v}
+
+    return init, update

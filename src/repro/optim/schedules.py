@@ -1,0 +1,34 @@
+"""LR schedules, including WSD (warmup-stable-decay) from MiniCPM
+[arXiv:2404.06395] — required by the minicpm_2b training recipe."""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def constant(lr: float):
+    return lambda step: jnp.float32(lr)
+
+
+def cosine(peak: float, warmup: int, total: int, floor: float = 0.0):
+    def sched(step):
+        s = jnp.asarray(step, jnp.float32)
+        warm = peak * s / jnp.maximum(warmup, 1)
+        prog = jnp.clip((s - warmup) / jnp.maximum(total - warmup, 1), 0.0, 1.0)
+        cos = floor + 0.5 * (peak - floor) * (1 + jnp.cos(jnp.pi * prog))
+        return jnp.where(s < warmup, warm, cos)
+    return sched
+
+
+def wsd(peak: float, warmup: int, stable: int, decay: int, floor_ratio: float = 0.1):
+    """Warmup-Stable-Decay: linear warmup -> flat peak -> exponential-ish
+    decay to floor_ratio*peak over `decay` steps (MiniCPM's schedule)."""
+    floor = peak * floor_ratio
+
+    def sched(step):
+        s = jnp.asarray(step, jnp.float32)
+        warm = peak * s / jnp.maximum(warmup, 1)
+        in_decay = jnp.clip((s - warmup - stable) / jnp.maximum(decay, 1), 0.0, 1.0)
+        dec = peak * (floor_ratio ** in_decay)  # exponential decay to floor
+        out = jnp.where(s < warmup, warm, jnp.where(s < warmup + stable, peak, dec))
+        return jnp.maximum(out, jnp.where(s >= warmup + stable + decay, floor, 0.0))
+    return sched

@@ -1,0 +1,6 @@
+import os
+import sys
+
+# tests run on the single real CPU device (the dry-run's 512 placeholder
+# devices are only set inside launch/dryrun.py / subprocess tests)
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))

@@ -1,0 +1,83 @@
+"""Property tests for masked weighted FedAvg aggregation."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+from hypothesis import given, settings, strategies as st
+
+from repro.core import aggregation as agg
+
+
+def stacked(n, shape=(3,), seed=0):
+    rng = np.random.RandomState(seed)
+    return {"w": jnp.asarray(rng.randn(n, *shape).astype(np.float32))}
+
+
+class TestWeights:
+    @settings(max_examples=50, deadline=None)
+    @given(st.lists(st.booleans(), min_size=1, max_size=32),
+           st.lists(st.integers(min_value=1, max_value=10_000), min_size=1,
+                    max_size=32))
+    def test_sum_to_one_over_selected(self, mask, counts):
+        n = min(len(mask), len(counts))
+        mask, counts = mask[:n], counts[:n]
+        w = np.asarray(agg.aggregation_weights(jnp.asarray(mask),
+                                               jnp.asarray(counts, jnp.float32)))
+        if any(mask):
+            assert np.isclose(w.sum(), 1.0, atol=1e-5)
+            assert (w[~np.asarray(mask)] == 0).all()
+        else:
+            assert (w == 0).all()
+
+    def test_proportional_to_samples(self):
+        """Algorithm 1 line 16: weights proportional to n_i."""
+        w = np.asarray(agg.aggregation_weights(
+            jnp.array([True, True, False]), jnp.array([100.0, 300.0, 999.0])))
+        assert np.isclose(w[1] / w[0], 3.0, rtol=1e-5)
+
+
+class TestMaskedAverage:
+    def test_selects_only_masked(self):
+        s = stacked(3)
+        mask = jnp.array([False, True, False])
+        out = agg.masked_weighted_average(s, mask, jnp.ones(3))
+        np.testing.assert_allclose(np.asarray(out["w"]), np.asarray(s["w"][1]),
+                                   rtol=1e-6)
+
+    @settings(max_examples=25, deadline=None)
+    @given(st.integers(min_value=2, max_value=8), st.randoms())
+    def test_permutation_equivariance(self, n, rnd):
+        s = stacked(n, seed=1)
+        mask = jnp.asarray([rnd.random() > 0.5 for _ in range(n)])
+        counts = jnp.asarray([1 + rnd.randrange(5) for _ in range(n)], jnp.float32)
+        perm = np.array(sorted(range(n), key=lambda _: rnd.random()))
+        a = agg.masked_weighted_average(s, mask, counts)
+        b = agg.masked_weighted_average(
+            {"w": s["w"][perm]}, mask[perm], counts[perm])
+        np.testing.assert_allclose(np.asarray(a["w"]), np.asarray(b["w"]),
+                                   rtol=1e-4, atol=1e-5)
+
+    def test_empty_mask_keeps_global(self):
+        g = {"w": jnp.array([9.0, 9.0, 9.0])}
+        s = stacked(4)
+        out = agg.aggregate_or_keep(g, s, jnp.zeros(4, bool), jnp.ones(4))
+        np.testing.assert_array_equal(np.asarray(out["w"]), np.asarray(g["w"]))
+
+    def test_convex_combination_bounds(self):
+        """Aggregate lies within per-coordinate min/max of selected models."""
+        s = stacked(5, seed=3)
+        mask = jnp.array([True, True, True, False, False])
+        out = np.asarray(agg.masked_weighted_average(s, mask, jnp.ones(5))["w"])
+        sel = np.asarray(s["w"])[:3]
+        assert (out <= sel.max(0) + 1e-6).all() and (out >= sel.min(0) - 1e-6).all()
+
+
+class TestAsyncMix:
+    def test_rho_zero_keeps_rho_one_replaces(self):
+        g = {"w": jnp.zeros(3)}
+        c = {"w": jnp.ones(3)}
+        np.testing.assert_allclose(np.asarray(agg.async_mix(g, c, 0.0)["w"]), 0.0)
+        np.testing.assert_allclose(np.asarray(agg.async_mix(g, c, 1.0)["w"]), 1.0)
+
+    def test_staleness_decay_monotone(self):
+        s = [float(agg.staleness_weight(t, "poly")) for t in (0, 1, 5, 50)]
+        assert s[0] == 1.0 and all(a > b for a, b in zip(s, s[1:]))

@@ -1,0 +1,114 @@
+"""FedProx / DP uploads / partial participation — FL substrate extensions."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.common.pytree import tree_sq_diff_norm
+from repro.core import FLRunConfig, run_round_based
+from repro.core.client import (LocalSpec, make_evaluator, make_local_update,
+                               make_weighted_classifier_loss)
+from repro.data.partition import paper_noniid_partition
+from repro.data.synthetic import synthetic_mnist
+from repro.models.cnn import MLPConfig, mlp_forward, mlp_init
+
+
+@pytest.fixture(scope="module")
+def setup():
+    xtr, ytr, xte, yte = synthetic_mnist(3000, 800, seed=0)
+    mcfg = MLPConfig(hidden=(64,))
+    loss_fn = make_weighted_classifier_loss(mlp_forward, mcfg)
+    evaluate = make_evaluator(mlp_forward, mcfg, xte, yte, batch=400)
+    fed = paper_noniid_partition(xtr, ytr, 4, samples_per_client=600, seed=0)
+    return fed, mcfg, loss_fn, evaluate
+
+
+def _data(fed):
+    return {"images": jnp.asarray(fed.images), "labels": jnp.asarray(fed.labels),
+            "mask": jnp.asarray(fed.mask)}
+
+
+class TestFedProx:
+    def test_prox_term_shrinks_drift(self, setup):
+        """Higher mu must keep local models closer to the global anchor."""
+        fed, mcfg, loss_fn, _ = setup
+        params = mlp_init(mcfg, jax.random.key(0))
+        N = 4
+        stacked = jax.tree.map(lambda x: jnp.broadcast_to(x, (N,) + x.shape), params)
+        drifts = {}
+        for mu in (0.0, 1.0):
+            upd = make_local_update(loss_fn, LocalSpec(batch_size=32, lr=0.1,
+                                                       local_rounds=2, prox_mu=mu))
+            newp, _, _ = upd(stacked, _data(fed), jax.random.key(1))
+            drifts[mu] = float(jax.vmap(tree_sq_diff_norm)(newp, stacked).mean())
+        assert drifts[1.0] < drifts[0.0]
+
+    def test_prox_zero_matches_plain(self, setup):
+        fed, mcfg, loss_fn, _ = setup
+        params = mlp_init(mcfg, jax.random.key(0))
+        stacked = jax.tree.map(lambda x: jnp.broadcast_to(x, (4,) + x.shape), params)
+        a = make_local_update(loss_fn, LocalSpec(batch_size=32, lr=0.1))(
+            stacked, _data(fed), jax.random.key(1))
+        b = make_local_update(loss_fn, LocalSpec(batch_size=32, lr=0.1,
+                                                 prox_mu=0.0))(
+            stacked, _data(fed), jax.random.key(1))
+        for x, y in zip(jax.tree.leaves(a[0]), jax.tree.leaves(b[0])):
+            np.testing.assert_array_equal(np.asarray(x), np.asarray(y))
+
+
+class TestDPUploads:
+    def test_clip_bounds_update_norm(self, setup):
+        fed, mcfg, loss_fn, _ = setup
+        params = mlp_init(mcfg, jax.random.key(0))
+        stacked = jax.tree.map(lambda x: jnp.broadcast_to(x, (4,) + x.shape), params)
+        C = 0.5
+        upd = make_local_update(loss_fn, LocalSpec(batch_size=32, lr=0.1,
+                                                   dp_clip=C, dp_noise=0.0))
+        newp, _, _ = upd(stacked, _data(fed), jax.random.key(1))
+        norms = np.sqrt(np.asarray(jax.vmap(tree_sq_diff_norm)(newp, stacked)))
+        assert (norms <= C * 1.01).all(), norms
+
+    def test_noise_changes_update(self, setup):
+        fed, mcfg, loss_fn, _ = setup
+        params = mlp_init(mcfg, jax.random.key(0))
+        stacked = jax.tree.map(lambda x: jnp.broadcast_to(x, (4,) + x.shape), params)
+        a = make_local_update(loss_fn, LocalSpec(batch_size=32, lr=0.1,
+                                                 dp_clip=1.0, dp_noise=0.0))(
+            stacked, _data(fed), jax.random.key(1))[0]
+        b = make_local_update(loss_fn, LocalSpec(batch_size=32, lr=0.1,
+                                                 dp_clip=1.0, dp_noise=0.1))(
+            stacked, _data(fed), jax.random.key(1))[0]
+        diff = float(jax.vmap(tree_sq_diff_norm)(a, b).sum())
+        assert diff > 0
+
+    def test_dp_run_still_converges(self, setup):
+        fed, mcfg, loss_fn, evaluate = setup
+        rc = FLRunConfig(algorithm="vafl", num_clients=4, rounds=8,
+                         local=LocalSpec(batch_size=32, local_rounds=1, lr=0.1,
+                                         dp_clip=5.0, dp_noise=0.005),
+                         target_acc=0.85)
+        res = run_round_based(rc, init_params_fn=lambda k: mlp_init(mcfg, k),
+                              loss_fn=loss_fn, fed_data=fed, evaluate_fn=evaluate)
+        assert res.best_acc > 0.75, res.best_acc
+
+
+class TestParticipation:
+    def test_partial_participation_limits_reports_and_uploads(self, setup):
+        fed, mcfg, loss_fn, evaluate = setup
+        rc = FLRunConfig(algorithm="vafl", num_clients=4, rounds=6,
+                         local=LocalSpec(batch_size=32, local_rounds=1, lr=0.1),
+                         participation=0.5, target_acc=0.9)
+        res = run_round_based(rc, init_params_fn=lambda k: mlp_init(mcfg, k),
+                              loss_fn=loss_fn, fed_data=fed, evaluate_fn=evaluate)
+        assert res.comm.scalar_reports == 6 * 2          # 2 of 4 per round
+        assert res.comm.model_uploads <= 6 * 2
+        assert all(len(r.selected) <= 2 for r in res.records)
+
+    def test_full_participation_unchanged(self, setup):
+        fed, mcfg, loss_fn, evaluate = setup
+        rc = FLRunConfig(algorithm="vafl", num_clients=4, rounds=4,
+                         local=LocalSpec(batch_size=32, local_rounds=1, lr=0.1),
+                         participation=1.0, target_acc=0.9)
+        res = run_round_based(rc, init_params_fn=lambda k: mlp_init(mcfg, k),
+                              loss_fn=loss_fn, fed_data=fed, evaluate_fn=evaluate)
+        assert res.comm.scalar_reports == 4 * 4

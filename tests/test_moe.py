@@ -1,0 +1,86 @@
+"""MoE layer tests: dispatch-path equivalence, capacity behaviour, router
+properties, vocab padding (§Perf iterations 2-3 regression cover)."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.models import decoder
+from repro.models import moe as M
+from repro.models.factory import ParamFactory
+from repro.models.registry import get_smoke_config
+
+
+@pytest.fixture(scope="module")
+def moe_setup():
+    cfg = get_smoke_config("qwen3_moe_30b_a3b")
+    p = M.init_moe(ParamFactory(key=jax.random.key(0)), cfg)
+    return cfg, p
+
+
+class TestDispatchEquivalence:
+    @pytest.mark.parametrize("shape", [(2, 16), (1, 64), (4, 8)])
+    def test_sort_matches_einsum(self, moe_setup, shape):
+        cfg, p = moe_setup
+        B, S = shape
+        x = jax.random.normal(jax.random.key(1), (B, S, cfg.d_model))
+        y1, a1 = M.moe_forward(p, cfg, x, dispatch="einsum")
+        y2, a2 = M.moe_forward(p, cfg, x, dispatch="sort")
+        np.testing.assert_allclose(np.asarray(y1), np.asarray(y2),
+                                   rtol=2e-4, atol=2e-4)
+        assert float(a1) == float(a2)
+
+    def test_grads_match_across_dispatch(self, moe_setup):
+        cfg, p = moe_setup
+        x = jax.random.normal(jax.random.key(2), (2, 16, cfg.d_model))
+
+        def loss(p_, d):
+            y, aux = M.moe_forward(p_, cfg, x, dispatch=d)
+            return jnp.sum(y ** 2) + aux
+
+        g1 = jax.grad(lambda q: loss(q, "einsum"))(p)
+        g2 = jax.grad(lambda q: loss(q, "sort"))(p)
+        for a, b in zip(jax.tree.leaves(g1), jax.tree.leaves(g2)):
+            np.testing.assert_allclose(np.asarray(a), np.asarray(b),
+                                       rtol=5e-3, atol=5e-3)
+
+
+class TestRouter:
+    def test_weights_normalised_topk(self, moe_setup):
+        cfg, p = moe_setup
+        x = jax.random.normal(jax.random.key(3), (32, cfg.d_model))
+        w, ids, aux = M._route(p, cfg, x)
+        assert w.shape == (32, cfg.moe.top_k)
+        np.testing.assert_allclose(np.asarray(jnp.sum(w, -1)), 1.0, rtol=1e-3)
+        assert int(ids.max()) < cfg.moe.num_experts
+        # aux loss near 1.0 for near-uniform routing, >= 1 by Cauchy-Schwarz
+        assert float(aux) >= 0.99
+
+    def test_capacity_floor_small_groups(self, moe_setup):
+        cfg, _ = moe_setup
+        # tiny groups (decode/smoke) must not drop tokens
+        assert M._capacity(8, cfg) == 8
+        assert M._capacity(16, cfg) == 16
+        big = M._capacity(4096, cfg)
+        assert big < 4096  # capacity factor binds at scale
+        assert big >= 4096 * cfg.moe.top_k / cfg.moe.num_experts
+
+
+class TestVocabPadding:
+    def test_padded_logits_masked_and_loss_consistent(self):
+        cfg = get_smoke_config("minicpm_2b")          # vocab 512
+        cfg_pad = cfg.replace(vocab_size=509, pad_vocab_to=128)  # pads to 512
+        params = decoder.init_params(cfg_pad, jax.random.key(0))
+        toks = jax.random.randint(jax.random.key(1), (2, 8), 0, 509)
+        logits, _ = decoder.forward(cfg_pad, params, toks)
+        assert logits.shape[-1] == 512
+        pad_cols = np.asarray(logits[..., 509:], np.float32)
+        assert (pad_cols <= -1e29).all(), "padded columns must be -inf"
+        loss, _ = decoder.loss_fn(cfg_pad, params, {"tokens": toks, "labels": toks})
+        assert np.isfinite(float(loss)) and float(loss) < 20
+
+    def test_padded_vocab_multiple(self):
+        cfg = get_smoke_config("granite_moe_3b_a800m").replace(
+            vocab_size=49155, pad_vocab_to=128)
+        assert cfg.padded_vocab() == 49280
+        assert cfg.padded_vocab() % 128 == 0

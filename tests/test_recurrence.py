@@ -1,0 +1,87 @@
+"""Chunked linear recurrence vs exact sequential scan (models/recurrence)."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.models import recurrence as R
+
+
+def rand(key, shape):
+    return jax.random.normal(jax.random.key(key), shape, jnp.float32)
+
+
+@pytest.mark.parametrize("decay_per,include_current,use_u", [
+    ("head", True, False),    # Mamba2 form
+    ("dim", False, True),     # RWKV6 form
+    ("dim", True, False),
+])
+@pytest.mark.parametrize("S,chunk", [(32, 8), (33, 8), (64, 64), (17, 32)])
+def test_chunked_matches_scan(decay_per, include_current, use_u, S, chunk):
+    B, H, K, Vd = 2, 3, 8, 5
+    q, k = rand(0, (B, S, H, K)), rand(1, (B, S, H, K))
+    v = rand(2, (B, S, H, Vd))
+    la = -jnp.abs(rand(3, (B, S, H, K))) * 0.2
+    if decay_per == "head":
+        la = la[..., :1] * jnp.ones((1, 1, 1, K))
+    u = jnp.abs(rand(4, (H, K))) if use_u else None
+    y1, s1 = R.linear_recurrence(q, k, v, la, u=u, include_current=include_current,
+                                 chunk=chunk, decay_per=decay_per)
+    y2, s2 = R.linear_recurrence_scan(q, k, v, la, u=u,
+                                      include_current=include_current)
+    np.testing.assert_allclose(np.asarray(y1), np.asarray(y2), rtol=2e-4, atol=2e-4)
+    np.testing.assert_allclose(np.asarray(s1), np.asarray(s2), rtol=2e-4, atol=2e-4)
+
+
+def test_initial_state_continuation():
+    """Processing [first half] then [second half with carried state] must
+    equal processing the whole sequence — the chunked-serving invariant."""
+    B, S, H, K, Vd = 1, 32, 2, 4, 4
+    q, k = rand(0, (B, S, H, K)), rand(1, (B, S, H, K))
+    v = rand(2, (B, S, H, Vd))
+    la = -jnp.abs(rand(3, (B, S, H, K))) * 0.1
+    y_full, s_full = R.linear_recurrence(q, k, v, la, chunk=8, decay_per="dim")
+    h = S // 2
+    y1, s1 = R.linear_recurrence(q[:, :h], k[:, :h], v[:, :h], la[:, :h],
+                                 chunk=8, decay_per="dim")
+    y2, s2 = R.linear_recurrence(q[:, h:], k[:, h:], v[:, h:], la[:, h:],
+                                 initial_state=s1, chunk=8, decay_per="dim")
+    np.testing.assert_allclose(np.asarray(jnp.concatenate([y1, y2], 1)),
+                               np.asarray(y_full), rtol=2e-4, atol=2e-4)
+    np.testing.assert_allclose(np.asarray(s2), np.asarray(s_full), rtol=2e-4,
+                               atol=2e-4)
+
+
+def test_decode_step_matches_scan_tail():
+    B, S, H, K, Vd = 1, 9, 2, 4, 4
+    q, k = rand(0, (B, S, H, K)), rand(1, (B, S, H, K))
+    v = rand(2, (B, S, H, Vd))
+    la = -jnp.abs(rand(3, (B, S, H, K))) * 0.3
+    y_ref, s_ref = R.linear_recurrence_scan(q, k, v, la)
+    state = jnp.zeros((B, H, K, Vd), jnp.float32)
+    ys = []
+    for t in range(S):
+        y, state = R.recurrence_decode_step(state, q[:, t], k[:, t], v[:, t],
+                                            la[:, t], include_current=True)
+        ys.append(y)
+    np.testing.assert_allclose(np.asarray(jnp.stack(ys, 1)), np.asarray(y_ref),
+                               rtol=1e-5, atol=1e-5)
+    np.testing.assert_allclose(np.asarray(state), np.asarray(s_ref), rtol=1e-5,
+                               atol=1e-5)
+
+
+@settings(max_examples=15, deadline=None)
+@given(st.integers(min_value=1, max_value=40),
+       st.sampled_from([4, 8, 16]),
+       st.floats(min_value=0.01, max_value=2.0))
+def test_property_random_shapes_and_decay(S, chunk, decay_scale):
+    B, H, K, Vd = 1, 2, 4, 3
+    q, k = rand(10, (B, S, H, K)), rand(11, (B, S, H, K))
+    v = rand(12, (B, S, H, Vd))
+    la = -jnp.abs(rand(13, (B, S, H, K))) * decay_scale
+    la = jnp.clip(la, R.LOG_A_MIN, 0.0)
+    y1, _ = R.linear_recurrence(q, k, v, la, chunk=chunk, decay_per="dim")
+    y2, _ = R.linear_recurrence_scan(q, k, v, la)
+    np.testing.assert_allclose(np.asarray(y1), np.asarray(y2), rtol=3e-3,
+                               atol=3e-3)

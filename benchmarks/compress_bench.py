@@ -1,0 +1,79 @@
+"""Codec x algorithm sweep: uplink bytes, byte-CCR, combined CCR.
+
+    PYTHONPATH=src python -m benchmarks.compress_bench [--fast]
+
+For each (algorithm, codec) pair runs experiment "a" (3 IID clients) and
+reports best Acc, model uploads, actual uplink payload bytes, the
+within-run byte-CCR, and the combined saving vs uncompressed AFL
+(1 - (1-count_ccr)(1-byte_ccr)) — the multiplicative composition of
+gating and payload compression that motivates the subsystem
+(docs/COMPRESSION.md).  Emits a JSON artifact when asked.
+"""
+from __future__ import annotations
+
+import json
+import os
+import sys
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), ".."))
+
+from benchmarks.fl_common import BenchScale, run_experiment
+from repro.core.metrics import ccr
+
+CODECS = ("identity", "int8", "int4", "topk0.1", "topk0.1_int8")
+ALGS = ("afl", "vafl")
+
+
+def run(exp: str = "a", scale: BenchScale = None, codecs=CODECS,
+        algorithms=ALGS, mode: str = "round", out_json: str = None):
+    scale = scale or BenchScale()
+    rows = []
+    # Eq. 4 C_t0 comes from an uncompressed-AFL run; do it up front so
+    # every row uses the same denominator regardless of sweep order/content
+    baseline = run_experiment(exp, "afl", scale=scale, mode=mode,
+                              compressor="identity")
+    baseline_uploads = baseline.comm.model_uploads
+    print(f"{'alg':6s} {'codec':14s} {'best_acc':>8s} {'uploads':>8s} "
+          f"{'uplink_KB':>10s} {'byte_ccr':>9s} {'combined':>9s}")
+    for alg in algorithms:
+        for codec in codecs:
+            res = (baseline if alg == "afl" and codec == "identity"
+                   else run_experiment(exp, alg, scale=scale, mode=mode,
+                                       compressor=codec))
+            count_ccr = ccr(baseline_uploads, res.comm.model_uploads)
+            combined = 1.0 - (1.0 - count_ccr) * (1.0 - res.byte_ccr)
+            rows.append({
+                "experiment": exp, "algorithm": alg, "codec": codec,
+                "best_acc": round(res.best_acc, 4),
+                "model_uploads": res.comm.model_uploads,
+                "uplink_payload_bytes": res.comm.upload_payload_bytes,
+                "model_bytes": res.comm.model_bytes,
+                "byte_ccr": round(res.byte_ccr, 4),
+                "count_ccr": round(count_ccr, 4),
+                "combined_ccr": round(combined, 4),
+            })
+            r = rows[-1]
+            print(f"{alg:6s} {codec:14s} {r['best_acc']:8.4f} "
+                  f"{r['model_uploads']:8d} "
+                  f"{r['uplink_payload_bytes'] / 1024:10.1f} "
+                  f"{r['byte_ccr']:9.4f} {r['combined_ccr']:9.4f}")
+    if out_json:
+        os.makedirs(os.path.dirname(out_json), exist_ok=True)
+        with open(out_json, "w") as f:
+            json.dump(rows, f, indent=2)
+        print(f"-> {out_json}")
+    return rows
+
+
+if __name__ == "__main__":
+    import argparse
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--fast", action="store_true")
+    ap.add_argument("--exp", default="a")
+    ap.add_argument("--mode", default="round", choices=("round", "event"))
+    ap.add_argument("--out", default=None)
+    args = ap.parse_args()
+    scale = BenchScale(samples_per_client=400, rounds=8, test_samples=500,
+                       target_acc=0.90) if args.fast else BenchScale()
+    run(args.exp, scale=scale, mode=args.mode, out_json=args.out)

@@ -3,7 +3,7 @@
 Paper setup (§IV/§V): MNIST, small ResNet, 3 or 7 clients, IID / non-IID,
 r=5, E=1, B=32, eta=0.1, R=200 rounds, target Acc 94%.
 
-CPU-budget adaptation (documented in EXPERIMENTS.md): synthetic-MNIST
+CPU-budget adaptation (BenchScale defaults below): synthetic-MNIST
 stands in for MNIST (no network access); the default client model is the
 small MLP with the CNN available via --model cnn; rounds and per-client
 sample counts are scaled down (the paper's *comparisons* — comm counts to
@@ -66,6 +66,8 @@ def build_problem(model: str = "mlp", scale: BenchScale = None,
 
 def run_experiment(exp: str, alg: str, *, model: str = "mlp",
                    scale: BenchScale = None, mode: str = "round",
+                   compressor: str = "identity",
+                   broadcast_compressor: str = None,
                    verbose: bool = False):
     scale = scale or BenchScale()
     n, iid = EXPERIMENTS[exp]
@@ -74,7 +76,8 @@ def run_experiment(exp: str, alg: str, *, model: str = "mlp",
         algorithm=alg, num_clients=n, rounds=scale.rounds,
         local=LocalSpec(batch_size=32, local_epochs=1,
                         local_rounds=scale.local_rounds, lr=0.1),
-        target_acc=scale.target_acc, seed=scale.seed, events_per_eval=n)
+        target_acc=scale.target_acc, seed=scale.seed, events_per_eval=n,
+        compressor=compressor, broadcast_compressor=broadcast_compressor)
     runner = run_round_based if mode == "round" else run_event_driven
     return runner(rc, init_params_fn=lambda k: init(mcfg, k), loss_fn=loss_fn,
                   fed_data=fed, evaluate_fn=evaluate, verbose=verbose)

@@ -6,12 +6,14 @@ Sections:
   [table3]   paper Table III — comm times + CCR, experiments a-d
   [fig4]     paper Fig. 4    — convergence curves per algorithm
   [fig5/6]   paper Fig. 5/6  — per-client + cross-experiment VAFL Acc
+  [compress] codec x algorithm uplink-bytes/CCR sweep (repro.compress)
   [kernels]  grad_diff_norm / linear_scan microbenchmarks
   [roofline] three-term roofline per (arch x shape) from dry-run artifacts
   [gated]    cross-pod gated-collective accounting (multi-pod artifacts)
 
---fast shrinks rounds/samples (CI-friendly); default is the EXPERIMENTS.md
-configuration; --full approaches paper scale (slow on CPU).
+--fast shrinks rounds/samples (CI-friendly); default is the BenchScale
+configuration in benchmarks/fl_common.py; --full approaches paper scale
+(slow on CPU).
 """
 from __future__ import annotations
 
@@ -70,6 +72,14 @@ def main() -> None:
         from benchmarks.fl_common import BenchScale as BS
         ab("d", BS(samples_per_client=600, rounds=12, test_samples=500,
                    target_acc=0.94), corrupt_clients=2)
+        print()
+
+    if "compress" not in skip:
+        print("== [compress] codec x algorithm uplink sweep ==")
+        from benchmarks.compress_bench import run as cb
+        cb(scale=scale,
+           out_json="artifacts/compress.json" if os.path.isdir("artifacts")
+           else None)
         print()
 
     if "kernels" not in skip:

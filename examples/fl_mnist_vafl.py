@@ -3,7 +3,12 @@ non-IID data, CNN client model, a few hundred federated rounds comparing
 AFL / EAFLM / VAFL — the full Table-III pipeline on one machine.
 
     PYTHONPATH=src python examples/fl_mnist_vafl.py [--rounds 200] \
-        [--model cnn|mlp] [--mode round|event]
+        [--model cnn|mlp] [--mode round|event] [--compress topk0.1_int8] \
+        [--broadcast-compress int8]
+
+--compress ships codec payloads (repro.compress, docs/COMPRESSION.md)
+instead of full fp32 models on accepted uploads; the summary then shows
+byte-CCR next to the paper's count-CCR.
 """
 import argparse
 import os
@@ -29,6 +34,11 @@ def main():
     ap.add_argument("--model", default="mlp", choices=("mlp", "cnn"))
     ap.add_argument("--mode", default="round", choices=("round", "event"))
     ap.add_argument("--target", type=float, default=0.94)
+    ap.add_argument("--compress", default="identity",
+                    help="upload codec spec (identity|int8|int4|topk0.1|"
+                         "topk0.1_int8|...)")
+    ap.add_argument("--broadcast-compress", default=None,
+                    help="optional downlink codec spec")
     args = ap.parse_args()
 
     xtr, ytr, xte, yte = synthetic_mnist(args.clients * args.samples + 2000,
@@ -50,7 +60,9 @@ def main():
                          local=LocalSpec(batch_size=32, local_epochs=1,
                                          local_rounds=1, lr=0.1),
                          target_acc=args.target, eval_every=1,
-                         events_per_eval=args.clients)
+                         events_per_eval=args.clients,
+                         compressor=args.compress,
+                         broadcast_compressor=args.broadcast_compress)
         print(f"\n=== {alg.upper()} ===")
         results[alg] = runner(rc, init_params_fn=lambda k: init(mcfg, k),
                               loss_fn=loss_fn, fed_data=fed,
@@ -59,11 +71,13 @@ def main():
     print("\n=== summary (experiment d, scaled) ===")
     c0 = results["afl"].uploads_to_target or results["afl"].comm.model_uploads
     print(f"{'alg':8s} {'best_acc':>9s} {'comm_times':>11s} {'CCR':>7s} "
-          f"{'hit target':>11s}")
+          f"{'byte_CCR':>9s} {'uplink_KB':>10s} {'hit target':>11s}")
     for alg, res in results.items():
         c1 = res.uploads_to_target or res.comm.model_uploads
         print(f"{alg:8s} {res.best_acc:9.4f} {c1:11d} "
-              f"{ccr(c0, c1):7.2%} {str(res.uploads_to_target is not None):>11s}")
+              f"{ccr(c0, c1):7.2%} {res.byte_ccr:9.2%} "
+              f"{res.comm.upload_payload_bytes / 1024:10.1f} "
+              f"{str(res.uploads_to_target is not None):>11s}")
 
 
 if __name__ == "__main__":

@@ -1,0 +1,64 @@
+"""Magnitude top-k sparsification codec.
+
+Classic gradient sparsification (Lin et al., Deep Gradient Compression):
+keep the k largest-magnitude entries of the flattened update, ship an
+int32 index plane + fp32 value plane.  Exact-k (ties broken by
+jax.lax.top_k order), deterministic — no stochastic component, so the
+seed is unused here.  Composes with int8 value quantization in
+repro.compress.composed.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.compress.base import Codec, Payload, register
+
+
+def flatten_tree(tree):
+    leaves, treedef = jax.tree.flatten(tree)
+    flat = jnp.concatenate([jnp.ravel(x).astype(jnp.float32) for x in leaves]) \
+        if len(leaves) > 1 else jnp.ravel(leaves[0]).astype(jnp.float32)
+    return flat, treedef, [x.shape for x in leaves], [x.dtype for x in leaves]
+
+
+def unflatten_tree(flat, treedef, shapes, dtypes):
+    leaves, off = [], 0
+    for shape, dtype in zip(shapes, dtypes):
+        n = int(np.prod(shape)) if shape else 1
+        leaves.append(flat[off:off + n].reshape(shape).astype(dtype))
+        off += n
+    return jax.tree.unflatten(treedef, leaves)
+
+
+class TopKCodec(Codec):
+    """Keep the frac·n largest-|x| entries of the flat update."""
+
+    def __init__(self, frac: float = 0.1):
+        assert 0.0 < frac <= 1.0, frac
+        self.frac = frac
+        self.name = f"topk{frac:g}"
+
+    def k_of(self, n: int) -> int:
+        return max(1, int(round(self.frac * n)))
+
+    def encode(self, tree, *, seed: int = 0) -> Payload:
+        flat, treedef, shapes, dtypes = flatten_tree(tree)
+        n = int(flat.shape[0])
+        k = self.k_of(n)
+        _, idx = jax.lax.top_k(jnp.abs(flat), k)
+        planes = {"idx": np.asarray(idx, np.int32),
+                  "val": np.asarray(flat[idx], np.float32)}
+        meta = {"treedef": treedef, "shapes": shapes, "dtypes": dtypes, "n": n}
+        return Payload(self.name, planes, meta=meta)
+
+    def decode(self, payload: Payload):
+        m = payload.meta
+        flat = jnp.zeros(m["n"], jnp.float32).at[
+            jnp.asarray(payload.planes["idx"])].set(
+            jnp.asarray(payload.planes["val"]))
+        return unflatten_tree(flat, m["treedef"], m["shapes"], m["dtypes"])
+
+
+register("topk")(TopKCodec)

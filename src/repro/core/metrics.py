@@ -1,5 +1,6 @@
 """FL experiment metrics: communication accounting (the paper's headline
-numbers), CCR (Eq. 4), accuracy tracking, time-to-accuracy."""
+numbers), CCR (Eq. 4) as both a count ratio and a byte-accurate ratio
+(repro.compress payloads), accuracy tracking, time-to-accuracy."""
 from __future__ import annotations
 
 from dataclasses import dataclass, field
@@ -10,25 +11,47 @@ from typing import List, Optional
 class CommStats:
     """Communication accounting.  The paper's 'communication times' = model
     uploads; scalar V reports are tracked separately (they are what VAFL
-    trades the heavy uploads for)."""
+    trades the heavy uploads for).  When a codec is active the runtimes
+    pass actual payload sizes via ``nbytes``; otherwise a transfer costs
+    the full fp32 model (``model_bytes``)."""
     model_uploads: int = 0
     scalar_reports: int = 0
     broadcasts: int = 0
-    model_bytes: int = 0          # bytes per model transfer
+    model_bytes: int = 0          # bytes per *uncompressed* model transfer
     uplink_bytes: int = 0
     downlink_bytes: int = 0
+    upload_payload_bytes: int = 0     # actual on-the-wire upload bytes
 
-    def record_upload(self, n: int = 1):
+    def record_upload(self, n: int = 1, nbytes: Optional[int] = None):
+        """n uploads costing ``nbytes`` total (full models when None)."""
         self.model_uploads += n
-        self.uplink_bytes += n * self.model_bytes
+        b = n * self.model_bytes if nbytes is None else int(nbytes)
+        self.uplink_bytes += b
+        self.upload_payload_bytes += b
 
     def record_report(self, n: int = 1):
         self.scalar_reports += n
         self.uplink_bytes += n * 4  # one fp32 scalar
 
-    def record_broadcast(self, n: int = 1):
+    def record_broadcast(self, n: int = 1, nbytes: Optional[int] = None):
         self.broadcasts += n
-        self.downlink_bytes += n * self.model_bytes
+        b = n * self.model_bytes if nbytes is None else int(nbytes)
+        self.downlink_bytes += b
+
+    @property
+    def broadcast_payload_bytes(self) -> int:
+        """Actual on-the-wire broadcast bytes.  Alias: the downlink carries
+        nothing but model broadcasts (unlike the uplink, where
+        upload_payload_bytes excludes the scalar V reports)."""
+        return self.downlink_bytes
+
+    @property
+    def byte_ccr(self) -> float:
+        """Eq. 4 on bytes *within* this run: 1 - (payload bytes on the
+        wire) / (bytes the same uploads would cost uncompressed).  0 for
+        identity; composes with the cross-run count CCR (gating)."""
+        full = self.model_uploads * self.model_bytes
+        return ccr(full, self.upload_payload_bytes)
 
 
 def ccr(c_t0: float, c_t1: float) -> float:
@@ -64,6 +87,13 @@ class RunResult:
     @property
     def best_acc(self) -> float:
         return max((r.global_acc for r in self.records), default=0.0)
+
+    @property
+    def byte_ccr(self) -> float:
+        """Within-run byte compression of the upload path (codec effect);
+        multiply through (1 - count_ccr) for the combined gating x codec
+        saving vs an uncompressed AFL baseline."""
+        return self.comm.byte_ccr
 
     def finalize_target(self):
         for r in self.records:

@@ -17,6 +17,13 @@ Two execution modes:
 
 Algorithms: "afl" (plain async, every finished client uploads),
 "vafl" (Eq. 1+2 gating), "eaflm" (Eq. 3 gating), "fedavg" (sync barrier).
+
+Both runtimes accept an update codec (``FLRunConfig.compressor``, see
+repro.compress / docs/COMPRESSION.md): accepted uploads then ship the
+codec's payload (delta vs the client's download base, with per-client
+error feedback) instead of the full fp32 model, and CommStats records
+the actual wire bytes — gating (count CCR) and payload compression
+(byte CCR) compose multiplicatively.
 """
 from __future__ import annotations
 
@@ -27,8 +34,9 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.common.pytree import (stacked_index, stacked_set, tree_bytes,
-                                 tree_stack, tree_sq_norm)
+from repro.common.pytree import (stacked_index, tree_bytes, tree_stack,
+                                 tree_sq_norm)
+from repro.compress import ErrorFeedback, compress_update, get_codec
 from repro.core import value as value_lib
 from repro.core.aggregation import (aggregate_or_keep, async_mix,
                                     staleness_weight)
@@ -53,9 +61,16 @@ class FLRunConfig:
     # is treated as ONE calibrated constant (m folded into beta, m=1),
     # because m=N's quadratic growth silences the rule entirely for larger
     # federations on our testbed.  beta=1e-2 reproduces the paper's 36-58%
-    # suppression range across experiments a-d (EXPERIMENTS.md).
+    # suppression range across experiments a-d (benchmarks/table3_ccr.py).
     eaflm_alpha: float = 0.98
     eaflm_beta: float = 1e-2
+    # update compression (repro.compress): codec spec for accepted uploads
+    # ("identity", "int8", "int4", "topk0.1", "topk0.1_int8", ...) and an
+    # optional codec for the model broadcast (no error feedback there —
+    # clients train from the lossy model they actually received).
+    compressor: str = "identity"
+    broadcast_compressor: Optional[str] = None
+    error_feedback: bool = True        # SGD-EF residuals on the upload path
     # partial participation: fraction of clients in the round's set S
     # (Algorithm 1 "for each i in S"); 1.0 = all clients every round
     participation: float = 1.0
@@ -71,6 +86,61 @@ def _value_fn(cfg: FLRunConfig):
         return cfg.value_backend
     from repro.common.pytree import tree_sq_diff_norm
     return tree_sq_diff_norm
+
+
+# ------------------------------------------------- compression plumbing ---
+
+def _make_codecs(run_cfg: FLRunConfig):
+    codec = get_codec(run_cfg.compressor)
+    bcodec = None
+    if run_cfg.broadcast_compressor not in (None, "", "identity", "none"):
+        bcodec = get_codec(run_cfg.broadcast_compressor)
+    return codec, bcodec, ErrorFeedback(enabled=run_cfg.error_feedback)
+
+
+_UPLOAD, _BROADCAST = 1, 2
+
+
+def _enc_seed(run_cfg: FLRunConfig, step: int, i: int, kind: int) -> int:
+    """Deterministic per-transfer seed: payloads are reproducible from the
+    run seed alone, and stochastic rounding decorrelates across transfers.
+    Multiplicative mixing over (seed, kind, step, client) so distinct
+    transfers never share a seed (additive offsets would collide, e.g.
+    round-t broadcast vs a later client upload)."""
+    h = (run_cfg.seed ^ (kind * 0x9E3779B9)) & 0xFFFFFFFF
+    h = (h * 1_000_003 + step) & 0xFFFFFFFF
+    h = (h * 1_000_003 + i) & 0xFFFFFFFF
+    return h
+
+
+def _tree_delta(a, b):
+    return jax.tree.map(
+        lambda x, y: x.astype(jnp.float32) - y.astype(jnp.float32), a, b)
+
+
+def _tree_apply_delta(base, delta):
+    return jax.tree.map(
+        lambda b, d: (b.astype(jnp.float32) + d.astype(jnp.float32)
+                      ).astype(b.dtype), base, delta)
+
+
+def _compressed_upload(codec, ef, comm, base, client_tree, i, seed):
+    """One client's compressed upload: encode codec(delta vs ``base``, the
+    model the client downloaded) with error feedback, account the wire
+    bytes, and return the reconstruction the server actually receives."""
+    delta = _tree_delta(client_tree, base)
+    payload, decoded = compress_update(codec, ef, i, delta, seed=seed)
+    comm.record_upload(1, nbytes=payload.nbytes)
+    return _tree_apply_delta(base, decoded)
+
+
+def _compressed_broadcast(bcodec, comm, params, n, seed):
+    """Encode one model broadcast to ``n`` clients; returns the lossy
+    model they actually receive (no EF on the downlink — clients train
+    from what arrived)."""
+    bp = bcodec.encode(params, seed=seed)
+    comm.record_broadcast(n, nbytes=n * bp.nbytes)
+    return bcodec.decode(bp)
 
 
 # =========================================================== round-based ===
@@ -102,6 +172,8 @@ def run_round_based(run_cfg: FLRunConfig, *, init_params_fn, loss_fn,
             "mask": jnp.asarray(fed_data.mask)}
 
     comm = CommStats(model_bytes=tree_bytes(global_params))
+    codec, bcodec, ef = _make_codecs(run_cfg)
+    client_base = global_params   # what clients actually received last
     records = []
     batch_eval = jax.jit(jax.vmap(client_eval_fn))
 
@@ -134,8 +206,7 @@ def run_round_based(run_cfg: FLRunConfig, *, init_params_fn, loss_fn,
                 mask = part & (v_np >= v_part.max())
             vals_list = [float(v) for v in v_np]
         elif alg == "eaflm":
-            delta = jax.tree.map(lambda a, b: a.astype(jnp.float32) - b.astype(jnp.float32),
-                                 prev_global, prev_prev_global)
+            delta = _tree_delta(prev_global, prev_prev_global)
             thr = value_lib.eaflm_threshold([delta], run_cfg.eaflm_alpha,
                                             run_cfg.eaflm_beta, 1)
             norms = grad_norms_fn(eff_grads)
@@ -149,16 +220,35 @@ def run_round_based(run_cfg: FLRunConfig, *, init_params_fn, loss_fn,
             norms_np = np.asarray(grad_norms_fn(eff_grads), np.float64)
             norms_np[~part] = -np.inf
             mask = norms_np == norms_np.max()
-        comm.record_upload(int(mask.sum()))
+        if codec.is_identity:
+            comm.record_upload(int(mask.sum()))
+        else:
+            # each selected client ships codec(delta vs its download base)
+            # with error feedback; the server aggregates reconstructions
+            sel = [int(i) for i in np.flatnonzero(mask)]
+            recon = [_compressed_upload(codec, ef, comm, client_base,
+                                        stacked_index(stacked, i), i,
+                                        _enc_seed(run_cfg, t, i, _UPLOAD))
+                     for i in sel]
+            if sel:   # one scatter per leaf, not one stack copy per client
+                idx = jnp.asarray(sel)
+                stacked = jax.tree.map(lambda s, u: s.at[idx].set(u),
+                                       stacked, tree_stack(recon))
 
         prev_prev_global = prev_global
         prev_global = global_params
         global_params = aggregate_or_keep(global_params, stacked,
                                           jnp.asarray(mask), counts)
         # broadcast the new global model to every client
-        comm.record_broadcast(N)
+        if bcodec is None:
+            comm.record_broadcast(N)
+            client_base = global_params
+        else:
+            client_base = _compressed_broadcast(
+                bcodec, comm, global_params, N,
+                _enc_seed(run_cfg, t, 0, _BROADCAST))
         stacked = jax.tree.map(lambda x: jnp.broadcast_to(x, (N,) + x.shape),
-                               global_params)
+                               client_base)
         prev_grads = eff_grads
 
         if t % run_cfg.eval_every == 0:
@@ -188,10 +278,14 @@ def run_event_driven(run_cfg: FLRunConfig, *, init_params_fn, loss_fn,
     N = run_cfg.num_clients
     client_eval_fn = client_eval_fn or evaluate_fn
     speed = speed or SpeedModel.paper_testbed(N, run_cfg.seed)
+    if alg == "fedavg":   # sync barrier is its own runtime; skip async setup
+        return _run_sync_barrier(run_cfg, init_params_fn, loss_fn, fed_data,
+                                 evaluate_fn, speed, verbose)
     rng = jax.random.key(run_cfg.seed)
     rng, krng = jax.random.split(rng)
     global_params = init_params_fn(krng)
     comm = CommStats(model_bytes=tree_bytes(global_params))
+    codec, bcodec, ef = _make_codecs(run_cfg)
     sq_diff = _value_fn(run_cfg)
 
     # single-client jitted update (vmapped update over a size-1 stack)
@@ -213,10 +307,6 @@ def run_event_driven(run_cfg: FLRunConfig, *, init_params_fn, loss_fn,
     records: list = []
     total_events = run_cfg.rounds * N
     sched = EventScheduler(N, speed)
-
-    if alg == "fedavg":
-        return _run_sync_barrier(run_cfg, init_params_fn, loss_fn, fed_data,
-                                 evaluate_fn, speed, verbose)
 
     value_one = jax.jit(lambda gp, gc, acc: value_lib.communication_value(
         gp, gc, acc, N, sq_diff_fn=sq_diff))
@@ -241,27 +331,39 @@ def run_event_driven(run_cfg: FLRunConfig, *, init_params_fn, loss_fn,
             finite = known_V[np.isfinite(known_V)]
             upload = V_i >= finite.mean() if len(finite) else True
         elif alg == "eaflm":
-            delta = jax.tree.map(lambda a, b: a.astype(jnp.float32) - b.astype(jnp.float32),
-                                 prev_global, prev_prev_global)
+            delta = _tree_delta(prev_global, prev_prev_global)
             thr = float(value_lib.eaflm_threshold([delta], run_cfg.eaflm_alpha,
                                                   run_cfg.eaflm_beta, 1))
             comm.record_report(1)
             upload = float(tree_sq_norm(eff_grad)) > thr
 
         if upload:
+            if codec.is_identity:
+                recon = newp
+                comm.record_upload(1)
+            else:
+                # ship codec(delta vs the model this client downloaded);
+                # the server mixes the reconstruction it actually received
+                recon = _compressed_upload(
+                    codec, ef, comm, client_params[i], newp, i,
+                    _enc_seed(run_cfg, ev, i, _UPLOAD))
             staleness = server_version - model_version[i]
             s = float(staleness_weight(staleness, run_cfg.staleness_kind))
             prev_prev_global = prev_global
             prev_global = global_params
-            global_params = async_mix(global_params, newp, run_cfg.mix_rate * s)
+            global_params = async_mix(global_params, recon, run_cfg.mix_rate * s)
             server_version += 1
-            comm.record_upload(1)
 
         # client downloads the latest global model and goes again
-        client_params[i] = global_params
+        if bcodec is None:
+            client_params[i] = global_params
+            comm.record_broadcast(1)
+        else:
+            client_params[i] = _compressed_broadcast(
+                bcodec, comm, global_params, 1,
+                _enc_seed(run_cfg, ev, i, _BROADCAST))
         model_version[i] = server_version
         prev_grads[i] = eff_grad
-        comm.record_broadcast(1)
         sched.schedule(i)
 
         if (ev + 1) % run_cfg.events_per_eval == 0:
@@ -280,12 +382,16 @@ def run_event_driven(run_cfg: FLRunConfig, *, init_params_fn, loss_fn,
 
 def _run_sync_barrier(run_cfg, init_params_fn, loss_fn, fed_data, evaluate_fn,
                       speed, verbose):
-    """Synchronous FedAvg with a round barrier — the idle-time baseline."""
+    """Synchronous FedAvg with a round barrier — the idle-time baseline.
+    Honors the same codec config as the async runtimes: uploads ship
+    codec(delta vs the broadcast base) with error feedback."""
     N = run_cfg.num_clients
     rng = jax.random.key(run_cfg.seed)
     rng, krng = jax.random.split(rng)
     global_params = init_params_fn(krng)
     comm = CommStats(model_bytes=tree_bytes(global_params))
+    codec, bcodec, ef = _make_codecs(run_cfg)
+    client_base = global_params
     local_update = make_local_update(loss_fn, run_cfg.local)
     data = {"images": jnp.asarray(fed_data.images),
             "labels": jnp.asarray(fed_data.labels),
@@ -297,15 +403,28 @@ def _run_sync_barrier(run_cfg, init_params_fn, loss_fn, fed_data, evaluate_fn,
     for t in range(1, run_cfg.rounds + 1):
         rng, urng = jax.random.split(rng)
         stacked = jax.tree.map(lambda x: jnp.broadcast_to(x, (N,) + x.shape),
-                               global_params)
+                               client_base)
         stacked, _, _ = local_update(stacked, data, urng)
         round_times = np.array([speed.sample(c) for c in range(N)])
         now += round_times.max()          # barrier: wait for the straggler
         busy += round_times
-        comm.record_upload(N)
-        comm.record_broadcast(N)
+        if codec.is_identity:
+            comm.record_upload(N)
+        else:
+            stacked = tree_stack(   # every client uploads in fedavg
+                [_compressed_upload(codec, ef, comm, client_base,
+                                    stacked_index(stacked, i), i,
+                                    _enc_seed(run_cfg, t, i, _UPLOAD))
+                 for i in range(N)])
         global_params = aggregate_or_keep(global_params, stacked,
                                           jnp.ones(N, bool), counts)
+        if bcodec is None:
+            comm.record_broadcast(N)
+            client_base = global_params
+        else:
+            client_base = _compressed_broadcast(
+                bcodec, comm, global_params, N,
+                _enc_seed(run_cfg, t, 0, _BROADCAST))
         if t % run_cfg.eval_every == 0:
             acc = float(evaluate_fn(global_params))
             records.append(RoundRecord(round=t, time=now, global_acc=acc,

@@ -20,6 +20,18 @@ from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 
 from repro.models.factory import is_abstract_leaf
 
+
+def make_mesh(axis_shapes, axis_names) -> Mesh:
+    """Version-portable jax.make_mesh: newer jax wants explicit Auto axis
+    types (manual-axes default changed); older jax (< 0.5) has no
+    jax.sharding.AxisType at all.  Single construction point so callers
+    and subprocess test snippets don't hard-code either API."""
+    if hasattr(jax.sharding, "AxisType"):
+        return jax.make_mesh(
+            axis_shapes, axis_names,
+            axis_types=tuple(jax.sharding.AxisType.Auto for _ in axis_names))
+    return jax.make_mesh(axis_shapes, axis_names)
+
 # FSDP x TP: d_model dim sharded over data (ZeRO-style), ff/heads/vocab over
 # model (tensor parallel); experts over model (expert parallel).
 TRAIN_RULES: Dict[str, Optional[str]] = {

@@ -12,6 +12,8 @@ from __future__ import annotations
 
 import jax
 
+from repro.distributed.sharding import make_mesh
+
 # v5e constants used by the roofline (benchmarks/roofline.py)
 PEAK_FLOPS_BF16 = 197e12        # per chip
 HBM_BW = 819e9                  # bytes/s per chip
@@ -23,9 +25,7 @@ def make_production_mesh(*, multi_pod: bool = False):
     ("pod","data","model") — "pod" is the federated-silo axis for VAFL."""
     shape = (2, 16, 16) if multi_pod else (16, 16)
     axes = ("pod", "data", "model") if multi_pod else ("data", "model")
-    return jax.make_mesh(
-        shape, axes,
-        axis_types=(jax.sharding.AxisType.Auto,) * len(axes))
+    return make_mesh(shape, axes)
 
 
 def make_host_mesh(*, pods: int = 2):
@@ -34,9 +34,7 @@ def make_host_mesh(*, pods: int = 2):
     n = jax.device_count()
     if n % pods:
         pods = 1
-    return jax.make_mesh(
-        (pods, 1, n // pods), ("pod", "data", "model"),
-        axis_types=(jax.sharding.AxisType.Auto,) * 3)
+    return make_mesh((pods, 1, n // pods), ("pod", "data", "model"))
 
 
 def axis_size(mesh, name: str) -> int:

@@ -1,0 +1,28 @@
+"""Fallback for the optional hypothesis [test] extra (pyproject.toml).
+
+With hypothesis installed this re-exports the real ``given``/``settings``/
+``strategies``.  Without it, only the ``@given`` property tests skip —
+every strategy expression evaluates to an inert placeholder at decoration
+time, so the rest of the importing module still collects and runs.
+"""
+try:
+    from hypothesis import given, settings, strategies as st  # noqa: F401
+except ImportError:
+    import pytest
+
+    class _AnyStrategy:
+        """Absorbs any strategy expression (st.floats(...), st.lists(x))."""
+
+        def __getattr__(self, name):
+            return lambda *a, **k: self
+
+        def __call__(self, *a, **k):
+            return self
+
+    st = _AnyStrategy()
+
+    def settings(*a, **k):
+        return lambda f: f
+
+    def given(*a, **k):
+        return pytest.mark.skip(reason="hypothesis not installed")

@@ -5,8 +5,9 @@ import tempfile
 import jax
 import jax.numpy as jnp
 import numpy as np
-import pytest
-from hypothesis import given, settings, strategies as st
+
+# optional [test] extra: property tests skip without it (_hypothesis_shim)
+from _hypothesis_shim import given, settings, st
 
 from repro.checkpoint import restore, save
 from repro.core.scheduler import EventScheduler, SpeedModel

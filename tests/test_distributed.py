@@ -50,8 +50,8 @@ class TestHLOParser:
             from jax.sharding import NamedSharding, PartitionSpec as P
             import sys; sys.path.insert(0, "src")
             from repro.distributed.hlo import collective_bytes
-            mesh = jax.make_mesh((8,), ("model",),
-                                 axis_types=(jax.sharding.AxisType.Auto,))
+            from repro.distributed.sharding import make_mesh
+            mesh = make_mesh((8,), ("model",))
             x = jax.ShapeDtypeStruct((128, 256), jnp.float32)
             w = jax.ShapeDtypeStruct((256, 512), jnp.float32)
             f = jax.jit(lambda a, b: a @ b,
@@ -111,8 +111,8 @@ class TestGatedCollective:
             import jax, jax.numpy as jnp, numpy as np, json
             from jax.sharding import PartitionSpec as P
             from repro.distributed.gated import make_gated_allreduce
-            mesh = jax.make_mesh((8,), ("pod",),
-                                 axis_types=(jax.sharding.AxisType.Auto,))
+            from repro.distributed.sharding import make_mesh
+            mesh = make_mesh((8,), ("pod",))
             fn = make_gated_allreduce(mesh, {"w": P(None)})
             upd = {"w": jnp.arange(8.0)[:, None] * jnp.ones((8, 3))}
             vals = jnp.array([0., 0., 0., 0., 9., 9., 0., 0.])

@@ -1,0 +1,137 @@
+"""Async engine scale benchmark (docs/ASYNC_ENGINE.md): events/sec of the
+batched execution engine vs the sequential per-event loop, and
+accuracy-vs-uploads at scale, sweeping N in {64, 256, 1024} heterogeneous
+clients on the paper-testbed speed model.
+
+    PYTHONPATH=src python -m benchmarks.async_engine_bench \
+        [--smoke] [--ns 64,256,1024] [--buffer 16] [--json out.json]
+
+Throughput is steady-state: each configuration is run once to populate the
+jit caches, then timed.  The bit-match column verifies the engine contract
+(window=1/buffer=1 reproduces the sequential runtime's upload counts).
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import sys
+import time
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), ".."))
+
+
+def _build(N, samples_per_client, test_samples, seed=0):
+    from repro.core.client import (make_evaluator,
+                                   make_weighted_classifier_loss)
+    from repro.data.partition import iid_partition
+    from repro.data.synthetic import synthetic_mnist
+    from repro.models.cnn import MLPConfig, mlp_forward, mlp_init
+    xtr, ytr, xte, yte = synthetic_mnist(
+        max(N * samples_per_client, 2000), test_samples, seed=seed)
+    fed = iid_partition(xtr, ytr, N, samples_per_client=samples_per_client,
+                        seed=seed)
+    mcfg = MLPConfig(hidden=(32,))
+    loss_fn = make_weighted_classifier_loss(mlp_forward, mcfg)
+    evaluate = make_evaluator(mlp_forward, mcfg, xte, yte,
+                              batch=min(500, test_samples))
+    return fed, mcfg, mlp_init, loss_fn, evaluate
+
+
+def _run(problem, alg, engine, N, rounds, *, seed=0, events_per_eval=None,
+         **cfg_kw):
+    from repro.core import FLRunConfig, run_event_driven
+    from repro.core.client import LocalSpec
+    fed, mcfg, init, loss_fn, evaluate = problem
+    rc = FLRunConfig(
+        algorithm=alg, num_clients=N, rounds=rounds,
+        local=LocalSpec(batch_size=32, local_epochs=1, local_rounds=1,
+                        lr=0.1),
+        target_acc=0.99, seed=seed, engine=engine,
+        events_per_eval=events_per_eval or 10 ** 9, **cfg_kw)
+    t0 = time.perf_counter()
+    res = run_event_driven(rc, init_params_fn=lambda k: init(mcfg, k),
+                           loss_fn=loss_fn, fed_data=fed,
+                           evaluate_fn=evaluate)
+    return res, time.perf_counter() - t0
+
+
+def run(Ns=(64, 256, 1024), *, smoke=False, buffer_size=16, out_json=None):
+    if smoke:
+        Ns, buffer_size = (32, 64), 8
+    rows = []
+    print(f"{'N':>5s} {'engine':>10s} {'events':>7s} {'ev/s':>9s} "
+          f"{'speedup':>8s} {'acc K=1/K':>11s} {'upl K=1/K':>9s} "
+          f"{'bitmatch':>9s}")
+    for N in Ns:
+        spc = 16 if N >= 1024 else 24
+        problem = _build(N, spc, 256 if smoke else 500)
+        seq_rounds = 1 if N >= 1024 else 2
+        bat_rounds = 2 if smoke else max(4, 2048 // N)
+
+        # steady state: one warm lap per engine, then the timed lap
+        _run(problem, "afl", "sequential", N, 1)
+        _, dt = _run(problem, "afl", "sequential", N, seq_rounds)
+        seq_eps = seq_rounds * N / dt
+        _run(problem, "afl", "batched", N, 1, buffer_size=buffer_size)
+        _, dt = _run(problem, "afl", "batched", N, bat_rounds,
+                     buffer_size=buffer_size)
+        bat_eps = bat_rounds * N / dt
+
+        # the engine contract: window=1/buffer=1 replays the per-event loop
+        s1, _ = _run(problem, "vafl", "sequential", N, 1)
+        b1, _ = _run(problem, "vafl", "batched", N, 1, max_batch=1,
+                     buffer_size=1)
+        bitmatch = s1.comm.model_uploads == b1.comm.model_uploads
+
+        # accuracy-vs-uploads at scale: gated vafl, same event budget with
+        # per-arrival mixing (K=1) and through the buffer (K=buffer_size)
+        acc_rounds = 2 if smoke else (2 if N >= 1024 else 4)
+        va1, _ = _run(problem, "vafl", "batched", N, acc_rounds,
+                      buffer_size=1, events_per_eval=N)
+        vak, _ = _run(problem, "vafl", "batched", N, acc_rounds,
+                      buffer_size=buffer_size, events_per_eval=N)
+        speedup = bat_eps / seq_eps
+        print(f"{N:5d} {'sequential':>10s} {seq_rounds * N:7d} "
+              f"{seq_eps:9.1f} {'1.0x':>8s}")
+        print(f"{N:5d} {'batched':>10s} {bat_rounds * N:7d} "
+              f"{bat_eps:9.1f} {speedup:7.1f}x "
+              f"{va1.best_acc:.3f}/{vak.best_acc:.3f} "
+              f"{va1.comm.model_uploads:4d}/{vak.comm.model_uploads:4d} "
+              f"{str(bitmatch):>9s}")
+        rows.append({
+            "N": N, "buffer_size": buffer_size,
+            "sequential_events_per_sec": round(seq_eps, 1),
+            "batched_events_per_sec": round(bat_eps, 1),
+            "speedup": round(speedup, 2),
+            "vafl_k1_best_acc": round(va1.best_acc, 4),
+            "vafl_k1_uploads": va1.comm.model_uploads,
+            "vafl_buffered_best_acc": round(vak.best_acc, 4),
+            "vafl_buffered_uploads": vak.comm.model_uploads,
+            "window1_buffer1_upload_bitmatch": bitmatch,
+        })
+    if out_json:
+        os.makedirs(os.path.dirname(out_json), exist_ok=True)
+        with open(out_json, "w") as f:
+            json.dump(rows, f, indent=2)
+        print(f"[json] {out_json}")
+    return rows
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--smoke", action="store_true",
+                    help="tiny sweep (N=32,64) for CI")
+    ap.add_argument("--ns", default="64,256,1024",
+                    help="comma list of client counts")
+    ap.add_argument("--buffer", type=int, default=16,
+                    help="FedBuff buffer size K for the batched engine")
+    ap.add_argument("--json", default=None)
+    args = ap.parse_args()
+    run(tuple(int(n) for n in args.ns.split(",")), smoke=args.smoke,
+        buffer_size=args.buffer, out_json=args.json)
+
+
+if __name__ == "__main__":
+    main()

@@ -7,6 +7,7 @@ Sections:
   [fig4]     paper Fig. 4    — convergence curves per algorithm
   [fig5/6]   paper Fig. 5/6  — per-client + cross-experiment VAFL Acc
   [compress] codec x algorithm uplink-bytes/CCR sweep (repro.compress)
+  [engine]   batched async engine events/sec + accuracy at N up to 1024
   [kernels]  grad_diff_norm / linear_scan microbenchmarks
   [roofline] three-term roofline per (arch x shape) from dry-run artifacts
   [gated]    cross-pod gated-collective accounting (multi-pod artifacts)
@@ -80,6 +81,16 @@ def main() -> None:
         cb(scale=scale,
            out_json="artifacts/compress.json" if os.path.isdir("artifacts")
            else None)
+        print()
+
+    if "engine" not in skip:
+        print("== [engine] batched async engine scale sweep ==")
+        from benchmarks.async_engine_bench import run as eng
+        # same scale contract as the other sections: default stays
+        # moderate, --full adds the N=1024 lap, --fast runs the smoke sweep
+        eng((64, 256, 1024) if args.full else (64, 256), smoke=args.fast,
+            out_json="artifacts/async_engine.json"
+            if os.path.isdir("artifacts") else None)
         print()
 
     if "kernels" not in skip:

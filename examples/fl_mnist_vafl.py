@@ -4,7 +4,11 @@ AFL / EAFLM / VAFL — the full Table-III pipeline on one machine.
 
     PYTHONPATH=src python examples/fl_mnist_vafl.py [--rounds 200] \
         [--model cnn|mlp] [--mode round|event] [--compress topk0.1_int8] \
-        [--broadcast-compress int8]
+        [--broadcast-compress int8] [--engine batched --buffer 16]
+
+--engine batched (event mode) runs the windowed batched async engine
+(docs/ASYNC_ENGINE.md) — use it with --clients 256+ to simulate large
+federations; --buffer K enables FedBuff-style buffered mixing.
 
 --compress ships codec payloads (repro.compress, docs/COMPRESSION.md)
 instead of full fp32 models on accepted uploads; the summary then shows
@@ -39,7 +43,19 @@ def main():
                          "topk0.1_int8|...)")
     ap.add_argument("--broadcast-compress", default=None,
                     help="optional downlink codec spec")
+    ap.add_argument("--engine", default="sequential",
+                    choices=("sequential", "batched"),
+                    help="event-mode execution engine (docs/ASYNC_ENGINE.md)"
+                         "; batched scales to 1000+ clients")
+    ap.add_argument("--max-batch", type=int, default=0,
+                    help="batched engine window bound (0 = num clients)")
+    ap.add_argument("--buffer", type=int, default=1,
+                    help="batched engine FedBuff buffer size K")
     args = ap.parse_args()
+    if args.engine == "batched" and args.mode != "event":
+        ap.error("--engine batched requires --mode event")
+    if (args.buffer != 1 or args.max_batch) and args.engine != "batched":
+        ap.error("--buffer/--max-batch require --engine batched")
 
     xtr, ytr, xte, yte = synthetic_mnist(args.clients * args.samples + 2000,
                                          2000, seed=0)
@@ -62,7 +78,9 @@ def main():
                          target_acc=args.target, eval_every=1,
                          events_per_eval=args.clients,
                          compressor=args.compress,
-                         broadcast_compressor=args.broadcast_compress)
+                         broadcast_compressor=args.broadcast_compress,
+                         engine=args.engine, max_batch=args.max_batch,
+                         buffer_size=args.buffer)
         print(f"\n=== {alg.upper()} ===")
         results[alg] = runner(rc, init_params_fn=lambda k: init(mcfg, k),
                               loss_fn=loss_fn, fed_data=fed,

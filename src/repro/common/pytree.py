@@ -79,6 +79,20 @@ def stacked_index(stacked, i):
     return jax.tree.map(lambda x: x[i], stacked)
 
 
+def tree_gather(stacked, idx):
+    """Gather rows of a stacked pytree along the leading axis: the
+    (W, ...) sub-stack for a window of client ids.  ``idx`` may be a
+    numpy or jnp integer array."""
+    return jax.tree.map(lambda x: x[idx], stacked)
+
+
+def tree_scatter(stacked, idx, rows):
+    """Scatter a (W, ...) sub-stack back into rows ``idx`` of a stacked
+    pytree (out-of-place, jit-safe).  ``rows`` may also be an unstacked
+    tree, in which case it broadcasts across all indexed rows."""
+    return jax.tree.map(lambda s, u: s.at[idx].set(u), stacked, rows)
+
+
 def stacked_set(stacked, i, tree):
     return jax.tree.map(lambda s, x: s.at[i].set(x), stacked, tree)
 

@@ -9,6 +9,9 @@ from __future__ import annotations
 
 import jax
 import jax.numpy as jnp
+import numpy as np
+
+from repro.common.pytree import tree_stack
 
 
 def aggregation_weights(mask: jax.Array, sample_counts: jax.Array) -> jax.Array:
@@ -50,6 +53,44 @@ def staleness_weight(staleness, kind: str = "poly", a: float = 0.5):
     if kind == "const":
         return jnp.ones_like(tau)
     raise ValueError(kind)
+
+
+def buffered_mean(recons_stacked, coef):
+    """Weighted mean over the leading axis of a stacked reconstruction
+    pytree (fp32 accumulation) — the jit-safe core of ``buffered_mix``,
+    shared with the batched engine's fused flush."""
+    return jax.tree.map(
+        lambda r: jnp.einsum("k,k...->...", coef, r.astype(jnp.float32)),
+        recons_stacked)
+
+
+def buffered_coefs(stale_weights, rho):
+    """The flush weighting in one place: normalized staleness coefficients
+    s_i / sum_j s_j (fp32) and the effective mix rate rho * mean_i s_i."""
+    s = np.asarray(stale_weights, np.float64)
+    return (s / s.sum()).astype(np.float32), rho * float(s.mean())
+
+
+def buffered_mix(global_params, recons, stale_weights, rho, mix=None):
+    """FedBuff-style buffer flush (Nguyen et al.; see also Wang et al.'s
+    linear-speedup analysis of buffered async aggregation): the server
+    mixes the staleness-weighted mean of the K buffered client
+    reconstructions in one step,
+
+        theta <- (1 - rho * s_bar) theta + rho * s_bar * recon_bar,
+        recon_bar = sum_i (s_i / sum_j s_j) recon_i,   s_bar = mean_i s_i.
+
+    With K=1 this is exactly ``async_mix(theta, recon, rho * s)`` (the
+    singleton mean passes recon through untouched) — the batched engine's
+    buffer_size=1 path reproduces the sequential per-arrival mix
+    bit-for-bit.  ``mix`` lets callers supply a jitted ``async_mix``."""
+    mix = mix if mix is not None else async_mix
+    if len(recons) == 1:
+        return mix(global_params, recons[0],
+                   rho * float(np.asarray(stale_weights)[0]))
+    coef, rho_sbar = buffered_coefs(stale_weights, rho)
+    bar = buffered_mean(tree_stack(recons), jnp.asarray(coef))
+    return mix(global_params, bar, rho_sbar)
 
 
 def async_mix(global_params, client_params, rho):

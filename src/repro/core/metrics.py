@@ -83,6 +83,10 @@ class RunResult:
     uploads_to_target: Optional[int] = None   # comm times when target first hit
     rounds_to_target: Optional[int] = None
     time_to_target: Optional[float] = None
+    # mean per-client fraction of simulated wall-clock spent idle — set by
+    # the wall-clock runtimes (event-driven + sync barrier), None for the
+    # round-based runtime where no clock is simulated
+    idle_fraction: Optional[float] = None
 
     @property
     def best_acc(self) -> float:

@@ -67,11 +67,22 @@ class EventScheduler:
         for c in range(num_clients):
             self.schedule(c)
 
-    def schedule(self, client: int, extra_delay: float = 0.0):
-        dt = self.speed.sample(client) + extra_delay
-        t = max(self.now, self.busy_until[client]) + dt
+    def schedule(self, client: int, extra_delay: float = 0.0,
+                 start: Optional[float] = None):
+        """Schedule the client's next completion.  ``start`` is when the
+        client begins its next local round (default: the current simulated
+        time — correct for the sequential engine, where ``now`` is the
+        client's own completion time when its event is processed).  The
+        batched engine passes each client's own completion time so that
+        executing a window in one batch does not act as a simulated-clock
+        barrier (early finishers restart immediately, not at window end)."""
+        service = self.speed.sample(client)
+        t0 = self.now if start is None else start
+        t = max(t0, self.busy_until[client]) + service + extra_delay
         self.busy_until[client] = t
-        self.client_busy_time[client] += dt
+        # only service time is busy compute — network latency (extra_delay)
+        # delays the next completion but the client sits idle through it
+        self.client_busy_time[client] += service
         self._seq += 1
         heapq.heappush(self.heap, Event(t, self._seq, client))
 
@@ -79,6 +90,23 @@ class EventScheduler:
         ev = heapq.heappop(self.heap)
         self.now = ev.time
         return ev.time, ev.client
+
+    def pop_window(self, max_batch: int) -> Tuple[np.ndarray, np.ndarray]:
+        """Pop the up-to-``max_batch`` earliest completions — the window the
+        batched engine executes as ONE vmapped update before its next mix
+        point.  Clients are returned in arrival order (each appears at most
+        once per window: a client's next completion is only scheduled after
+        its current one is processed).  Returns ``(times, clients)`` with
+        per-event completion times (``times[-1]`` advances ``now``);
+        ``pop_window(1)`` is exactly ``pop()``."""
+        k = min(max_batch, len(self.heap))
+        times = np.empty(k, np.float64)
+        clients = np.empty(k, np.int64)
+        for j in range(k):
+            ev = heapq.heappop(self.heap)
+            self.now = times[j] = ev.time
+            clients[j] = ev.client
+        return times, clients
 
     def __len__(self):
         return len(self.heap)

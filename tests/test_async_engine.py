@@ -1,0 +1,309 @@
+"""Batched async execution engine (docs/ASYNC_ENGINE.md).
+
+Covers the engine's contract: the window=1/buffer=1 configuration must
+reproduce the sequential per-event runtime EXACTLY (upload decisions,
+CommStats, records) for identity and compressed codecs; plus the hot-path
+crash regressions this PR fixes (small shards, small/ragged test sets,
+scheduler busy-time accounting, sync-barrier participation).
+"""
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import FLRunConfig, run_event_driven, run_round_based
+from repro.core.aggregation import async_mix, buffered_mix
+from repro.core.client import (LocalSpec, make_evaluator, make_local_update,
+                               make_weighted_classifier_loss)
+from repro.core.metrics import RunResult
+from repro.core.scheduler import EventScheduler, SpeedModel
+from repro.data.partition import iid_partition
+from repro.data.synthetic import synthetic_mnist
+from repro.models.cnn import MLPConfig, mlp_forward, mlp_init
+
+
+@pytest.fixture(scope="module")
+def setup():
+    xtr, ytr, xte, yte = synthetic_mnist(7 * 300 + 1000, 1000, seed=0)
+    mcfg = MLPConfig(hidden=(64,))
+    loss_fn = make_weighted_classifier_loss(mlp_forward, mcfg)
+    evaluate = make_evaluator(mlp_forward, mcfg, xte, yte, batch=500)
+    fed = iid_partition(xtr, ytr, 7, samples_per_client=300, seed=0)
+    return xtr, ytr, xte, yte, mcfg, loss_fn, evaluate, fed
+
+
+def _run(setup, alg, engine, rounds=4, comp="identity", **kw):
+    _, _, _, _, mcfg, loss_fn, evaluate, fed = setup
+    rc = FLRunConfig(algorithm=alg, num_clients=7, rounds=rounds,
+                     local=LocalSpec(batch_size=32, local_rounds=1, lr=0.1),
+                     target_acc=0.90, events_per_eval=7, compressor=comp,
+                     engine=engine, **kw)
+    return run_event_driven(rc, init_params_fn=lambda k: mlp_init(mcfg, k),
+                            loss_fn=loss_fn, fed_data=fed,
+                            evaluate_fn=evaluate)
+
+
+# ------------------------------------------------------- scheduler window ---
+
+class TestPopWindow:
+    def test_window_of_one_is_pop(self):
+        a = EventScheduler(5, SpeedModel.paper_testbed(5, seed=3))
+        b = EventScheduler(5, SpeedModel.paper_testbed(5, seed=3))
+        for _ in range(5):
+            t, c = a.pop()
+            tw, cw = b.pop_window(1)
+            assert (t, c) == (float(tw[0]), int(cw[0]))
+            assert a.now == b.now
+
+    def test_window_pops_earliest_in_order(self):
+        a = EventScheduler(6, SpeedModel.paper_testbed(6, seed=1))
+        b = EventScheduler(6, SpeedModel.paper_testbed(6, seed=1))
+        ref = [a.pop() for _ in range(4)]
+        times, clients = b.pop_window(4)
+        assert [c for _, c in ref] == list(clients)
+        assert [t for t, _ in ref] == list(times)
+        assert times[-1] == ref[-1][0] == b.now
+        # no client appears twice before being rescheduled
+        assert len(set(clients)) == len(clients)
+
+    def test_window_clamped_to_heap(self):
+        s = EventScheduler(3, SpeedModel.paper_testbed(3, seed=0))
+        _, clients = s.pop_window(10)
+        assert len(clients) == 3
+
+    def test_schedule_from_own_completion_time(self):
+        """Rescheduling with start=<own completion> must not wait for the
+        window's last event (no simulated-clock barrier): the fast client
+        of the paper testbed restarts before the slow Pis even finish."""
+        s = EventScheduler(4, SpeedModel.paper_testbed(4, seed=9))
+        times, clients = s.pop_window(4)
+        fast = int(clients[0])              # earliest finisher (laptop)
+        s.schedule(fast, start=float(times[0]))
+        nxt = min(e.time for e in s.heap if e.client == fast)
+        assert times[0] < nxt < s.now
+
+    def test_extra_delay_not_counted_busy(self):
+        """Network latency delays the next completion but is idle time, not
+        service time (regression: it used to inflate client_busy_time)."""
+        a = EventScheduler(3, SpeedModel.paper_testbed(3, seed=5))
+        b = EventScheduler(3, SpeedModel.paper_testbed(3, seed=5))
+        a.schedule(0, extra_delay=0.0)
+        b.schedule(0, extra_delay=5.0)
+        np.testing.assert_allclose(a.client_busy_time, b.client_busy_time)
+        assert b.busy_until[0] == pytest.approx(a.busy_until[0] + 5.0)
+
+    def test_idle_fraction_grows_with_delay(self):
+        slow = EventScheduler(2, SpeedModel.paper_testbed(2, seed=2))
+        fast = EventScheduler(2, SpeedModel.paper_testbed(2, seed=2))
+        for _ in range(8):
+            _, c = slow.pop()
+            slow.schedule(c, extra_delay=2.0)
+            _, c = fast.pop()
+            fast.schedule(c)
+        assert slow.idle_fraction().mean() > fast.idle_fraction().mean()
+
+
+# ------------------------------------------------- hot-path crash fixes ---
+
+class TestSmallShardLocalUpdate:
+    def test_shard_smaller_than_batch_trains(self, setup):
+        """Regression: M=8 < B=32 crashed with a reshape error; now the
+        effective batch clamps to the shard size."""
+        xtr, ytr, _, _, mcfg, loss_fn, _, _ = setup
+        fed = iid_partition(xtr, ytr, 3, samples_per_client=8, seed=0)
+        upd = make_local_update(loss_fn, LocalSpec(batch_size=32, lr=0.1))
+        data = {"images": jnp.asarray(fed.images),
+                "labels": jnp.asarray(fed.labels),
+                "mask": jnp.asarray(fed.mask)}
+        params = mlp_init(mcfg, jax.random.key(0))
+        stacked = jax.tree.map(lambda x: jnp.broadcast_to(x, (3,) + x.shape),
+                               params)
+        newp, eff, loss = upd(stacked, data, jax.random.key(1))
+        assert np.isfinite(float(loss.mean() if loss.ndim else loss))
+        moved = float(jax.vmap(
+            lambda a, b: sum(jnp.sum(jnp.abs(x - y)) for x, y in
+                             zip(jax.tree.leaves(a), jax.tree.leaves(b)))
+        )(newp, stacked).sum())
+        assert moved > 0.0
+
+
+class TestEvaluatorTail:
+    def _manual_acc(self, mcfg, params, xte, yte):
+        logits = mlp_forward(mcfg, params, jnp.asarray(xte))
+        return float(np.mean(np.argmax(np.asarray(logits), -1)
+                             == np.asarray(yte)))
+
+    def test_test_set_smaller_than_batch(self, setup):
+        """Regression: 900 samples at batch=1000 crashed / divided by zero."""
+        _, _, xte, yte, mcfg, _, _, _ = setup
+        params = mlp_init(mcfg, jax.random.key(0))
+        ev = make_evaluator(mlp_forward, mcfg, xte[:900], yte[:900],
+                            batch=1000)
+        acc = float(ev(params))
+        assert acc == pytest.approx(
+            self._manual_acc(mcfg, params, xte[:900], yte[:900]), abs=1e-6)
+
+    def test_tail_remainder_counted(self, setup):
+        """Regression: len % batch used to be silently dropped, biasing the
+        reported accuracy."""
+        _, _, xte, yte, mcfg, _, _, _ = setup
+        params = mlp_init(mcfg, jax.random.key(0))
+        ev = make_evaluator(mlp_forward, mcfg, xte[:250], yte[:250],
+                            batch=100)
+        acc = float(ev(params))
+        assert acc == pytest.approx(
+            self._manual_acc(mcfg, params, xte[:250], yte[:250]), abs=1e-6)
+
+    def test_exact_division_unchanged(self, setup):
+        _, _, xte, yte, mcfg, _, _, _ = setup
+        params = mlp_init(mcfg, jax.random.key(0))
+        ev = make_evaluator(mlp_forward, mcfg, xte, yte, batch=500)
+        acc = float(ev(params))
+        assert acc == pytest.approx(
+            self._manual_acc(mcfg, params, xte, yte), abs=1e-6)
+
+
+# ------------------------------------------------------------ equivalence ---
+
+class TestEngineEquivalence:
+    """The acceptance contract: pop_window(max_batch=1) + buffer_size=1 must
+    reproduce the sequential runtime's upload decisions and CommStats
+    exactly on the N=7 paper testbed, for identity and topk0.1_int8."""
+
+    @pytest.mark.parametrize("alg", ["afl", "vafl", "eaflm"])
+    @pytest.mark.parametrize("comp", ["identity", "topk0.1_int8"])
+    def test_window1_buffer1_bitmatches_sequential(self, setup, alg, comp):
+        seq = _run(setup, alg, "sequential", comp=comp)
+        bat = _run(setup, alg, "batched", comp=comp, max_batch=1,
+                   buffer_size=1)
+        assert dataclasses.asdict(seq.comm) == dataclasses.asdict(bat.comm)
+        assert [(r.round, r.time, r.global_acc, r.uploads_so_far)
+                for r in seq.records] == \
+               [(r.round, r.time, r.global_acc, r.uploads_so_far)
+                for r in bat.records]
+        assert seq.idle_fraction == bat.idle_fraction
+
+    @pytest.mark.parametrize("alg", ["afl", "fedavg"])
+    def test_unknown_engine_rejected(self, setup, alg):
+        with pytest.raises(ValueError):
+            _run(setup, alg, "warp-drive")
+
+
+# -------------------------------------------------- buffered aggregation ---
+
+def _rand_tree(key, scale=1.0):
+    k1, k2 = jax.random.split(key)
+    return {"w": jax.random.normal(k1, (5, 3)) * scale,
+            "b": jax.random.normal(k2, (3,)) * scale}
+
+
+class TestBufferedMix:
+    def test_k1_is_async_mix_bitwise(self):
+        g = _rand_tree(jax.random.key(0))
+        r = _rand_tree(jax.random.key(1))
+        a = buffered_mix(g, [r], [0.7], 0.5)
+        b = async_mix(g, r, 0.5 * 0.7)
+        for x, y in zip(jax.tree.leaves(a), jax.tree.leaves(b)):
+            np.testing.assert_array_equal(np.asarray(x), np.asarray(y))
+
+    def test_staleness_weighted_mean(self):
+        g = jax.tree.map(jnp.zeros_like, _rand_tree(jax.random.key(0)))
+        r1 = jax.tree.map(jnp.ones_like, g)
+        r2 = jax.tree.map(lambda x: 3.0 * jnp.ones_like(x), g)
+        # s = [1, 3]: recon_bar = (1*1 + 3*3)/4 = 2.5; s_bar = 2; rho=0.25
+        out = buffered_mix(g, [r1, r2], [1.0, 3.0], 0.25)
+        for leaf in jax.tree.leaves(out):
+            np.testing.assert_allclose(np.asarray(leaf), 0.25 * 2.0 * 2.5,
+                                       rtol=1e-6)
+
+    def test_batched_window_is_not_a_clock_barrier(self, setup):
+        """Window execution batches compute, not the simulated clock:
+        sub-full windows keep the sequential engine's idle_fraction
+        exactly (clients restart from their own completion times), and
+        even the full window stays far below sync-barrier idle (its small
+        residual is quota truncation — one event per client per window —
+        not barrier waiting)."""
+        seq = _run(setup, "afl", "sequential", rounds=4)
+        for w in (2, 3):
+            bat = _run(setup, "afl", "batched", rounds=4, max_batch=w,
+                       buffer_size=2)
+            assert bat.idle_fraction == pytest.approx(seq.idle_fraction,
+                                                      abs=1e-9)
+        full = _run(setup, "afl", "batched", rounds=4, buffer_size=2)
+        sync = _run(setup, "fedavg", "sequential", rounds=4)
+        assert full.idle_fraction < 0.5 * sync.idle_fraction
+
+    def test_buffered_run_mixes_less_often(self, setup):
+        """K=4 buffers arrivals: every upload still counted, convergence
+        maintained on the small testbed."""
+        res = _run(setup, "afl", "batched", rounds=6, buffer_size=4)
+        assert res.comm.model_uploads == 6 * 7     # afl: every event uploads
+        assert res.idle_fraction is not None
+        assert all(np.isfinite(r.global_acc) for r in res.records)
+
+    def test_buffered_compressed_run(self, setup):
+        """Codec payloads + EF ride through the buffered path per-client."""
+        res = _run(setup, "vafl", "batched", rounds=6, buffer_size=2,
+                   comp="topk0.1_int8")
+        assert res.comm.upload_payload_bytes > 0
+        assert res.byte_ccr > 0.5
+        assert res.comm.model_uploads < 6 * 7      # vafl gates
+
+
+# ------------------------------------------------------------------ scale ---
+
+@pytest.mark.slow
+class TestBatchedEngineScale:
+    def test_n256_window_execution(self):
+        N = 256
+        xtr, ytr, xte, yte = synthetic_mnist(N * 24, 500, seed=0)
+        mcfg = MLPConfig(hidden=(32,))
+        loss_fn = make_weighted_classifier_loss(mlp_forward, mcfg)
+        evaluate = make_evaluator(mlp_forward, mcfg, xte, yte, batch=500)
+        fed = iid_partition(xtr, ytr, N, samples_per_client=24, seed=0)
+        rc = FLRunConfig(algorithm="afl", num_clients=N, rounds=1,
+                         local=LocalSpec(batch_size=32, local_rounds=1,
+                                         lr=0.1),
+                         target_acc=0.99, events_per_eval=N,
+                         engine="batched", buffer_size=16)
+        res = run_event_driven(rc,
+                               init_params_fn=lambda k: mlp_init(mcfg, k),
+                               loss_fn=loss_fn, fed_data=fed,
+                               evaluate_fn=evaluate)
+        assert res.comm.model_uploads == N         # afl uploads every event
+        assert res.comm.broadcasts == N
+        assert res.idle_fraction is not None
+        assert np.isfinite(res.records[-1].global_acc)
+
+
+# --------------------------------------------- sync barrier participation ---
+
+class TestSyncBarrierParticipation:
+    def test_partial_participation_limits_uploads(self, setup):
+        _, _, _, _, mcfg, loss_fn, evaluate, fed = setup
+        rc = FLRunConfig(algorithm="fedavg", num_clients=7, rounds=3,
+                         local=LocalSpec(batch_size=32, local_rounds=1,
+                                         lr=0.1),
+                         participation=0.5, target_acc=0.99)
+        res = run_event_driven(rc,
+                               init_params_fn=lambda k: mlp_init(mcfg, k),
+                               loss_fn=loss_fn, fed_data=fed,
+                               evaluate_fn=evaluate)
+        k = max(1, round(0.5 * 7))
+        assert res.comm.model_uploads == 3 * k
+        assert res.idle_fraction is not None and res.idle_fraction > 0.0
+
+    def test_idle_fraction_is_declared_field(self, setup):
+        assert "idle_fraction" in {f.name
+                                   for f in dataclasses.fields(RunResult)}
+        _, _, _, _, mcfg, loss_fn, evaluate, fed = setup
+        rc = FLRunConfig(algorithm="vafl", num_clients=7, rounds=2,
+                         local=LocalSpec(batch_size=32, local_rounds=1,
+                                         lr=0.1), target_acc=0.99)
+        res = run_round_based(rc,
+                              init_params_fn=lambda k: mlp_init(mcfg, k),
+                              loss_fn=loss_fn, fed_data=fed,
+                              evaluate_fn=evaluate)
+        assert res.idle_fraction is None   # no simulated clock in round mode

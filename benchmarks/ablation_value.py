@@ -22,7 +22,7 @@ import jax
 import jax.numpy as jnp
 
 from benchmarks.fl_common import BenchScale, build_problem, EXPERIMENTS
-from repro.core import FLRunConfig, run_round_based
+from repro.core import Federation
 from repro.core.client import LocalSpec
 from repro.core.metrics import ccr
 from repro.common.pytree import tree_sq_diff_norm, tree_sq_norm
@@ -54,7 +54,7 @@ def run(exp: str = "d", scale: BenchScale = None, model: str = "mlp",
     scale = scale or BenchScale(samples_per_client=800, rounds=20,
                                 test_samples=800, target_acc=0.94)
     n, iid = EXPERIMENTS[exp]
-    fed, mcfg, init, loss_fn, evaluate = build_problem(model, scale, n, iid)
+    fed, triple, test = build_problem(model, scale, n, iid)
     if corrupt_clients:
         import numpy as np
         rng = np.random.RandomState(seed)
@@ -63,27 +63,31 @@ def run(exp: str = "d", scale: BenchScale = None, model: str = "mlp",
             m = fed.mask[c] > 0
             labels[c, m] = rng.randint(0, 10, size=int(m.sum()))
         fed.labels[:] = labels
-    from repro.models.cnn import mlp_init  # noqa
-
     local = LocalSpec(batch_size=32, local_epochs=1,
                       local_rounds=scale.local_rounds, lr=0.1)
+    # build loss/evaluator ONCE and run every variant in explicit-fns
+    # mode: the per-variant Federations then share the same function
+    # objects, so the memoized jitted executables are reused instead of
+    # recompiled six times
+    from repro.core.client import make_evaluator, make_weighted_classifier_loss
+    fwd, init, mcfg = triple
+    loss_fn = make_weighted_classifier_loss(fwd, mcfg)
+    evaluate = make_evaluator(fwd, mcfg, *test,
+                              batch=min(500, scale.test_samples))
+    base = dict(data=fed, init_params_fn=lambda k: init(mcfg, k),
+                loss_fn=loss_fn, evaluate_fn=evaluate, local=local,
+                rounds=scale.rounds, target_acc=scale.target_acc)
 
     # AFL baseline for CCR
-    afl = run_round_based(
-        FLRunConfig(algorithm="afl", num_clients=n, rounds=scale.rounds,
-                    local=local, target_acc=scale.target_acc),
-        init_params_fn=lambda k: init(mcfg, k), loss_fn=loss_fn,
-        fed_data=fed, evaluate_fn=evaluate)
+    afl = Federation(algorithm="afl", **base).run()
     c0 = afl.uploads_to_target or afl.comm.model_uploads
 
     print("experiment,variant,comm_times,best_acc,ccr_vs_afl")
     print(f"{exp},afl,{c0},{afl.best_acc:.4f},0.0")
     rows = []
     for variant in ("full", "no_acc", "no_diff", "random", "strong_acc"):
-        rc = FLRunConfig(algorithm="vafl", num_clients=n, rounds=scale.rounds,
-                         local=local, target_acc=scale.target_acc,
-                         value_backend=variant_backend(
-                             "full" if variant == "strong_acc" else variant))
+        backend = variant_backend(
+            "full" if variant == "strong_acc" else variant)
         if variant == "strong_acc":
             # beyond-paper fix: Eq.1's (1+N/1e3)^Acc is ~1 for small N, so
             # low-Acc (e.g. corrupted) clients are not damped.  Emulate a
@@ -91,21 +95,15 @@ def run(exp: str = "d", scale: BenchScale = None, model: str = "mlp",
             # value_base(N)^(acc*s) == 1000^acc.
             import math
             s = math.log(1000.0) / math.log(1.0 + n / 1e3)
-            res = run_round_based(rc, init_params_fn=lambda k: init(mcfg, k),
-                                  loss_fn=loss_fn, fed_data=fed,
-                                  evaluate_fn=evaluate,
-                                  client_eval_fn=lambda p: evaluate(p) * s)
+            client_eval = lambda p: evaluate(p) * s
         elif variant == "no_acc":
             # neutralise the amplification by reporting Acc=0 upstream:
             # (1+N/1e3)^0 == 1 — emulate via client_eval_fn returning 0
-            res = run_round_based(rc, init_params_fn=lambda k: init(mcfg, k),
-                                  loss_fn=loss_fn, fed_data=fed,
-                                  evaluate_fn=evaluate,
-                                  client_eval_fn=lambda p: jnp.float32(0.0))
+            client_eval = lambda p: jnp.float32(0.0)
         else:
-            res = run_round_based(rc, init_params_fn=lambda k: init(mcfg, k),
-                                  loss_fn=loss_fn, fed_data=fed,
-                                  evaluate_fn=evaluate)
+            client_eval = None
+        res = Federation(algorithm="vafl", value_backend=backend,
+                         client_eval_fn=client_eval, **base).run()
         c1 = res.uploads_to_target or res.comm.model_uploads
         print(f"{exp},{variant},{c1},{res.best_acc:.4f},{ccr(c0, c1):.4f}")
         rows.append((variant, c1, res.best_acc))

@@ -112,7 +112,8 @@ def run(Ns=(64, 256, 1024), *, smoke=False, buffer_size=16, out_json=None):
             "window1_buffer1_upload_bitmatch": bitmatch,
         })
     if out_json:
-        os.makedirs(os.path.dirname(out_json), exist_ok=True)
+        if os.path.dirname(out_json):   # bare filename: cwd, no mkdir
+            os.makedirs(os.path.dirname(out_json), exist_ok=True)
         with open(out_json, "w") as f:
             json.dump(rows, f, indent=2)
         print(f"[json] {out_json}")

@@ -14,9 +14,8 @@ from __future__ import annotations
 
 from dataclasses import dataclass
 
-from repro.core import FLRunConfig, run_event_driven, run_round_based
-from repro.core.client import (LocalSpec, make_evaluator,
-                               make_weighted_classifier_loss)
+from repro.core import Federation
+from repro.core.client import LocalSpec
 from repro.core.metrics import ccr
 from repro.data.partition import iid_partition, paper_noniid_partition
 from repro.data.synthetic import synthetic_mnist
@@ -46,6 +45,9 @@ class BenchScale:
 
 def build_problem(model: str = "mlp", scale: BenchScale = None,
                   num_clients: int = 3, iid: bool = True):
+    """Synthetic-MNIST federation for one paper experiment: returns
+    ``(fed_data, (forward_fn, init_fn, model_cfg), (xte, yte))`` — the
+    model triple and test split plug straight into ``Federation``."""
     scale = scale or BenchScale()
     n_train = max(num_clients * scale.samples_per_client, 2000)
     xtr, ytr, xte, yte = synthetic_mnist(n_train, scale.test_samples,
@@ -54,14 +56,24 @@ def build_problem(model: str = "mlp", scale: BenchScale = None,
     fed = part(xtr, ytr, num_clients,
                samples_per_client=scale.samples_per_client, seed=scale.seed)
     if model == "cnn":
-        mcfg = CNNConfig()
-        fwd, init = cnn_forward, cnn_init
+        triple = (cnn_forward, cnn_init, CNNConfig())
     else:
-        mcfg = MLPConfig(hidden=(128, 64))
-        fwd, init = mlp_forward, mlp_init
-    loss_fn = make_weighted_classifier_loss(fwd, mcfg)
-    evaluate = make_evaluator(fwd, mcfg, xte, yte, batch=min(500, scale.test_samples))
-    return fed, mcfg, init, loss_fn, evaluate
+        triple = (mlp_forward, mlp_init, MLPConfig(hidden=(128, 64)))
+    return fed, triple, (xte, yte)
+
+
+def build_federation(exp: str, alg: str, *, model: str = "mlp",
+                     scale: BenchScale = None, **config) -> Federation:
+    """One paper experiment (a-d) as a configured ``Federation``."""
+    scale = scale or BenchScale()
+    n, iid = EXPERIMENTS[exp]
+    fed, triple, test = build_problem(model, scale, n, iid)
+    return Federation(
+        model=triple, data=fed, test_data=test, algorithm=alg,
+        local=LocalSpec(batch_size=32, local_epochs=1,
+                        local_rounds=scale.local_rounds, lr=0.1),
+        rounds=scale.rounds, target_acc=scale.target_acc, seed=scale.seed,
+        eval_batch=min(500, scale.test_samples), **config)
 
 
 def run_experiment(exp: str, alg: str, *, model: str = "mlp",
@@ -69,18 +81,10 @@ def run_experiment(exp: str, alg: str, *, model: str = "mlp",
                    compressor: str = "identity",
                    broadcast_compressor: str = None,
                    verbose: bool = False):
-    scale = scale or BenchScale()
-    n, iid = EXPERIMENTS[exp]
-    fed, mcfg, init, loss_fn, evaluate = build_problem(model, scale, n, iid)
-    rc = FLRunConfig(
-        algorithm=alg, num_clients=n, rounds=scale.rounds,
-        local=LocalSpec(batch_size=32, local_epochs=1,
-                        local_rounds=scale.local_rounds, lr=0.1),
-        target_acc=scale.target_acc, seed=scale.seed, events_per_eval=n,
-        compressor=compressor, broadcast_compressor=broadcast_compressor)
-    runner = run_round_based if mode == "round" else run_event_driven
-    return runner(rc, init_params_fn=lambda k: init(mcfg, k), loss_fn=loss_fn,
-                  fed_data=fed, evaluate_fn=evaluate, verbose=verbose)
+    return build_federation(
+        exp, alg, model=model, scale=scale, compressor=compressor,
+        broadcast_compressor=broadcast_compressor).run(mode=mode,
+                                                       verbose=verbose)
 
 
 def table3_row(exp: str, results: dict) -> list:

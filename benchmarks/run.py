@@ -30,12 +30,20 @@ def main() -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--fast", action="store_true")
     ap.add_argument("--full", action="store_true")
+    ap.add_argument("--smoke", action="store_true",
+                    help="minimal public-API sweep (CI tier-1; see "
+                         "tests/test_public_api.py)")
     ap.add_argument("--skip", default="", help="comma list of sections")
     args = ap.parse_args()
     skip = set(args.skip.split(",")) if args.skip else set()
 
     from benchmarks.fl_common import BenchScale
-    if args.fast:
+    if args.smoke:
+        scale = BenchScale(samples_per_client=120, rounds=2,
+                           test_samples=200, target_acc=0.5)
+        exps = ["a"]
+        skip |= {"ablation", "kernels", "roofline", "gated"}
+    elif args.fast:
         scale = BenchScale(samples_per_client=400, rounds=8, test_samples=500,
                            target_acc=0.90)
         exps = ["a", "c"]
@@ -88,7 +96,9 @@ def main() -> None:
         from benchmarks.async_engine_bench import run as eng
         # same scale contract as the other sections: default stays
         # moderate, --full adds the N=1024 lap, --fast runs the smoke sweep
-        eng((64, 256, 1024) if args.full else (64, 256), smoke=args.fast,
+        eng((16,) if args.smoke else
+            (64, 256, 1024) if args.full else (64, 256),
+            smoke=args.fast or args.smoke,
             out_json="artifacts/async_engine.json"
             if os.path.isdir("artifacts") else None)
         print()

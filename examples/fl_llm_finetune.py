@@ -19,7 +19,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.core import FLRunConfig, run_round_based
+from repro.core import Federation
 from repro.core.client import LocalSpec
 from repro.core.metrics import ccr
 from repro.data.partition import FederatedData
@@ -88,16 +88,18 @@ def main():
 
     results = {}
     for alg in ("afl", "vafl"):
-        rc = FLRunConfig(algorithm=alg, num_clients=args.clients,
-                         rounds=args.rounds,
-                         local=LocalSpec(batch_size=8, local_epochs=1,
-                                         local_rounds=2, lr=0.5),
-                         target_acc=0.15)
+        # explicit-fns mode of the Federation facade: any workload whose
+        # clients are opaque pytrees plugs in via its own loss/evaluator
+        federation = Federation(
+            data=fed, algorithm=alg,
+            init_params_fn=lambda k: decoder.init_params(cfg, k),
+            loss_fn=loss_fn, evaluate_fn=evaluate,
+            local=LocalSpec(batch_size=8, local_epochs=1,
+                            local_rounds=2, lr=0.5),
+            target_acc=0.15)
         print(f"\n=== {alg.upper()} (federated LM fine-tune, "
               f"{args.clients} silos) ===")
-        results[alg] = run_round_based(
-            rc, init_params_fn=lambda k: decoder.init_params(cfg, k),
-            loss_fn=loss_fn, fed_data=fed, evaluate_fn=evaluate, verbose=True)
+        results[alg] = federation.run(rounds=args.rounds, verbose=True)
 
     afl, vafl = results["afl"], results["vafl"]
     print(f"\nAFL : uploads={afl.comm.model_uploads} "

@@ -1,10 +1,15 @@
 """End-to-end driver (paper experiment d, scaled): 7 heterogeneous clients,
 non-IID data, CNN client model, a few hundred federated rounds comparing
-AFL / EAFLM / VAFL — the full Table-III pipeline on one machine.
+any set of registered algorithms — the full Table-III pipeline on one
+machine, on the ``Federation`` facade.
 
     PYTHONPATH=src python examples/fl_mnist_vafl.py [--rounds 200] \
-        [--model cnn|mlp] [--mode round|event] [--compress topk0.1_int8] \
-        [--broadcast-compress int8] [--engine batched --buffer 16]
+        [--model cnn|mlp] [--mode round|event] [--algs afl,eaflm,vafl] \
+        [--compress topk0.1_int8] [--broadcast-compress int8] \
+        [--engine batched --buffer 16]
+
+--algs takes any registered algorithm names (repro.algorithms; e.g. add
+fedasync to compare its staleness-weighted mixing in event mode).
 
 --engine batched (event mode) runs the windowed batched async engine
 (docs/ASYNC_ENGINE.md) — use it with --clients 256+ to simulate large
@@ -20,14 +25,12 @@ import sys
 
 sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
 
-from repro.core import FLRunConfig, run_event_driven, run_round_based
-from repro.core.client import (LocalSpec, make_evaluator,
-                               make_weighted_classifier_loss)
+from repro.algorithms import available_algorithms
+from repro.core import Federation
+from repro.core.client import LocalSpec
 from repro.core.metrics import ccr
 from repro.data.partition import paper_noniid_partition
 from repro.data.synthetic import synthetic_mnist
-from repro.models.cnn import (CNNConfig, MLPConfig, cnn_forward, cnn_init,
-                              mlp_forward, mlp_init)
 
 
 def main():
@@ -38,6 +41,9 @@ def main():
     ap.add_argument("--model", default="mlp", choices=("mlp", "cnn"))
     ap.add_argument("--mode", default="round", choices=("round", "event"))
     ap.add_argument("--target", type=float, default=0.94)
+    ap.add_argument("--algs", default="afl,eaflm,vafl",
+                    help="comma list of registered algorithms "
+                         f"({', '.join(available_algorithms())})")
     ap.add_argument("--compress", default="identity",
                     help="upload codec spec (identity|int8|int4|topk0.1|"
                          "topk0.1_int8|...)")
@@ -59,35 +65,31 @@ def main():
 
     xtr, ytr, xte, yte = synthetic_mnist(args.clients * args.samples + 2000,
                                          2000, seed=0)
-    fed = paper_noniid_partition(xtr, ytr, args.clients,
-                                 samples_per_client=args.samples, seed=0)
-    if args.model == "cnn":
-        mcfg, fwd, init = CNNConfig(), cnn_forward, cnn_init
-    else:
-        mcfg, fwd, init = MLPConfig(hidden=(128, 64)), mlp_forward, mlp_init
-    loss_fn = make_weighted_classifier_loss(fwd, mcfg)
-    evaluate = make_evaluator(fwd, mcfg, xte, yte, batch=500)
-    runner = run_round_based if args.mode == "round" else run_event_driven
+    fed_data = paper_noniid_partition(xtr, ytr, args.clients,
+                                      samples_per_client=args.samples, seed=0)
 
+    # ONE federation, algorithm swapped per run: the model/loss/evaluator
+    # are built once, so every algorithm reuses the same jitted
+    # executables (make_local_update and the eval helpers memoize on them)
+    algs = args.algs.split(",")
+    fed = Federation(model=args.model, data=fed_data,
+                     test_data=(xte, yte), algorithm=algs[0],
+                     compressor=args.compress,
+                     broadcast_compressor=args.broadcast_compress,
+                     local=LocalSpec(batch_size=32, local_epochs=1,
+                                     local_rounds=1, lr=0.1),
+                     target_acc=args.target, eval_every=1,
+                     engine=args.engine, max_batch=args.max_batch,
+                     buffer_size=args.buffer)
     results = {}
-    for alg in ("afl", "eaflm", "vafl"):
-        rc = FLRunConfig(algorithm=alg, num_clients=args.clients,
-                         rounds=args.rounds,
-                         local=LocalSpec(batch_size=32, local_epochs=1,
-                                         local_rounds=1, lr=0.1),
-                         target_acc=args.target, eval_every=1,
-                         events_per_eval=args.clients,
-                         compressor=args.compress,
-                         broadcast_compressor=args.broadcast_compress,
-                         engine=args.engine, max_batch=args.max_batch,
-                         buffer_size=args.buffer)
+    for alg in algs:
         print(f"\n=== {alg.upper()} ===")
-        results[alg] = runner(rc, init_params_fn=lambda k: init(mcfg, k),
-                              loss_fn=loss_fn, fed_data=fed,
-                              evaluate_fn=evaluate, verbose=True)
+        results[alg] = fed.run(rounds=args.rounds, mode=args.mode,
+                               algorithm=alg, verbose=True)
 
     print("\n=== summary (experiment d, scaled) ===")
-    c0 = results["afl"].uploads_to_target or results["afl"].comm.model_uploads
+    base = results.get("afl") or next(iter(results.values()))
+    c0 = base.uploads_to_target or base.comm.model_uploads
     print(f"{'alg':8s} {'best_acc':>9s} {'comm_times':>11s} {'CCR':>7s} "
           f"{'byte_CCR':>9s} {'uplink_KB':>10s} {'hit target':>11s}")
     for alg, res in results.items():

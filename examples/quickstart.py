@@ -1,40 +1,38 @@
-"""Quickstart: the VAFL public API in ~40 lines.
+"""Quickstart: the VAFL public API in ~20 lines.
 
     PYTHONPATH=src python examples/quickstart.py
 
 Builds a 3-client federation on synthetic MNIST, runs 8 rounds of VAFL
-(Algorithm 1), and prints the communication ledger — the scalar V reports
-that replace most full-model uploads.
+(Algorithm 1) through the ``Federation`` facade, and prints the
+communication ledger — the scalar V reports that replace most
+full-model uploads.  Swap ``algorithm=`` for any registered name
+("afl", "eaflm", "fedavg", "fedasync", ...; see repro.algorithms and
+docs/ARCHITECTURE.md) — the runtimes are algorithm-agnostic.
 """
 import sys, os
 sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
 
-from repro.core import FLRunConfig, run_round_based
-from repro.core.client import (LocalSpec, make_evaluator,
-                               make_weighted_classifier_loss)
+from repro.core import Federation
+from repro.core.client import LocalSpec
 from repro.core.metrics import ccr
 from repro.data.partition import iid_partition
 from repro.data.synthetic import synthetic_mnist
-from repro.models.cnn import MLPConfig, mlp_forward, mlp_init
 
 # 1. data: synthetic MNIST, split IID across 3 clients
 xtr, ytr, xte, yte = synthetic_mnist(3000, 1000, seed=0)
-fed = iid_partition(xtr, ytr, num_clients=3, samples_per_client=1000)
+fed_data = iid_partition(xtr, ytr, num_clients=3, samples_per_client=1000)
 
-# 2. model + loss + evaluator (any pytree model plugs in the same way)
-mcfg = MLPConfig(hidden=(128, 64))
-loss_fn = make_weighted_classifier_loss(mlp_forward, mcfg)
-evaluate = make_evaluator(mlp_forward, mcfg, xte, yte, batch=500)
+# 2. the federation: model + algorithm + codecs in one object (any
+#    (forward_fn, init_fn, cfg) pytree model plugs in the same way)
+fed = Federation(model="mlp", data=fed_data, test_data=(xte, yte),
+                 algorithm="vafl",
+                 local=LocalSpec(batch_size=32, local_epochs=1,
+                                 local_rounds=1, lr=0.1),
+                 target_acc=0.90)
 
 # 3. VAFL: every round all clients report the scalar V_i (Eq. 1); only
 #    above-mean clients upload their model (Eq. 2)
-run_cfg = FLRunConfig(algorithm="vafl", num_clients=3, rounds=8,
-                      local=LocalSpec(batch_size=32, local_epochs=1,
-                                      local_rounds=1, lr=0.1),
-                      target_acc=0.90)
-res = run_round_based(run_cfg, init_params_fn=lambda k: mlp_init(mcfg, k),
-                      loss_fn=loss_fn, fed_data=fed, evaluate_fn=evaluate,
-                      verbose=True)
+res = fed.run(rounds=8, verbose=True)
 
 print(f"\nbest Acc          : {res.best_acc:.4f}")
 print(f"model uploads     : {res.comm.model_uploads} "

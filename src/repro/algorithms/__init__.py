@@ -1,0 +1,10 @@
+# Pluggable FL algorithms (docs/ARCHITECTURE.md): the UploadPolicy /
+# Aggregator protocol and the string registry behind
+# FLRunConfig.algorithm.  The built-in family (afl / vafl / eaflm /
+# fedavg / fedasync*) registers lazily on first registry lookup — no
+# eager import here, so importing this package never pulls repro.core
+# (base and registry are leaves; the cycle-free order is load-bearing).
+from repro.algorithms.base import (Algorithm, Aggregator, RoundContext,
+                                   UploadPolicy)
+from repro.algorithms.registry import (available_algorithms, get_algorithm,
+                                       register_algorithm)

@@ -1,0 +1,207 @@
+"""The pluggable FL algorithm protocol.
+
+An *algorithm* (AFL, VAFL, EAFLM, FedAvg, FedAsync, ...) is two small
+objects behind a string registry (``get_algorithm("vafl")``):
+
+* ``UploadPolicy`` — the per-client "should this update ship?" decision
+  (the paper's Eq. 1-3 gating).  It comes in two forms so every runtime
+  keeps its hot path: a *scalar* form (``decide``) consumed in arrival
+  order by the event runtimes, and a *stacked/vmapped* form
+  (``round_mask`` over all clients, ``gate_stacked`` inside a traced
+  SPMD step) where the expensive inputs (Eq. 1 values, gradient norms)
+  are computed by the runtime as ONE dispatch over the client axis.
+  The policy declares which inputs it needs (``needs_values`` /
+  ``needs_norms``) so runtimes never compute what the algorithm won't
+  read — AFL pays nothing for VAFL's client-eval term.  (One logging
+  exception: the round runtime also evaluates per-client accuracy for
+  its records unless ``FLRunConfig.record_client_accs=False``.)
+
+* ``Aggregator`` — how accepted uploads enter the global model: the
+  masked weighted FedAvg of Algorithm 1 (round/sync runtimes), the
+  asynchronous mix theta <- (1-rho s) theta + rho s theta_i (event
+  runtimes), and the staleness weight s(tau) that scales it (FedAsync's
+  constant/hinge/poly family).  The FedBuff-style buffered flush
+  mechanics live in the batched runtime; the aggregator supplies the
+  math (``mix``, ``flush_mix``, ``stale_weight``).
+
+Runtimes (``repro.core.runtimes``) consume ONLY this protocol — adding
+an algorithm is a registry entry, never runtime surgery.  See
+docs/ARCHITECTURE.md for a ~60-line worked example.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import Callable, List, Optional, Tuple
+
+import jax.numpy as jnp
+import numpy as np
+
+_STALE_TABLE_SIZE = 4096
+
+
+def _agg():
+    """repro.core.aggregation, imported lazily: this module must stay a
+    leaf (numpy/jax only at import time) because the runtimes import it
+    while the ``repro.core`` package is still initializing."""
+    from repro.core import aggregation
+    return aggregation
+
+
+class RoundContext:
+    """What a policy may read when masking a *round* (stacked form).
+
+    All inputs are lazy and cached: ``values()`` (Eq. 1 V per client,
+    float64) and ``norms()`` (||eff_grad||^2 per client, device array)
+    each cost one vmapped dispatch on first access; ``server_delta()``
+    is theta^{k-1} - theta^{k-2} (the EAFLM Eq. 3 numerator).  ``part``
+    is the round's participating set S; ``comm`` records scalar reports.
+    """
+
+    def __init__(self, *, part: np.ndarray, comm, values_fn: Callable,
+                 norms_fn: Callable, server_delta_fn: Callable):
+        self.part = part
+        self.comm = comm
+        self._values_fn = values_fn
+        self._norms_fn = norms_fn
+        self._server_delta_fn = server_delta_fn
+        self._values = None
+        self._norms = None
+
+    def values(self) -> np.ndarray:
+        if self._values is None:
+            self._values = np.asarray(self._values_fn(), np.float64)
+        return self._values
+
+    def norms(self):
+        if self._norms is None:
+            self._norms = self._norms_fn()
+        return self._norms
+
+    def server_delta(self):
+        return self._server_delta_fn()
+
+
+class UploadPolicy:
+    """Base policy: upload everything (AFL / FedAvg / FedAsync).
+
+    Subclasses override the decision hooks; the flags tell runtimes
+    which stacked inputs to compute (one vmapped dispatch per window).
+    """
+
+    needs_values: bool = False   # Eq. 1 V (needs client eval + prev grads)
+    needs_norms: bool = False    # ||eff_grad||^2 per client
+    reports: bool = False        # a scalar report precedes each decision
+
+    def __init__(self, cfg):
+        self.cfg = cfg
+
+    # ---------------------------------------------------- event runtimes ---
+    def begin_run(self, num_clients: int) -> None:
+        """Reset per-run state (called once by every runtime)."""
+
+    def window_threshold(self, server_delta_fn: Callable) -> float:
+        """Server-side threshold, evaluated once per window / mix point
+        (EAFLM's Eq. 3 RHS).  ``server_delta_fn()`` lazily materialises
+        theta^{k-1} - theta^{k-2}; the default never calls it."""
+        return 0.0
+
+    def decide(self, i: int, value: Optional[float], norm: Optional[float],
+               threshold: float) -> bool:
+        """Scalar per-client decision, called in arrival order.  ``value``
+        / ``norm`` are only supplied when the matching ``needs_*`` flag
+        is set."""
+        return True
+
+    # ----------------------------------------------------- round runtime ---
+    def round_mask(self, ctx: RoundContext
+                   ) -> Tuple[np.ndarray, Optional[List[float]]]:
+        """Stacked form: boolean upload mask over all clients for one
+        synchronous round, plus the per-client values to log in the
+        round record (None when the algorithm has none)."""
+        return ctx.part.copy(), None
+
+    # ------------------------------------------------- traced SPMD form ---
+    def gate_stacked(self, values=None, sq_norms=None, server_delta_sq=None):
+        """jit-traceable stacked gate for SPMD steps (the cross-silo
+        pod-scale path, ``repro.launch.steps.make_fl_train_step``):
+        returns a float mask over the leading silo axis.  Inputs mirror
+        the host-side forms; all are device arrays inside a trace.
+        Callers must pass at least one stacked input — SPMD steps always
+        have ``values`` at hand (Eq. 1 V doubles as their logging
+        quantity), so the default gate shapes its all-ones mask off
+        whichever input arrived."""
+        ref = values if values is not None else sq_norms
+        if ref is None:
+            raise ValueError(
+                "gate_stacked needs at least one stacked input "
+                "(values or sq_norms) to shape the silo mask")
+        return jnp.ones_like(ref)
+
+
+class Aggregator:
+    """Default aggregation: masked weighted FedAvg for the synchronous
+    runtimes, plain async mix with the config's staleness decay for the
+    event runtimes.  Algorithms override ``_stale_fn`` (FedAsync) or the
+    mix hooks."""
+
+    def __init__(self, cfg):
+        self.cfg = cfg
+        # rho: the event runtimes read THIS attribute (not the config),
+        # so an aggregator subclass can own its mixing rate
+        self.mix_rate = getattr(cfg, "mix_rate", 0.5)
+        self._table: Optional[np.ndarray] = None
+
+    def begin_run(self, num_clients: int) -> None:
+        """Reset per-run state (the staleness table is pure, kept)."""
+
+    # ------------------------------------------------------- staleness ---
+    def _stale_fn(self, taus: np.ndarray):
+        """Vectorised s(tau) — override point for FedAsync's family."""
+        return _agg().staleness_weight(taus, getattr(self.cfg,
+                                                     "staleness_kind", "poly"))
+
+    def stale_weight(self, tau: int) -> float:
+        """s(tau) via a lazily-built lookup table — one device computation
+        per run instead of one per upload."""
+        if self._table is None:
+            self._table = np.asarray(
+                self._stale_fn(np.arange(_STALE_TABLE_SIZE)), np.float64)
+        if tau < len(self._table):
+            return float(self._table[tau])
+        return float(self._stale_fn(np.asarray([tau]))[0])
+
+    # ------------------------------------------------------------ mixes ---
+    def mix(self, global_params, recon, rho_s):
+        """Single-arrival async mix (jitted, shared executable)."""
+        return _agg().async_mix_jit(global_params, recon, rho_s)
+
+    def flush_mix(self, global_params, src, rows, coef, rho_sbar):
+        """FedBuff-style buffer flush: staleness-weighted mean of the
+        buffered rows of ``src``, then one async mix (fused jit)."""
+        return _agg().flush_mix_jit(global_params, src, rows, coef, rho_sbar)
+
+    def round_aggregate(self, global_params, stacked_params, mask, counts):
+        """Masked weighted FedAvg (Algorithm 1 line 16); keeps the old
+        global model when the mask is empty."""
+        return _agg().aggregate_or_keep(global_params, stacked_params, mask,
+                                        counts)
+
+
+@dataclass(frozen=True)
+class Algorithm:
+    """A registered algorithm: factories for its two protocol objects
+    plus how the event-driven entry point should run it (``"async"`` —
+    the per-arrival runtimes — or ``"sync-barrier"`` for round-barrier
+    baselines like FedAvg)."""
+
+    name: str
+    policy_factory: Callable[[object], UploadPolicy]
+    aggregator_factory: Callable[[object], Aggregator] = Aggregator
+    event_mode: str = "async"          # 'async' | 'sync-barrier'
+    description: str = ""
+
+    def make_policy(self, cfg) -> UploadPolicy:
+        return self.policy_factory(cfg)
+
+    def make_aggregator(self, cfg) -> Aggregator:
+        return self.aggregator_factory(cfg)

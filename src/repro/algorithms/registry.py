@@ -1,0 +1,82 @@
+"""String registry for pluggable FL algorithms.
+
+``get_algorithm("vafl")`` resolves a name to an ``Algorithm`` spec
+(policy + aggregator factories); ``FLRunConfig.algorithm`` strings go
+through here, so existing configs keep working while new algorithms
+become registry entries instead of four-way runtime surgery.
+
+This module is intentionally a leaf (stdlib-only imports) so the
+runtimes and the config module can depend on it without cycles; the
+built-in algorithm modules are imported lazily on first lookup.
+"""
+from __future__ import annotations
+
+import importlib
+from typing import Dict, Tuple
+
+_REGISTRY: Dict[str, object] = {}
+_BUILTIN_OWNED: set = set()   # names whose current entry came from a builtin
+
+# imported on first lookup; each module registers its algorithms at
+# import time (register calls at module scope)
+_BUILTIN_MODULES = ("repro.algorithms.builtin", "repro.algorithms.fedasync")
+_builtins_loaded = False
+
+
+def _ensure_builtins() -> None:
+    global _builtins_loaded
+    if not _builtins_loaded:
+        for mod in _BUILTIN_MODULES:
+            importlib.import_module(mod)
+        # only after every module imported cleanly: a failed import must
+        # stay retryable, not poison the registry for the process
+        _builtins_loaded = True
+
+
+def register_algorithm(alg, *, overwrite: bool = False) -> None:
+    """Register an ``Algorithm`` spec under ``alg.name``.  Third-party
+    algorithms call this at import time; re-registration is an error
+    unless ``overwrite`` is set (keeps typo'd duplicates loud)."""
+    if not overwrite and alg.name in _REGISTRY:
+        raise ValueError(f"algorithm {alg.name!r} already registered")
+    _REGISTRY[alg.name] = alg
+    _BUILTIN_OWNED.discard(alg.name)
+
+
+def _register_builtin(alg) -> None:
+    """Builtin registration: idempotent across re-imports (a failed lazy
+    load stays retryable), and it never clobbers a third-party entry — a
+    plugin that deliberately registered a builtin name *before* the lazy
+    load wins; accidental duplicates between plugins stay loud through
+    ``register_algorithm``."""
+    if alg.name in _REGISTRY and alg.name not in _BUILTIN_OWNED:
+        return
+    _REGISTRY[alg.name] = alg
+    _BUILTIN_OWNED.add(alg.name)
+
+
+def get_algorithm(name: str):
+    """Resolve an algorithm name; raises ValueError naming the registered
+    set, so config typos fail with the fix in the message."""
+    _ensure_builtins()
+    try:
+        return _REGISTRY[name]
+    except KeyError:
+        raise ValueError(
+            f"unknown algorithm {name!r}; registered algorithms: "
+            f"{', '.join(available_algorithms())}") from None
+
+
+# canonical listing order for the built-in family; extras follow in
+# registration order (module import order can vary with the entry path,
+# so the raw dict order is not stable across programs)
+_PREFERRED = ("afl", "vafl", "eaflm", "fedavg", "fedasync",
+              "fedasync_poly", "fedasync_const")
+
+
+def available_algorithms() -> Tuple[str, ...]:
+    """Registered names: the built-in family first (stable order), then
+    third-party registrations in registration order."""
+    _ensure_builtins()
+    head = [n for n in _PREFERRED if n in _REGISTRY]
+    return tuple(head) + tuple(n for n in _REGISTRY if n not in _PREFERRED)

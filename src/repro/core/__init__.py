@@ -1,6 +1,14 @@
 # The paper's primary contribution: VAFL — communication-value-gated
 # asynchronous federated learning (value calc, selection, aggregation,
-# async scheduler, server runtimes).
-from repro.core import aggregation, client, metrics, scheduler, server, value
-from repro.core.server import (ALGORITHMS, FLRunConfig, run_event_driven,
-                               run_round_based)
+# async scheduler, algorithm-agnostic runtimes, Federation facade).
+from repro.core import aggregation, client, metrics, scheduler, value
+from repro.core.config import FLRunConfig
+from repro.core.runtimes import run_event_driven, run_round_based
+from repro.core.federation import Federation
+from repro.core import server  # back-compat facade (ALGORITHMS etc.)
+
+
+def __getattr__(name):
+    if name == "ALGORITHMS":   # live registry view (see core/server.py)
+        return server.ALGORITHMS
+    raise AttributeError(name)

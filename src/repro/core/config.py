@@ -1,0 +1,81 @@
+"""FL run configuration.
+
+``FLRunConfig.algorithm`` is a string resolved through the algorithm
+registry (``repro.algorithms.get_algorithm``) — existing configs keep
+working, and both it and ``engine`` are validated at construction so a
+typo fails immediately with the registered names in the message instead
+of deep inside a runtime.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+from typing import Callable, Optional
+
+from repro.algorithms.registry import get_algorithm
+from repro.core.client import LocalSpec
+
+ENGINES = ("sequential", "batched")
+
+
+@dataclass
+class FLRunConfig:
+    algorithm: str = "vafl"
+    num_clients: int = 7
+    rounds: int = 200                  # R (server rounds / event budget)
+    local: LocalSpec = field(default_factory=LocalSpec)
+    target_acc: float = 0.94
+    eval_every: int = 1
+    seed: int = 0
+    # EAFLM constants (paper: xi_d = 1/D, D = 1, alpha = 0.98).  beta and m
+    # are unspecified "constant coefficients"; the alpha^2*beta*m^2 product
+    # is treated as ONE calibrated constant (m folded into beta, m=1),
+    # because m=N's quadratic growth silences the rule entirely for larger
+    # federations on our testbed.  beta=1e-2 reproduces the paper's 36-58%
+    # suppression range across experiments a-d (benchmarks/table3_ccr.py).
+    eaflm_alpha: float = 0.98
+    eaflm_beta: float = 1e-2
+    # update compression (repro.compress): codec spec for accepted uploads
+    # ("identity", "int8", "int4", "topk0.1", "topk0.1_int8", ...) and an
+    # optional codec for the model broadcast (no error feedback there —
+    # clients train from the lossy model they actually received).
+    compressor: str = "identity"
+    broadcast_compressor: Optional[str] = None
+    error_feedback: bool = True        # SGD-EF residuals on the upload path
+    # partial participation: fraction of clients in the round's set S
+    # (Algorithm 1 "for each i in S"); 1.0 = all clients every round
+    participation: float = 1.0
+    # round-based runtime: log per-client test accuracy in every
+    # RoundRecord (the paper's Fig. 5/6 data).  This costs one vmapped
+    # client eval over ALL clients per round even for algorithms that
+    # never read it (afl/eaflm/fedavg) — turn it off at large N; VAFL
+    # still computes the accuracies it needs for Eq. 1 regardless.
+    record_client_accs: bool = True
+    # event-driven runtime
+    mix_rate: float = 0.5              # rho
+    staleness_kind: str = "poly"       # 'poly' | 'const' | 'hinge'
+    events_per_eval: int = 7
+    value_backend: Optional[Callable] = None  # optional kernel for ||dg||^2
+    # batched async engine (docs/ASYNC_ENGINE.md): engine="batched" keeps
+    # per-client state device-resident as stacked pytrees and executes each
+    # scheduler window (up to max_batch completions, pop_window) as ONE
+    # vmapped local update; accepted uploads flow through a FedBuff-style
+    # buffer of buffer_size reconstructions mixed as a staleness-weighted
+    # mean.  max_batch=0 means "window = num_clients".  The max_batch=1 +
+    # buffer_size=1 configuration reproduces the sequential per-event loop
+    # exactly (tests/test_async_engine.py).
+    engine: str = "sequential"         # 'sequential' | 'batched'
+    max_batch: int = 0                 # pop_window bound (0 = num_clients)
+    buffer_size: int = 1               # K reconstructions buffered per mix
+
+    def __post_init__(self):
+        get_algorithm(self.algorithm)  # raises ValueError listing names
+        if self.engine not in ENGINES:
+            raise ValueError(
+                f"unknown engine: {self.engine!r}; known engines: "
+                f"{', '.join(ENGINES)}")
+
+    def make_algorithm(self):
+        """Resolve this config's algorithm to per-run protocol objects:
+        ``(Algorithm spec, UploadPolicy, Aggregator)``."""
+        alg = get_algorithm(self.algorithm)
+        return alg, alg.make_policy(self), alg.make_aggregator(self)

@@ -1,0 +1,127 @@
+"""``Federation`` — the one-object public API for running an FL
+experiment.
+
+Every example used to hand-wire the same four callables
+(``init_params_fn`` / ``loss_fn`` / ``evaluate_fn`` / ``client_eval_fn``)
+plus an ``FLRunConfig`` and pick a runtime function.  The facade bundles
+that plumbing:
+
+    from repro.core import Federation
+
+    fed = Federation(model="mlp", data=fed_data, test_data=(xte, yte),
+                     algorithm="vafl", compressor="topk0.1_int8")
+    result = fed.run(rounds=200)
+
+``model`` is a registry-style string ("mlp", "cnn"), a ``(forward_fn,
+init_fn, model_cfg)`` triple for any classifier pytree, or omitted
+entirely when explicit ``init_params_fn``/``loss_fn``/``evaluate_fn``
+are passed (arbitrary workloads — see examples/fl_llm_finetune.py).
+``algorithm`` is any registered name (``repro.algorithms``); extra
+keyword arguments flow into ``FLRunConfig`` unchanged, so every knob
+(engine, buffer_size, participation, DP, ...) stays reachable.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Callable, Optional, Tuple
+
+from repro.core.client import (LocalSpec, make_evaluator,
+                               make_weighted_classifier_loss)
+from repro.core.config import FLRunConfig
+from repro.core.runtimes import run_event_driven, run_round_based
+
+MODES = ("round", "event")
+
+
+def _resolve_model(model):
+    """"mlp"/"cnn" shorthands or a (forward_fn, init_fn, cfg) triple."""
+    if isinstance(model, str):
+        from repro.models.cnn import (CNNConfig, MLPConfig, cnn_forward,
+                                      cnn_init, mlp_forward, mlp_init)
+        if model == "mlp":
+            return mlp_forward, mlp_init, MLPConfig(hidden=(128, 64))
+        if model == "cnn":
+            return cnn_forward, cnn_init, CNNConfig()
+        raise ValueError(f"unknown model {model!r}; known: 'mlp', 'cnn' "
+                         "(or pass a (forward_fn, init_fn, cfg) triple)")
+    try:
+        forward_fn, init_fn, cfg = model
+    except (TypeError, ValueError):
+        raise ValueError(
+            "model must be 'mlp', 'cnn', or a (forward_fn, init_fn, "
+            f"model_cfg) triple; got {model!r}") from None
+    return forward_fn, init_fn, cfg
+
+
+class Federation:
+    """A configured federation: data + model + algorithm + codecs, ready
+    to ``run()`` on any runtime."""
+
+    def __init__(self, *, data, model="mlp", test_data=None,
+                 algorithm: str = "vafl", compressor: str = "identity",
+                 broadcast_compressor: Optional[str] = None,
+                 local: Optional[LocalSpec] = None,
+                 init_params_fn: Optional[Callable] = None,
+                 loss_fn: Optional[Callable] = None,
+                 evaluate_fn: Optional[Callable] = None,
+                 client_eval_fn: Optional[Callable] = None,
+                 eval_batch: int = 500, **config):
+        self.data = data
+        num_clients = len(data.counts)
+        if config.pop("num_clients", num_clients) != num_clients:
+            raise ValueError(
+                f"num_clients is derived from the data ({num_clients} "
+                "clients in data.counts); don't pass a different value")
+
+        explicit = (init_params_fn, loss_fn, evaluate_fn)
+        if any(f is not None for f in explicit):
+            if not all(f is not None for f in explicit):
+                raise ValueError(
+                    "explicit mode needs all of init_params_fn, loss_fn "
+                    "and evaluate_fn (got a partial set)")
+            self.init_params_fn = init_params_fn
+            self.loss_fn = loss_fn
+            self.evaluate_fn = evaluate_fn
+        else:
+            forward_fn, init_fn, mcfg = _resolve_model(model)
+            if test_data is None:
+                raise ValueError(
+                    "test_data=(test_images, test_labels) is required "
+                    "unless an explicit evaluate_fn is passed")
+            xte, yte = test_data
+            self.init_params_fn = lambda k: init_fn(mcfg, k)
+            self.loss_fn = make_weighted_classifier_loss(forward_fn, mcfg)
+            self.evaluate_fn = make_evaluator(
+                forward_fn, mcfg, xte, yte, batch=min(eval_batch, len(yte)))
+        self.client_eval_fn = client_eval_fn
+
+        config.setdefault("events_per_eval", num_clients)
+        self.config = FLRunConfig(
+            algorithm=algorithm, num_clients=num_clients,
+            local=local or LocalSpec(), compressor=compressor,
+            broadcast_compressor=broadcast_compressor, **config)
+
+    def run(self, rounds: Optional[int] = None, *, mode: str = "round",
+            speed=None, verbose: bool = False, **overrides):
+        """Run the federation and return a ``RunResult``.
+
+        ``mode``: "round" (the paper's Algorithm 1) or "event" (the
+        wall-clock async simulation; honors ``engine="batched"`` and, for
+        sync-barrier algorithms like fedavg, the round barrier).
+        ``rounds`` and any other ``FLRunConfig`` field can be overridden
+        per call without rebuilding the federation."""
+        if mode not in MODES:
+            raise ValueError(f"unknown mode {mode!r}; known: {MODES}")
+        if "num_clients" in overrides:
+            raise ValueError("num_clients is fixed by the federation's "
+                             "data; it cannot be overridden per run")
+        if rounds is not None:
+            overrides["rounds"] = rounds
+        cfg = (dataclasses.replace(self.config, **overrides) if overrides
+               else self.config)
+        kw = dict(init_params_fn=self.init_params_fn, loss_fn=self.loss_fn,
+                  fed_data=self.data, evaluate_fn=self.evaluate_fn,
+                  client_eval_fn=self.client_eval_fn, verbose=verbose)
+        if mode == "round":
+            return run_round_based(cfg, **kw)
+        return run_event_driven(cfg, speed=speed, **kw)

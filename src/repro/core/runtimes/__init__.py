@@ -1,0 +1,8 @@
+# Algorithm-agnostic FL runtimes (docs/ARCHITECTURE.md): each executes
+# the UploadPolicy/Aggregator protocol from repro.algorithms —
+#   rounds   — the paper's Algorithm 1 (synchronous rounds, Table III)
+#   events   — sequential per-completion async loop (reference engine)
+#   batched  — windowed vmapped scale engine (docs/ASYNC_ENGINE.md)
+#   sync     — round-barrier baseline (FedAvg idle-time comparison)
+from repro.core.runtimes.events import run_event_driven
+from repro.core.runtimes.rounds import run_round_based

@@ -1,0 +1,232 @@
+"""Batched async execution engine (docs/ASYNC_ENGINE.md).
+
+Per-client state lives in device-resident stacked pytrees (leading
+axis = client) instead of Python lists; each scheduler window of up to
+``max_batch`` completions runs as ONE vmapped jitted local update over
+the gathered sub-stack, and accepted uploads flow through a
+FedBuff-style buffer flushed as a staleness-weighted mean every
+``buffer_size`` arrivals.
+
+The algorithm is the ``UploadPolicy`` / ``Aggregator`` protocol: the
+policy's declared stacked inputs (Eq. 1 values, gradient norms) are
+computed once per window as a single vmapped dispatch — the one-dispatch
+hot path — and its scalar ``decide`` is applied per event in arrival
+order; the server-delta threshold is evaluated once per window (at the
+mix point).  The compression plumbing is unchanged — codec payloads and
+error feedback stay per-client.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.common.pytree import stacked_index, tree_bytes, tree_gather
+from repro.core.aggregation import buffered_coefs, buffered_mix
+from repro.core.client import make_local_update
+from repro.core.metrics import CommStats, RoundRecord, RunResult
+from repro.core.runtimes.common import (_BROADCAST, _UPLOAD,
+                                        _apply_downloads_jit,
+                                        _compressed_broadcast,
+                                        _compressed_upload, _enc_seed,
+                                        _event_helpers, _gather_jit,
+                                        _make_codecs, _scatter_jit,
+                                        _stack_jit, _tree_delta, _value_fn)
+from repro.core.scheduler import EventScheduler
+
+
+def _run_event_batched(run_cfg, policy, aggregator, init_params_fn, loss_fn,
+                       fed_data, evaluate_fn, client_eval_fn, speed,
+                       verbose) -> RunResult:
+    N = run_cfg.num_clients
+    rng = jax.random.key(run_cfg.seed)
+    rng, krng = jax.random.split(rng)
+    global_params = init_params_fn(krng)
+    comm = CommStats(model_bytes=tree_bytes(global_params))
+    codec, bcodec, ef = _make_codecs(run_cfg)
+    sq_diff = _value_fn(run_cfg)
+
+    local_update = make_local_update(loss_fn, run_cfg.local)
+    data = {"images": jnp.asarray(fed_data.images),
+            "labels": jnp.asarray(fed_data.labels),
+            "mask": jnp.asarray(fed_data.mask)}
+
+    # device-resident stacked per-client state: no Python lists of full
+    # pytrees, everything gathers/scatters on a leading axis
+    client_params = jax.tree.map(
+        lambda x: jnp.broadcast_to(x, (N,) + x.shape), global_params)
+    prev_grads = jax.tree.map(
+        lambda x: jnp.zeros((N,) + x.shape, jnp.float32), global_params)
+    model_version = np.zeros(N, int)  # version each client last downloaded
+    server_version = 0
+    prev_global = global_params
+    prev_prev_global = global_params
+
+    batch_eval, values_fn, norms_fn = _event_helpers(
+        run_cfg, client_eval_fn, sq_diff)
+
+    W = run_cfg.max_batch if run_cfg.max_batch > 0 else N
+    W = max(1, min(W, N))
+    K = max(1, run_cfg.buffer_size)
+    total_events = run_cfg.rounds * N
+    sched = EventScheduler(N, speed)
+    records: list = []
+    # the FedBuff buffer: (stacked_tree, row) references — rows of the
+    # window's vmapped output for identity uploads, size-1 stacks for
+    # codec reconstructions; gathered/stacked only at flush time
+    buffer: list = []
+    buf_stale: list = []              # their staleness weights s(tau)
+
+    def flush():
+        nonlocal global_params, prev_global, prev_prev_global, server_version
+        prev_prev_global = prev_global
+        prev_global = global_params
+        if len(buffer) == 1:          # bit-exact sequential mix (K=1 path)
+            ref, row = buffer[0]
+            global_params = buffered_mix(
+                global_params, [stacked_index(ref, row)], buf_stale,
+                aggregator.mix_rate, mix=aggregator.mix)
+        else:
+            groups: list = []         # consecutive same-source rows
+            for ref, row in buffer:
+                if groups and groups[-1][0] is ref:
+                    groups[-1][1].append(row)
+                else:
+                    groups.append((ref, [row]))
+            if len(groups) == 1:      # common case: one source, jitted gather
+                src, rows = groups[0]
+            else:                     # buffer spans windows/codec payloads
+                src = jax.tree.map(
+                    lambda *xs: jnp.concatenate(xs, 0),
+                    *[tree_gather(ref, np.asarray(rows))
+                      for ref, rows in groups])
+                rows = range(len(buffer))
+            coef, rho_sbar = buffered_coefs(buf_stale, aggregator.mix_rate)
+            global_params = aggregator.flush_mix(
+                global_params, src, np.asarray(rows, np.int32), coef,
+                rho_sbar)
+        server_version += 1
+        buffer.clear()
+        buf_stale.clear()
+
+    ev = 0
+    while ev < total_events:
+        times, idx_np = sched.pop_window(min(W, total_events - ev))
+        t_now = float(times[-1])
+        w = len(idx_np)
+        idx = jnp.asarray(idx_np)
+        rng, urng = jax.random.split(rng)
+        sub_base = _gather_jit(client_params, idx)     # the downloaded models
+        d_w = _gather_jit(data, idx)
+        newp, eff, _ = local_update(sub_base, d_w, urng)
+
+        # the policy's declared stacked inputs: ONE vmapped dispatch per
+        # window each, then cheap host-side scalar decisions per event
+        V_w = norms_w = None
+        if policy.needs_values:
+            accs = batch_eval(newp)
+            V_w = np.asarray(
+                values_fn(_gather_jit(prev_grads, idx), eff, accs),
+                np.float64)
+        if policy.needs_norms:
+            norms_w = np.asarray(norms_fn(eff), np.float64)
+        # the policy's server-side threshold (EAFLM Eq. 3) is evaluated
+        # once per WINDOW, from the deltas as of window start — an
+        # intentional engine approximation: mid-window flushes (whenever
+        # buffer_size < window) advance the server deltas without
+        # re-thresholding.  The sequential engine recomputes per event;
+        # max_batch=1/buffer_size=1 is the bit-exact configuration.
+        thr = policy.window_threshold(
+            lambda: _tree_delta(prev_global, prev_prev_global))
+
+        dl_rel = np.empty(w, np.int64)      # per-event index into ver_trees
+        ver_trees: list = []                # distinct globals downloaded
+        ver_pos: dict = {}                  # server_version -> position
+        enc_downloads: list = []            # per-client lossy downlink trees
+        for j in range(w):
+            i = int(idx_np[j])
+            if policy.reports:
+                comm.record_report(1)
+            upload = policy.decide(
+                i, None if V_w is None else float(V_w[j]),
+                None if norms_w is None else float(norms_w[j]), thr)
+
+            if upload:
+                if codec.is_identity:
+                    buffer.append((newp, j))
+                    comm.record_upload(1)
+                else:
+                    recon = _compressed_upload(
+                        codec, ef, comm, stacked_index(sub_base, j),
+                        stacked_index(newp, j), i,
+                        _enc_seed(run_cfg, ev + j, i, _UPLOAD))
+                    buffer.append((jax.tree.map(lambda x: x[None], recon), 0))
+                buf_stale.append(aggregator.stale_weight(
+                    server_version - model_version[i]))
+                if len(buffer) >= K:
+                    flush()
+
+            if bcodec is None:
+                comm.record_broadcast(1)
+                if server_version not in ver_pos:
+                    ver_pos[server_version] = len(ver_trees)
+                    ver_trees.append(global_params)
+                dl_rel[j] = ver_pos[server_version]
+            else:
+                enc_downloads.append(_compressed_broadcast(
+                    bcodec, comm, global_params, 1,
+                    _enc_seed(run_cfg, ev + j, i, _BROADCAST)))
+            model_version[i] = server_version
+            # restart from the client's own completion time — window
+            # execution must not barrier the simulated clock
+            sched.schedule(i, start=times[j])
+
+        if any(ref is newp for ref, _ in buffer):
+            # detach leftover buffer entries from the W-wide window output
+            # before it goes out of scope: under gating a partially-full
+            # buffer would otherwise pin one full (W, ...) stack per window
+            # until the flush — gather just the buffered rows instead
+            rows = np.asarray([r for ref, r in buffer if ref is newp])
+            sub = tree_gather(newp, rows)
+            fresh = iter(range(len(rows)))
+            buffer[:] = [(sub, next(fresh)) if ref is newp else (ref, r)
+                         for ref, r in buffer]
+
+        # write the window back in one jitted call each: downloads gather
+        # from the stack of distinct globals, prev eff-grads scatter direct.
+        # The version count varies per window under gating, so the stack is
+        # padded to the next power of two — O(log W) compiled variants
+        # instead of one per distinct count (padding rows are never indexed)
+        if bcodec is None:
+            if len(ver_trees) > 1:
+                bucket = 1 << (len(ver_trees) - 1).bit_length()
+                padded = ver_trees + [ver_trees[-1]] * (bucket
+                                                        - len(ver_trees))
+                vstack = _stack_jit(tuple(padded))
+            else:
+                vstack = jax.tree.map(lambda x: x[None], ver_trees[0])
+            client_params = _apply_downloads_jit(client_params, idx, vstack,
+                                                 jnp.asarray(dl_rel))
+        else:
+            client_params = _scatter_jit(client_params, idx,
+                                         _stack_jit(tuple(enc_downloads)))
+        prev_grads = _scatter_jit(prev_grads, idx, eff)
+
+        prev_ev, ev = ev, ev + w
+        epe = run_cfg.events_per_eval
+        if ev // epe > prev_ev // epe:
+            acc = float(evaluate_fn(global_params))
+            records.append(RoundRecord(round=ev, time=t_now, global_acc=acc,
+                                       uploads_so_far=comm.model_uploads))
+            if verbose:
+                print(f"[{run_cfg.algorithm}/batched] ev {ev:5d} "
+                      f"t={t_now:8.1f} acc={acc:.4f} "
+                      f"uploads={comm.model_uploads}")
+
+    if buffer:  # partial buffer at run end — flush so no update is lost
+        flush()
+
+    res = RunResult(run_cfg.algorithm, records, comm,
+                    run_cfg.target_acc).finalize_target()
+    res.idle_fraction = float(sched.idle_fraction().mean())
+    return res

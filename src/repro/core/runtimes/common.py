@@ -1,0 +1,189 @@
+"""Plumbing shared by the four FL runtimes (rounds / events / batched /
+sync): codec wiring with per-client error feedback, deterministic
+per-transfer encode seeds, participation sampling, and the memoized
+jitted helper set the event runtimes route per-client math through.
+
+Nothing in here knows which algorithm is running — runtimes consume the
+``UploadPolicy`` / ``Aggregator`` protocol (repro.algorithms) for every
+algorithm-dependent decision.
+"""
+from __future__ import annotations
+
+from functools import lru_cache
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.common.pytree import (stacked_index, tree_gather, tree_scatter,
+                                 tree_stack, tree_sq_norm)
+from repro.compress import ErrorFeedback, compress_update, get_codec
+from repro.core import value as value_lib
+
+
+def _value_fn(cfg):
+    if cfg.value_backend is not None:
+        return cfg.value_backend
+    from repro.common.pytree import tree_sq_diff_norm
+    return tree_sq_diff_norm
+
+
+# ------------------------------------------------- compression plumbing ---
+
+def _make_codecs(run_cfg):
+    codec = get_codec(run_cfg.compressor)
+    bcodec = None
+    if run_cfg.broadcast_compressor not in (None, "", "identity", "none"):
+        bcodec = get_codec(run_cfg.broadcast_compressor)
+    return codec, bcodec, ErrorFeedback(enabled=run_cfg.error_feedback)
+
+
+_UPLOAD, _BROADCAST = 1, 2
+
+
+def _participation_mask(part_rng, participation: float, n: int) -> np.ndarray:
+    """The round's participating set S — ONE sampler shared by the
+    round-based runtime and the sync barrier so the FedAvg baseline stays
+    comparable under partial participation."""
+    if participation < 1.0:
+        k = max(1, int(round(participation * n)))
+        part = np.zeros(n, bool)
+        part[part_rng.choice(n, size=k, replace=False)] = True
+        return part
+    return np.ones(n, bool)
+
+
+def _enc_seed(run_cfg, step: int, i: int, kind: int) -> int:
+    """Deterministic per-transfer seed: payloads are reproducible from the
+    run seed alone, and stochastic rounding decorrelates across transfers.
+    Multiplicative mixing over (seed, kind, step, client) so distinct
+    transfers never share a seed (additive offsets would collide, e.g.
+    round-t broadcast vs a later client upload)."""
+    h = (run_cfg.seed ^ (kind * 0x9E3779B9)) & 0xFFFFFFFF
+    h = (h * 1_000_003 + step) & 0xFFFFFFFF
+    h = (h * 1_000_003 + i) & 0xFFFFFFFF
+    return h
+
+
+def _tree_delta(a, b):
+    return jax.tree.map(
+        lambda x, y: x.astype(jnp.float32) - y.astype(jnp.float32), a, b)
+
+
+def _tree_apply_delta(base, delta):
+    return jax.tree.map(
+        lambda b, d: (b.astype(jnp.float32) + d.astype(jnp.float32)
+                      ).astype(b.dtype), base, delta)
+
+
+def _compressed_upload(codec, ef, comm, base, client_tree, i, seed):
+    """One client's compressed upload: encode codec(delta vs ``base``, the
+    model the client downloaded) with error feedback, account the wire
+    bytes, and return the reconstruction the server actually receives."""
+    delta = _tree_delta(client_tree, base)
+    payload, decoded = compress_update(codec, ef, i, delta, seed=seed)
+    comm.record_upload(1, nbytes=payload.nbytes)
+    return _tree_apply_delta(base, decoded)
+
+
+def _compressed_broadcast(bcodec, comm, params, n, seed):
+    """Encode one model broadcast to ``n`` clients; returns the lossy
+    model they actually receive (no EF on the downlink — clients train
+    from what arrived)."""
+    bp = bcodec.encode(params, seed=seed)
+    comm.record_broadcast(n, nbytes=n * bp.nbytes)
+    return bcodec.decode(bp)
+
+
+def _round_uploads(run_cfg, codec, ef, comm, base, stacked, mask, t):
+    """One synchronous round's upload leg, shared by the round-based and
+    sync-barrier runtimes: account the selected set's uploads; with a
+    codec, each selected client ships codec(delta vs ``base``, its
+    download) with error feedback and the reconstructions are scattered
+    back into the stack (the server aggregates what it received)."""
+    sel = [int(i) for i in np.flatnonzero(mask)]
+    if codec.is_identity:
+        comm.record_upload(len(sel))
+        return stacked
+    recon = [_compressed_upload(codec, ef, comm, base,
+                                stacked_index(stacked, i), i,
+                                _enc_seed(run_cfg, t, i, _UPLOAD))
+             for i in sel]
+    if sel:   # one scatter per leaf, not one stack copy per client
+        stacked = tree_scatter(stacked, jnp.asarray(sel), tree_stack(recon))
+    return stacked
+
+
+def _round_broadcast(run_cfg, bcodec, comm, global_params, n, t):
+    """One synchronous round's broadcast leg: returns the model the
+    clients actually receive (lossy under a downlink codec)."""
+    if bcodec is None:
+        comm.record_broadcast(n)
+        return global_params
+    return _compressed_broadcast(bcodec, comm, global_params, n,
+                                 _enc_seed(run_cfg, t, 0, _BROADCAST))
+
+
+# ----------------------------------------------- jitted event-path helpers ---
+
+# module-level jitted composites: built once, reused across runs — repeated
+# runs over the same shapes (benchmark sweeps, engine comparisons) hit the
+# compile cache instead of re-jitting per run
+_scatter_jit = jax.jit(tree_scatter)
+_gather_jit = jax.jit(tree_gather)
+# stacking a tuple of pytrees eagerly costs one dispatch per element per
+# leaf; under jit it is one compiled concat (retraces only on a new length)
+_stack_jit = jax.jit(lambda trees: tree_stack(list(trees)))
+
+
+@jax.jit
+def _apply_downloads_jit(cp, idx, vstack, rel):
+    """Window download write-back: every client in ``idx`` receives the
+    global model version it downloaded (``vstack[rel]``), one scatter."""
+    return jax.tree.map(
+        lambda s, v: s.at[idx].set(v[rel].astype(s.dtype)), cp, vstack)
+
+
+def _round_helpers(run_cfg, client_eval_fn):
+    """Jitted stacked round inputs shared by the round-based and
+    sync-barrier runtimes: per-client eval, Eq. 1 values, grad norms.
+    All are lazy jits — nothing compiles unless the policy (or the
+    round record) actually reads the input."""
+    sq_diff = _value_fn(run_cfg)
+    N = run_cfg.num_clients
+    batch_eval = jax.jit(jax.vmap(client_eval_fn))
+    values_fn = jax.jit(
+        lambda gp, gc, accs: value_lib.communication_values_stacked(
+            gp, gc, accs, N, sq_diff_fn=sq_diff))
+    grad_norms_fn = jax.jit(jax.vmap(tree_sq_norm))
+    return batch_eval, values_fn, grad_norms_fn
+
+
+def _event_helpers(run_cfg, client_eval_fn, sq_diff):
+    """Jitted helpers shared by the sequential loop and the batched engine.
+    Both engines route per-client math through the SAME compiled
+    executables (vmapped over the window axis; the sequential loop uses
+    size-1 stacks), so the batched engine at max_batch=1/buffer_size=1 is
+    bit-identical to the per-event loop."""
+    try:
+        return _event_helpers_cached(run_cfg.num_clients, client_eval_fn,
+                                     sq_diff)
+    except TypeError:   # unhashable eval/backend: build uncached
+        return _build_event_helpers(run_cfg.num_clients, client_eval_fn,
+                                    sq_diff)
+
+
+# small maxsize on purpose: each entry pins its client_eval_fn closure
+# (which holds the test set as device arrays) plus the jitted executables
+@lru_cache(maxsize=4)
+def _event_helpers_cached(num_clients, client_eval_fn, sq_diff):
+    return _build_event_helpers(num_clients, client_eval_fn, sq_diff)
+
+
+def _build_event_helpers(num_clients, client_eval_fn, sq_diff):
+    batch_eval = jax.jit(jax.vmap(client_eval_fn))
+    values_fn = jax.jit(jax.vmap(
+        lambda pg, gc, a: value_lib.communication_value(
+            pg, gc, a, num_clients, sq_diff_fn=sq_diff)))
+    norms_fn = jax.jit(jax.vmap(tree_sq_norm))
+    return batch_eval, values_fn, norms_fn

@@ -1,0 +1,159 @@
+"""Event-driven runtimes: wall-clock asynchronous simulation on the
+deterministic event scheduler.  ``run_event_driven`` is the entry point;
+it dispatches on the algorithm's ``event_mode`` (sync-barrier baselines
+like FedAvg run the round-barrier runtime) and on ``run_cfg.engine``
+(the sequential reference loop here, or the batched scale engine in
+``repro.core.runtimes.batched``).
+
+The sequential loop processes one client completion at a time: the
+``UploadPolicy`` makes the scalar ship/skip decision from whatever
+inputs it declared (Eq. 1 value, gradient norm, server-delta threshold),
+and each accepted upload enters the global model through the
+``Aggregator``'s staleness-weighted async mix.
+"""
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.common.pytree import tree_bytes
+from repro.core.metrics import CommStats, RoundRecord, RunResult
+from repro.core.runtimes.common import (_BROADCAST, _UPLOAD,
+                                        _compressed_broadcast,
+                                        _compressed_upload, _enc_seed,
+                                        _event_helpers, _make_codecs,
+                                        _tree_delta, _value_fn)
+from repro.core.client import make_local_update
+from repro.core.scheduler import EventScheduler, SpeedModel
+
+
+def run_event_driven(run_cfg, *, init_params_fn, loss_fn, fed_data,
+                     evaluate_fn, client_eval_fn=None,
+                     speed: Optional[SpeedModel] = None,
+                     verbose: bool = False) -> RunResult:
+    """Wall-clock async runtime.  run_cfg.rounds counts *per-client* rounds
+    (total events = rounds * N for comparability with round mode).
+
+    ``run_cfg.engine`` selects the execution engine: "sequential" is the
+    reference per-event loop (one size-1 jitted update per completion);
+    "batched" is the scale engine (stacked client state, windowed vmapped
+    execution, buffered mixing — docs/ASYNC_ENGINE.md)."""
+    alg, policy, aggregator = run_cfg.make_algorithm()
+    N = run_cfg.num_clients
+    policy.begin_run(N)
+    aggregator.begin_run(N)
+    client_eval_fn = client_eval_fn or evaluate_fn
+    speed = speed or SpeedModel.paper_testbed(N, run_cfg.seed)
+    # (engine strings are validated at FLRunConfig construction)
+    if alg.event_mode == "sync-barrier":
+        # round-barrier baselines are their own runtime (already one
+        # vmapped update per round, so both engine values share it)
+        from repro.core.runtimes.sync import _run_sync_barrier
+        return _run_sync_barrier(run_cfg, policy, aggregator, init_params_fn,
+                                 loss_fn, fed_data, evaluate_fn,
+                                 client_eval_fn, speed, verbose)
+    if run_cfg.engine == "batched":
+        from repro.core.runtimes.batched import _run_event_batched
+        return _run_event_batched(run_cfg, policy, aggregator, init_params_fn,
+                                  loss_fn, fed_data, evaluate_fn,
+                                  client_eval_fn, speed, verbose)
+    rng = jax.random.key(run_cfg.seed)
+    rng, krng = jax.random.split(rng)
+    global_params = init_params_fn(krng)
+    comm = CommStats(model_bytes=tree_bytes(global_params))
+    codec, bcodec, ef = _make_codecs(run_cfg)
+    sq_diff = _value_fn(run_cfg)
+
+    # single-client jitted update (vmapped update over a size-1 stack)
+    local_update = make_local_update(loss_fn, run_cfg.local)
+    data = {"images": jnp.asarray(fed_data.images),
+            "labels": jnp.asarray(fed_data.labels),
+            "mask": jnp.asarray(fed_data.mask)}
+
+    # per-client state
+    client_params = [global_params] * N
+    prev_grads = [None] * N
+    model_version = np.zeros(N, int)  # version each client last downloaded
+    server_version = 0
+    prev_global = global_params
+    prev_prev_global = global_params
+
+    records: list = []
+    total_events = run_cfg.rounds * N
+    sched = EventScheduler(N, speed)
+    batch_eval, values_fn, norms_fn = _event_helpers(
+        run_cfg, client_eval_fn, sq_diff)
+
+    for ev in range(total_events):
+        t_now, i = sched.pop()
+        rng, urng = jax.random.split(rng)
+        one = jax.tree.map(lambda x: x[None], client_params[i])
+        d_i = {k: v[i:i + 1] for k, v in data.items()}
+        newp_s, eff_s, _ = local_update(one, d_i, urng)
+        newp = jax.tree.map(lambda x: x[0], newp_s)
+        eff_grad = jax.tree.map(lambda x: x[0], eff_s)
+
+        # the policy's declared inputs, computed as size-1 stacked calls
+        # through the same jitted helpers the batched engine uses
+        value = norm = None
+        if policy.needs_values:
+            accs = batch_eval(newp_s)
+            pg = prev_grads[i] if prev_grads[i] is not None else jax.tree.map(
+                jnp.zeros_like, eff_grad)
+            pg_s = jax.tree.map(lambda x: x[None], pg)
+            value = float(values_fn(pg_s, eff_s, accs)[0])
+        if policy.needs_norms:
+            norm = float(norms_fn(eff_s)[0])
+        thr = policy.window_threshold(
+            lambda: _tree_delta(prev_global, prev_prev_global))
+        if policy.reports:
+            comm.record_report(1)
+        upload = policy.decide(i, value, norm, thr)
+
+        if upload:
+            if codec.is_identity:
+                recon = newp
+                comm.record_upload(1)
+            else:
+                # ship codec(delta vs the model this client downloaded);
+                # the server mixes the reconstruction it actually received
+                recon = _compressed_upload(
+                    codec, ef, comm, client_params[i], newp, i,
+                    _enc_seed(run_cfg, ev, i, _UPLOAD))
+            staleness = server_version - model_version[i]
+            s = aggregator.stale_weight(staleness)
+            prev_prev_global = prev_global
+            prev_global = global_params
+            global_params = aggregator.mix(global_params, recon,
+                                           aggregator.mix_rate * s)
+            server_version += 1
+
+        # client downloads the latest global model and goes again
+        if bcodec is None:
+            client_params[i] = global_params
+            comm.record_broadcast(1)
+        else:
+            client_params[i] = _compressed_broadcast(
+                bcodec, comm, global_params, 1,
+                _enc_seed(run_cfg, ev, i, _BROADCAST))
+        model_version[i] = server_version
+        prev_grads[i] = eff_grad
+        sched.schedule(i)
+
+        if (ev + 1) % run_cfg.events_per_eval == 0:
+            acc = float(evaluate_fn(global_params))
+            records.append(RoundRecord(
+                round=ev + 1, time=t_now, global_acc=acc,
+                uploads_so_far=comm.model_uploads))
+            if verbose:
+                print(f"[{run_cfg.algorithm}/event] ev {ev+1:4d} "
+                      f"t={t_now:8.1f} acc={acc:.4f} "
+                      f"uploads={comm.model_uploads}")
+
+    res = RunResult(run_cfg.algorithm, records, comm,
+                    run_cfg.target_acc).finalize_target()
+    res.idle_fraction = float(sched.idle_fraction().mean())
+    return res

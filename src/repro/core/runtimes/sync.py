@@ -1,0 +1,101 @@
+"""Synchronous round-barrier runtime — the idle-time baseline (FedAvg).
+
+Algorithms registered with ``event_mode="sync-barrier"`` land here from
+``run_event_driven``: each round the sampled participant set S trains,
+the barrier waits for the slowest *participant*, the ``UploadPolicy``
+masks who ships a model (FedAvg's always-upload policy masks exactly S,
+but a gated sync algorithm works too — the policy's lazy round inputs
+cost nothing unless declared), and the ``Aggregator`` folds the
+uploaded set into the global model (weighted FedAvg).  Honors the same
+codec config as the async runtimes (uploads ship codec(delta vs the
+broadcast base) with error feedback) and the same ``participation``
+fraction as the round-based runtime.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.algorithms.base import RoundContext
+from repro.common.pytree import tree_bytes
+from repro.core.client import make_local_update
+from repro.core.metrics import CommStats, RoundRecord, RunResult
+from repro.core.runtimes.common import (_make_codecs, _participation_mask,
+                                        _round_broadcast, _round_helpers,
+                                        _round_uploads, _tree_delta)
+
+
+def _run_sync_barrier(run_cfg, policy, aggregator, init_params_fn, loss_fn,
+                      fed_data, evaluate_fn, client_eval_fn, speed,
+                      verbose) -> RunResult:
+    N = run_cfg.num_clients
+    rng = jax.random.key(run_cfg.seed)
+    rng, krng = jax.random.split(rng)
+    global_params = init_params_fn(krng)
+    comm = CommStats(model_bytes=tree_bytes(global_params))
+    codec, bcodec, ef = _make_codecs(run_cfg)
+    client_base = global_params
+    local_update = make_local_update(loss_fn, run_cfg.local)
+    data = {"images": jnp.asarray(fed_data.images),
+            "labels": jnp.asarray(fed_data.labels),
+            "mask": jnp.asarray(fed_data.mask)}
+    counts = jnp.asarray(fed_data.counts, jnp.float32)
+
+    # lazy round inputs for gated sync policies — never touched (and the
+    # jits never compiled) by always-upload baselines like fedavg
+    batch_eval, values_fn, grad_norms_fn = _round_helpers(run_cfg,
+                                                          client_eval_fn)
+    prev_grads = None   # (N, ...) grad stack retained only under needs_values
+    prev_global = global_params
+    prev_prev_global = global_params
+
+    records = []
+    now = 0.0
+    busy = np.zeros(N)
+    part_rng = np.random.RandomState(run_cfg.seed + 101)
+    for t in range(1, run_cfg.rounds + 1):
+        rng, urng = jax.random.split(rng)
+        # the round's participating set S (same sampling as round-based)
+        part = _participation_mask(part_rng, run_cfg.participation, N)
+        stacked = jax.tree.map(lambda x: jnp.broadcast_to(x, (N,) + x.shape),
+                               client_base)
+        stacked, eff_grads, _ = local_update(stacked, data, urng)
+        round_times = np.array([speed.sample(c) for c in range(N)])
+        now += round_times[part].max()    # barrier: slowest *participant*
+        busy[part] += round_times[part]   # non-participants idle all round
+        ctx = RoundContext(
+            part=part, comm=comm,
+            values_fn=lambda: values_fn(
+                prev_grads if prev_grads is not None
+                else jax.tree.map(jnp.zeros_like, eff_grads),
+                eff_grads, batch_eval(stacked)),
+            norms_fn=lambda: grad_norms_fn(eff_grads),
+            server_delta_fn=lambda: _tree_delta(prev_global,
+                                                prev_prev_global))
+        mask, _ = policy.round_mask(ctx)
+        if not mask.any():  # guard (a policy may suppress all participants)
+            norms_np = np.asarray(ctx.norms(), np.float64)
+            norms_np[~part] = -np.inf
+            mask = norms_np == norms_np.max()
+        stacked = _round_uploads(run_cfg, codec, ef, comm, client_base,
+                                 stacked, mask, t)
+        prev_prev_global = prev_global
+        prev_global = global_params
+        global_params = aggregator.round_aggregate(global_params, stacked,
+                                                   jnp.asarray(mask), counts)
+        client_base = _round_broadcast(run_cfg, bcodec, comm, global_params,
+                                       N, t)
+        if policy.needs_values:   # fedavg never reads it: don't retain
+            prev_grads = eff_grads
+        if t % run_cfg.eval_every == 0:
+            acc = float(evaluate_fn(global_params))
+            records.append(RoundRecord(round=t, time=now, global_acc=acc,
+                                       uploads_so_far=comm.model_uploads))
+            if verbose:
+                print(f"[{run_cfg.algorithm}] round {t:3d} t={now:8.1f} "
+                      f"acc={acc:.4f}")
+    res = RunResult(run_cfg.algorithm, records, comm,
+                    run_cfg.target_acc).finalize_target()
+    res.idle_fraction = float(1.0 - (busy / max(now, 1e-9)).mean())
+    return res

@@ -19,6 +19,8 @@ import argparse
 
 import numpy as np
 
+from repro.algorithms.registry import available_algorithms
+
 
 def main():
     ap = argparse.ArgumentParser()
@@ -29,7 +31,10 @@ def main():
     ap.add_argument("--batch-per-pod", type=int, default=4)
     ap.add_argument("--seq", type=int, default=128)
     ap.add_argument("--lr", type=float, default=1e-3)
-    ap.add_argument("--algorithm", default="vafl", choices=("vafl", "afl"))
+    # any registered algorithm is launchable: the step consumes the
+    # traced stacked gate (UploadPolicy.gate_stacked), not name branches
+    ap.add_argument("--algorithm", default="vafl",
+                    choices=available_algorithms())
     ap.add_argument("--devices", type=int, default=8,
                     help="placeholder host devices (0 = use existing)")
     args = ap.parse_args()

@@ -16,6 +16,9 @@ from functools import partial
 import jax
 import jax.numpy as jnp
 
+from repro.algorithms.registry import get_algorithm
+from repro.common.pytree import tree_sq_norm
+from repro.core.config import FLRunConfig
 from repro.core.value import value_base
 from repro.models import decoder
 from repro.optim import adamw, apply_updates, clip_by_global_norm
@@ -89,8 +92,15 @@ def make_fl_train_step(cfg, *, n_pods: int, lr: float = 3e-4,
          collective; GSPMD emits the cross-pod all-reduce only here),
       5. Adam update with the aggregated gradient.
 
-    Returns (params, opt_state, prev_grads, info).  "afl" applies the
-    ungated mean (the paper's baseline at pod scale).
+    Returns (params, opt_state, prev_grads, info).  ``algorithm`` is any
+    registered name (repro.algorithms); the gate is the algorithm's
+    traced stacked form (``UploadPolicy.gate_stacked``): "afl" /
+    "fedavg" / "fedasync" apply the ungated mean (each SPMD step already
+    is a synchronous barrier, staleness 0), "vafl" the Eq. 2 mean
+    threshold, "eaflm" the Eq. 3 norm threshold against a step-scale
+    proxy for the server delta (the previous step's aggregated gradient
+    direction scaled by the server lr — the per-step mask is not
+    retained across steps, so the ungated mean stands in).
 
     local_steps > 1 (the paper's r local rounds): each silo takes
     ``local_steps`` local SGD steps on its own microbatches before the
@@ -100,6 +110,10 @@ def make_fl_train_step(cfg, *, n_pods: int, lr: float = 3e-4,
     comm_dtype (e.g. jnp.bfloat16) casts the cross-pod aggregation payload.
     """
     opt_init, opt_update = adamw(lr, weight_decay=0.01)
+    # resolve the algorithm up front: a typo'd name fails here with the
+    # registered set in the message, not deep inside a trace
+    policy = get_algorithm(algorithm).make_policy(
+        FLRunConfig(algorithm=algorithm))
 
     def pod_loss(p, pod_batch):
         loss, _ = decoder.loss_fn(cfg, p, pod_batch, q_chunk=q_chunk,
@@ -143,11 +157,23 @@ def make_fl_train_step(cfg, *, n_pods: int, lr: float = 3e-4,
         accs = jnp.exp(-losses.astype(jnp.float32))         # proxy Acc in [0,1]
         V = diffs * value_base(n_pods) ** accs
 
-        # 3.+4. gate and aggregate
-        if algorithm == "vafl":
-            mask = (V >= jnp.mean(V)).astype(jnp.float32)
-        else:  # "afl": ungated
-            mask = jnp.ones_like(V)
+        # 3.+4. gate and aggregate — the algorithm's traced stacked gate;
+        # inputs it did not declare are never computed
+        sq_norms = (jax.vmap(tree_sq_norm)(grads) if policy.needs_norms
+                    else None)
+        delta_sq = (jnp.float32(lr * lr) * tree_sq_norm(
+            jax.tree.map(lambda g: jnp.mean(g, axis=0), prev_grads))
+            if policy.needs_norms else None)
+        mask = policy.gate_stacked(values=V, sq_norms=sq_norms,
+                                   server_delta_sq=delta_sq)
+        if policy.needs_norms or policy.needs_values:
+            # same guard as the FL runtimes: a gate that suppresses every
+            # silo falls back to the strongest one — otherwise the Adam
+            # update below would still move params (decoupled weight
+            # decay + stale momentum) on a zero aggregated gradient
+            ref = sq_norms if sq_norms is not None else V
+            fallback = (ref == jnp.max(ref)).astype(jnp.float32)
+            mask = jnp.where(jnp.sum(mask) > 0.0, mask, fallback)
         w = mask / jnp.maximum(jnp.sum(mask), 1.0)
 
         def agg(leaf):  # (P, ...) -> (...)

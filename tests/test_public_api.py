@@ -1,0 +1,152 @@
+"""The public API surface can't silently break: the ``Federation``
+facade contract, plus tier-1 smoke runs of the two entry points every
+reader hits first — ``examples/quickstart.py`` and ``benchmarks/run.py
+--smoke`` — executed as real subprocesses (guarded by the ``slow``
+marker budget: the full benchmark sweep is opt-in, the core sections and
+the quickstart stay in the default run).
+"""
+import pathlib
+import subprocess
+import sys
+
+import numpy as np
+import pytest
+
+from repro.core import Federation, FLRunConfig, run_round_based
+from repro.core.client import (LocalSpec, make_evaluator,
+                               make_weighted_classifier_loss)
+from repro.data.partition import iid_partition
+from repro.data.synthetic import synthetic_mnist
+from repro.models.cnn import MLPConfig, mlp_forward, mlp_init
+
+ROOT = pathlib.Path(__file__).resolve().parents[1]
+
+
+def _run(args, timeout=420):
+    return subprocess.run([sys.executable] + args, cwd=ROOT, timeout=timeout,
+                          capture_output=True, text=True)
+
+
+# ------------------------------------------------------- Federation facade ---
+
+@pytest.fixture(scope="module")
+def problem():
+    xtr, ytr, xte, yte = synthetic_mnist(3 * 300 + 400, 400, seed=0)
+    fed = iid_partition(xtr, ytr, 3, samples_per_client=300, seed=0)
+    return fed, (xte, yte)
+
+
+class TestFederation:
+    LOCAL = LocalSpec(batch_size=32, local_rounds=1, lr=0.1)
+
+    def test_facade_matches_low_level_api(self, problem):
+        """Federation is plumbing, not semantics: same records as wiring
+        FLRunConfig + run_round_based by hand."""
+        fed, (xte, yte) = problem
+        mcfg = MLPConfig(hidden=(128, 64))   # the facade's "mlp" default
+        loss_fn = make_weighted_classifier_loss(mlp_forward, mcfg)
+        evaluate = make_evaluator(mlp_forward, mcfg, xte, yte, batch=400)
+        rc = FLRunConfig(algorithm="vafl", num_clients=3, rounds=3,
+                         local=self.LOCAL, target_acc=0.9,
+                         events_per_eval=3, seed=11)
+        manual = run_round_based(rc,
+                                 init_params_fn=lambda k: mlp_init(mcfg, k),
+                                 loss_fn=loss_fn, fed_data=fed,
+                                 evaluate_fn=evaluate)
+        faca = Federation(model="mlp", data=fed, test_data=(xte, yte),
+                          algorithm="vafl", local=self.LOCAL,
+                          target_acc=0.9, seed=11).run(rounds=3)
+        assert [r.global_acc for r in faca.records] == \
+               [r.global_acc for r in manual.records]
+        assert faca.comm.model_uploads == manual.comm.model_uploads
+
+    def test_run_overrides_do_not_mutate_config(self, problem):
+        fed, test = problem
+        f = Federation(model="mlp", data=fed, test_data=test,
+                       local=self.LOCAL, rounds=5)
+        f.run(rounds=2, mode="round")
+        assert f.config.rounds == 5
+        res = f.run(rounds=2, mode="event", algorithm="afl")
+        assert f.config.algorithm == "vafl"
+        assert res.algorithm == "afl"
+
+    def test_num_clients_derived_from_data(self, problem):
+        fed, test = problem
+        f = Federation(model="mlp", data=fed, test_data=test)
+        assert f.config.num_clients == 3
+        assert f.config.events_per_eval == 3
+        # passing the matching value is tolerated; a mismatch is loud
+        assert Federation(model="mlp", data=fed, test_data=test,
+                          num_clients=3).config.num_clients == 3
+        with pytest.raises(ValueError, match="derived"):
+            Federation(model="mlp", data=fed, test_data=test,
+                       num_clients=7)
+
+    def test_explicit_fns_mode(self, problem):
+        fed, (xte, yte) = problem
+        mcfg = MLPConfig(hidden=(16,))
+        loss_fn = make_weighted_classifier_loss(mlp_forward, mcfg)
+        evaluate = make_evaluator(mlp_forward, mcfg, xte, yte, batch=400)
+        f = Federation(data=fed, algorithm="afl",
+                       init_params_fn=lambda k: mlp_init(mcfg, k),
+                       loss_fn=loss_fn, evaluate_fn=evaluate,
+                       local=self.LOCAL)
+        res = f.run(rounds=2)
+        assert res.comm.model_uploads == 2 * 3
+        assert np.isfinite(res.best_acc)
+
+    def test_missing_test_data_rejected(self, problem):
+        fed, _ = problem
+        with pytest.raises(ValueError, match="test_data"):
+            Federation(model="mlp", data=fed)
+
+    def test_partial_explicit_fns_rejected(self, problem):
+        fed, _ = problem
+        with pytest.raises(ValueError, match="explicit"):
+            Federation(data=fed, loss_fn=lambda p, b: (0.0, {}))
+
+    def test_unknown_model_rejected(self, problem):
+        fed, test = problem
+        with pytest.raises(ValueError, match="mlp"):
+            Federation(model="resnet152", data=fed, test_data=test)
+
+    def test_unknown_mode_rejected(self, problem):
+        fed, test = problem
+        f = Federation(model="mlp", data=fed, test_data=test,
+                       local=self.LOCAL)
+        with pytest.raises(ValueError, match="mode"):
+            f.run(rounds=1, mode="warp")
+
+    def test_unknown_algorithm_fails_at_construction(self, problem):
+        fed, test = problem
+        with pytest.raises(ValueError, match="registered"):
+            Federation(model="mlp", data=fed, test_data=test,
+                       algorithm="warp")
+
+
+# -------------------------------------------------------- subprocess smokes ---
+
+class TestEntryPoints:
+    def test_quickstart_example(self):
+        """The first thing every reader runs."""
+        p = _run(["examples/quickstart.py"])
+        assert p.returncode == 0, p.stderr[-2000:]
+        assert "CCR vs AFL" in p.stdout
+        assert "model uploads" in p.stdout
+
+    def test_benchmarks_smoke_core_sections(self):
+        """table3/fig4/fig5 at smoke scale — the Federation-backed
+        benchmark harness end to end (~10 s)."""
+        p = _run(["-m", "benchmarks.run", "--smoke",
+                  "--skip", "engine,compress"])
+        assert p.returncode == 0, p.stderr[-2000:]
+        assert "[table3]" in p.stdout
+        assert "communication_times" in p.stdout or "ccr" in p.stdout
+
+    @pytest.mark.slow
+    def test_benchmarks_smoke_all_sections(self):
+        """Every section of the public benchmark driver (~35 s)."""
+        p = _run(["-m", "benchmarks.run", "--smoke"])
+        assert p.returncode == 0, p.stderr[-2000:]
+        for section in ("[table3]", "[compress]", "[engine]"):
+            assert section in p.stdout, p.stdout[-2000:]

@@ -1,10 +1,16 @@
 """Async engine scale benchmark (docs/ASYNC_ENGINE.md): events/sec of the
-batched execution engine vs the sequential per-event loop, and
-accuracy-vs-uploads at scale, sweeping N in {64, 256, 1024} heterogeneous
-clients on the paper-testbed speed model.
+batched execution engine vs the sequential per-event loop,
+accuracy-vs-uploads at scale, the VAFL eval fast path
+(``eval_subsample``), and byte CCR under compression, sweeping N in
+{64, 256, 1024} heterogeneous clients on the paper-testbed speed model.
 
     PYTHONPATH=src python -m benchmarks.async_engine_bench \
-        [--smoke] [--ns 64,256,1024] [--buffer 16] [--json out.json]
+        [--smoke] [--ns 64,256,1024] [--buffer 16] [--json out.json] \
+        [--frontier] [--frontier-n 64] [--mix-rates 0.25,0.5,0.75]
+
+``--frontier`` sweeps the buffer_size (K) x mix_rate plane instead:
+same-budget accuracy + events/sec per cell (the FedBuff K/rho frontier
+the ROADMAP asks for).
 
 Throughput is steady-state: each configuration is run once to populate the
 jit caches, then timed.  The bit-match column verifies the engine contract
@@ -36,14 +42,14 @@ def _build(N, samples_per_client, test_samples, seed=0):
     loss_fn = make_weighted_classifier_loss(mlp_forward, mcfg)
     evaluate = make_evaluator(mlp_forward, mcfg, xte, yte,
                               batch=min(500, test_samples))
-    return fed, mcfg, mlp_init, loss_fn, evaluate
+    return fed, mcfg, mlp_init, loss_fn, evaluate, (xte, yte)
 
 
 def _run(problem, alg, engine, N, rounds, *, seed=0, events_per_eval=None,
-         **cfg_kw):
+         client_eval_fn=None, **cfg_kw):
     from repro.core import FLRunConfig, run_event_driven
     from repro.core.client import LocalSpec
-    fed, mcfg, init, loss_fn, evaluate = problem
+    fed, mcfg, init, loss_fn, evaluate = problem[:5]
     rc = FLRunConfig(
         algorithm=alg, num_clients=N, rounds=rounds,
         local=LocalSpec(batch_size=32, local_epochs=1, local_rounds=1,
@@ -53,20 +59,36 @@ def _run(problem, alg, engine, N, rounds, *, seed=0, events_per_eval=None,
     t0 = time.perf_counter()
     res = run_event_driven(rc, init_params_fn=lambda k: init(mcfg, k),
                            loss_fn=loss_fn, fed_data=fed,
-                           evaluate_fn=evaluate)
+                           evaluate_fn=evaluate, client_eval_fn=client_eval_fn)
     return res, time.perf_counter() - t0
 
 
-def run(Ns=(64, 256, 1024), *, smoke=False, buffer_size=16, out_json=None):
+def _write_json(rows, out_json, kind):
+    if not out_json:
+        return
+    if os.path.dirname(out_json):   # bare filename: cwd, no mkdir
+        os.makedirs(os.path.dirname(out_json), exist_ok=True)
+    import jax
+    with open(out_json, "w") as f:
+        json.dump({"schema": f"bench-engine/{kind}/v1",
+                   "host_devices": jax.device_count(),
+                   "rows": rows}, f, indent=2)
+    print(f"[json] {out_json}")
+
+
+def run(Ns=None, *, smoke=False, buffer_size=16, out_json=None):
+    if Ns is None:
+        Ns = (32, 64) if smoke else (64, 256, 1024)
     if smoke:
-        Ns, buffer_size = (32, 64), 8
+        buffer_size = min(buffer_size, 8)
     rows = []
     print(f"{'N':>5s} {'engine':>10s} {'events':>7s} {'ev/s':>9s} "
           f"{'speedup':>8s} {'acc K=1/K':>11s} {'upl K=1/K':>9s} "
           f"{'bitmatch':>9s}")
     for N in Ns:
         spc = 16 if N >= 1024 else 24
-        problem = _build(N, spc, 256 if smoke else 500)
+        test_samples = 256 if smoke else 500
+        problem = _build(N, spc, test_samples)
         seq_rounds = 1 if N >= 1024 else 2
         bat_rounds = 2 if smoke else max(4, 2048 // N)
 
@@ -85,6 +107,29 @@ def run(Ns=(64, 256, 1024), *, smoke=False, buffer_size=16, out_json=None):
                      buffer_size=1)
         bitmatch = s1.comm.model_uploads == b1.comm.model_uploads
 
+        # the VAFL eval fast path: Eq. 1's per-event accuracy term on the
+        # full test set vs a deterministic subsample (the batched engine
+        # itself, same event budget; events_per_eval stays huge so this
+        # times the CLIENT eval term, not the record cadence)
+        sub = max(32, test_samples // 8)
+        from repro.core.client import make_evaluator
+        from repro.models.cnn import mlp_forward
+        fed, mcfg, init, loss_fn, evaluate = problem[:5]
+        _run(problem, "vafl", "batched", N, 1, buffer_size=buffer_size)
+        _, dt = _run(problem, "vafl", "batched", N, 1,
+                     buffer_size=buffer_size)
+        vafl_eps = N / dt
+        sub_eval = make_evaluator(mlp_forward, mcfg, *_test_set(problem),
+                                  batch=min(500, sub), subsample=sub)
+        kw = dict(buffer_size=buffer_size, client_eval_fn=sub_eval)
+        _run(problem, "vafl", "batched", N, 1, **kw)
+        _, dt = _run(problem, "vafl", "batched", N, 1, **kw)
+        vafl_sub_eps = N / dt
+
+        # byte CCR through the buffered path (codec effect at this N)
+        vc, _ = _run(problem, "vafl", "batched", N, 1,
+                     buffer_size=buffer_size, compressor="topk0.1_int8")
+
         # accuracy-vs-uploads at scale: gated vafl, same event budget with
         # per-arrival mixing (K=1) and through the buffer (K=buffer_size)
         acc_rounds = 2 if smoke else (2 if N >= 1024 else 4)
@@ -100,23 +145,57 @@ def run(Ns=(64, 256, 1024), *, smoke=False, buffer_size=16, out_json=None):
               f"{va1.best_acc:.3f}/{vak.best_acc:.3f} "
               f"{va1.comm.model_uploads:4d}/{vak.comm.model_uploads:4d} "
               f"{str(bitmatch):>9s}")
+        print(f"{N:5d} {'vafl-eval':>10s} {N:7d} {vafl_eps:9.1f} "
+              f"-> {vafl_sub_eps:.1f} ev/s with eval_subsample={sub} "
+              f"(byte CCR {vc.byte_ccr:.3f})")
         rows.append({
             "N": N, "buffer_size": buffer_size,
             "sequential_events_per_sec": round(seq_eps, 1),
             "batched_events_per_sec": round(bat_eps, 1),
             "speedup": round(speedup, 2),
+            "vafl_events_per_sec": round(vafl_eps, 1),
+            "vafl_subsampled_events_per_sec": round(vafl_sub_eps, 1),
+            "eval_subsample": sub,
+            "byte_ccr": round(float(vc.byte_ccr), 4),
             "vafl_k1_best_acc": round(va1.best_acc, 4),
             "vafl_k1_uploads": va1.comm.model_uploads,
             "vafl_buffered_best_acc": round(vak.best_acc, 4),
             "vafl_buffered_uploads": vak.comm.model_uploads,
             "window1_buffer1_upload_bitmatch": bitmatch,
         })
-    if out_json:
-        if os.path.dirname(out_json):   # bare filename: cwd, no mkdir
-            os.makedirs(os.path.dirname(out_json), exist_ok=True)
-        with open(out_json, "w") as f:
-            json.dump(rows, f, indent=2)
-        print(f"[json] {out_json}")
+    _write_json(rows, out_json, "scale")
+    return rows
+
+
+def _test_set(problem):
+    """The benchmark's held-out test set (_build's 6th element)."""
+    return problem[5]
+
+
+def frontier(N=64, *, buffers=(1, 4, 8, 16, 32), mix_rates=(0.25, 0.5, 0.75),
+             rounds=4, smoke=False, out_json=None):
+    """The FedBuff K x mix_rate (rho) frontier: same event budget per cell,
+    reporting best accuracy, events/sec and uploads — how much per-round
+    fidelity each (K, rho) buys back at what throughput."""
+    if smoke:
+        N, buffers, mix_rates, rounds = 16, (1, 4), (0.25, 0.5), 2
+    problem = _build(N, 24, 256 if smoke else 500)
+    rows = []
+    print(f"{'K':>4s} {'rho':>6s} {'ev/s':>9s} {'best_acc':>9s} "
+          f"{'uploads':>8s}")
+    _run(problem, "afl", "batched", N, 1, buffer_size=buffers[0])  # warm
+    for K in buffers:
+        for rho in mix_rates:
+            res, dt = _run(problem, "afl", "batched", N, rounds,
+                           buffer_size=K, mix_rate=rho, events_per_eval=N)
+            eps = rounds * N / dt
+            print(f"{K:4d} {rho:6.2f} {eps:9.1f} {res.best_acc:9.4f} "
+                  f"{res.comm.model_uploads:8d}")
+            rows.append({"N": N, "buffer_size": K, "mix_rate": rho,
+                         "events_per_sec": round(eps, 1),
+                         "best_acc": round(res.best_acc, 4),
+                         "uploads": res.comm.model_uploads})
+    _write_json(rows, out_json, "frontier")
     return rows
 
 
@@ -124,14 +203,28 @@ def main():
     ap = argparse.ArgumentParser()
     ap.add_argument("--smoke", action="store_true",
                     help="tiny sweep (N=32,64) for CI")
-    ap.add_argument("--ns", default="64,256,1024",
+    ap.add_argument("--ns", default=None,
                     help="comma list of client counts")
     ap.add_argument("--buffer", type=int, default=16,
                     help="FedBuff buffer size K for the batched engine")
     ap.add_argument("--json", default=None)
+    ap.add_argument("--frontier", action="store_true",
+                    help="sweep the buffer_size x mix_rate frontier "
+                         "instead of the N scale table")
+    ap.add_argument("--frontier-n", type=int, default=64)
+    ap.add_argument("--buffers", default="1,4,8,16,32",
+                    help="comma list of K values for --frontier")
+    ap.add_argument("--mix-rates", default="0.25,0.5,0.75",
+                    help="comma list of rho values for --frontier")
     args = ap.parse_args()
-    run(tuple(int(n) for n in args.ns.split(",")), smoke=args.smoke,
-        buffer_size=args.buffer, out_json=args.json)
+    if args.frontier:
+        frontier(args.frontier_n,
+                 buffers=tuple(int(k) for k in args.buffers.split(",")),
+                 mix_rates=tuple(float(r) for r in args.mix_rates.split(",")),
+                 smoke=args.smoke, out_json=args.json)
+        return
+    ns = tuple(int(n) for n in args.ns.split(",")) if args.ns else None
+    run(ns, smoke=args.smoke, buffer_size=args.buffer, out_json=args.json)
 
 
 if __name__ == "__main__":

@@ -95,12 +95,16 @@ def main() -> None:
         print("== [engine] batched async engine scale sweep ==")
         from benchmarks.async_engine_bench import run as eng
         # same scale contract as the other sections: default stays
-        # moderate, --full adds the N=1024 lap, --fast runs the smoke sweep
+        # moderate, --full adds the N=1024 lap, --fast runs the smoke sweep.
+        # Always emits the machine-readable BENCH_engine.json (events/sec
+        # per engine/N + byte CCR) so the perf trajectory is tracked
+        # across PRs — tier-1 asserts it (tests/test_public_api.py).
         eng((16,) if args.smoke else
             (64, 256, 1024) if args.full else (64, 256),
             smoke=args.fast or args.smoke,
-            out_json="artifacts/async_engine.json"
-            if os.path.isdir("artifacts") else None)
+            out_json=os.path.join(
+                "artifacts" if os.path.isdir("artifacts") else "",
+                "BENCH_engine.json"))
         print()
 
     if "kernels" not in skip:

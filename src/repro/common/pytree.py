@@ -7,6 +7,7 @@ from __future__ import annotations
 
 import jax
 import jax.numpy as jnp
+import numpy as np
 
 
 def tree_add(a, b):
@@ -103,3 +104,22 @@ def tree_stack(trees):
 
 def tree_unstack(stacked, n):
     return [stacked_index(stacked, i) for i in range(n)]
+
+
+def tree_shard(tree, sharding):
+    """Place every leaf of a stacked pytree with ``sharding`` (the batched
+    engine's leading-axis client sharding, repro.distributed.sharding.
+    client_state_sharding).  ``None`` is the single-host fallback — the
+    tree is returned untouched; ``jax.device_put`` is a no-op for leaves
+    already placed correctly, so re-sharding is idempotent."""
+    if sharding is None:
+        return tree
+    return jax.tree.map(lambda x: jax.device_put(x, sharding), tree)
+
+
+def tree_gather_sharded(tree):
+    """Fetch a (possibly sharded) stacked pytree back to host numpy —
+    one blocking ``device_get`` per leaf, reassembling shards.  The
+    inverse of ``tree_shard`` for checkpointing / inspection; never on
+    the engine hot path."""
+    return jax.tree.map(lambda x: np.asarray(jax.device_get(x)), tree)

@@ -16,6 +16,7 @@ from typing import Callable
 
 import jax
 import jax.numpy as jnp
+import numpy as np
 
 
 @dataclass(frozen=True)
@@ -46,9 +47,28 @@ def make_local_update(loss_fn: Callable, spec: LocalSpec):
     (benchmark sweeps, engine comparisons) reuse the compiled executable
     instead of re-jitting per run."""
     try:
-        return _make_local_update_cached(loss_fn, spec)
+        return _make_local_update_cached(loss_fn, spec)[0]
     except TypeError:   # unhashable loss_fn: build uncached
-        return _build_local_update(loss_fn, spec)
+        return _build_local_update(loss_fn, spec)[0]
+
+
+def make_local_update_keyed(loss_fn: Callable, spec: LocalSpec):
+    """The batched engine's full-window form of ``make_local_update``:
+
+    (stacked_params, data, keys) -> (new_params, eff_grad, mean_loss)
+
+    where ``keys`` is a stacked (N,) key array instead of one key split
+    inside the jit.  Passing explicit per-client keys lets the engine run
+    the update in CLIENT order while assigning each client the exact key
+    it would have received in window-arrival order (``jax.random.split``
+    is deterministic in or out of jit), which is what makes the
+    full-window fast path bit-exact with the gathered path.  Shares the
+    per-client update body (and the memo cache) with
+    ``make_local_update``."""
+    try:
+        return _make_local_update_cached(loss_fn, spec)[1]
+    except TypeError:
+        return _build_local_update(loss_fn, spec)[1]
 
 
 @lru_cache(maxsize=16)
@@ -125,7 +145,12 @@ def _build_local_update(loss_fn: Callable, spec: LocalSpec):
         return jax.vmap(one_client)(stacked_params, data["images"],
                                     data["labels"], data["mask"], rngs)
 
-    return update
+    @jax.jit
+    def update_keyed(stacked_params, data, keys):
+        return jax.vmap(one_client)(stacked_params, data["images"],
+                                    data["labels"], data["mask"], keys)
+
+    return update, update_keyed
 
 
 def make_weighted_classifier_loss(forward_fn, cfg):
@@ -144,14 +169,27 @@ def make_weighted_classifier_loss(forward_fn, cfg):
     return loss_fn
 
 
-def make_evaluator(forward_fn, cfg, test_images, test_labels, batch: int = 1000):
+def make_evaluator(forward_fn, cfg, test_images, test_labels, batch: int = 1000,
+                   subsample: int = 0, subsample_seed: int = 0):
     """Returns jitted accuracy evaluator params -> scalar acc.
 
     Every sample counts: the test set is padded up to a whole number of
     batches and the padding masked out, so a test set smaller than
     ``batch`` works (no out-of-bounds slice) and the ``len % batch``
     tail is evaluated instead of silently dropped — accuracy divides by
-    the true sample count."""
+    the true sample count.
+
+    ``subsample > 0`` evaluates on a fixed random subset of that many
+    test samples (the VAFL eval fast path, ``FLRunConfig.eval_subsample``):
+    the subset is drawn ONCE, deterministically from ``subsample_seed``,
+    so two evaluators built with the same seed score identically —
+    subsampled runs stay reproducible record-for-record."""
+    test_images = np.asarray(test_images)
+    test_labels = np.asarray(test_labels)
+    if 0 < subsample < len(test_labels):
+        pick = np.sort(np.random.RandomState(subsample_seed).choice(
+            len(test_labels), size=subsample, replace=False))
+        test_images, test_labels = test_images[pick], test_labels[pick]
     xi = jnp.asarray(test_images)
     yi = jnp.asarray(test_labels)
     n = len(yi)

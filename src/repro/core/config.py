@@ -66,6 +66,28 @@ class FLRunConfig:
     engine: str = "sequential"         # 'sequential' | 'batched'
     max_batch: int = 0                 # pop_window bound (0 = num_clients)
     buffer_size: int = 1               # K reconstructions buffered per mix
+    # batched-engine scale layers (docs/ASYNC_ENGINE.md "Sharding" /
+    # "Eval fast path"):
+    #   shard_clients  — place the stacked per-client state on a 1-D
+    #     ("clients",) mesh over the host's devices (NamedSharding on the
+    #     leading client axis) so each window's vmapped local update runs
+    #     data-parallel across devices.  A 1-device mesh is bit-exact
+    #     with the unsharded engine; N must divide the device count's
+    #     multiple or the state silently stays replicated.
+    #   eval_subsample — evaluate the per-client Eq. 1 accuracy term on a
+    #     deterministic random subset of this many test samples instead
+    #     of the full test set (0 = full).  Applied by the Federation
+    #     facade (which holds the test data); low-level callers pass
+    #     their own subsampled client_eval_fn (make_evaluator(subsample=)).
+    #   eval_cache — refresh each client's Eq. 1 accuracy at most once
+    #     every eval_cache of its OWN events, reusing the cached value in
+    #     between (0 = recompute every event, the exact semantics).  A
+    #     staleness-bounded approximation of Eq. 1's Acc_i term; the
+    #     exact global-model eval at record boundaries is never cached
+    #     approximately (only reused when the model is bit-identical).
+    shard_clients: bool = False
+    eval_subsample: int = 0
+    eval_cache: int = 0
 
     def __post_init__(self):
         get_algorithm(self.algorithm)  # raises ValueError listing names
@@ -73,6 +95,9 @@ class FLRunConfig:
             raise ValueError(
                 f"unknown engine: {self.engine!r}; known engines: "
                 f"{', '.join(ENGINES)}")
+        if self.eval_subsample < 0 or self.eval_cache < 0:
+            raise ValueError("eval_subsample and eval_cache must be >= 0 "
+                             f"(got {self.eval_subsample}, {self.eval_cache})")
 
     def make_algorithm(self):
         """Resolve this config's algorithm to per-run protocol objects:

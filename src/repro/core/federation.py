@@ -74,6 +74,8 @@ class Federation:
                 "clients in data.counts); don't pass a different value")
 
         explicit = (init_params_fn, loss_fn, evaluate_fn)
+        self._eval_builder = None      # (fwd, cfg, xte, yte, batch) or None
+        self._subsampled_evals = {}    # (eval_subsample, seed) -> evaluator
         if any(f is not None for f in explicit):
             if not all(f is not None for f in explicit):
                 raise ValueError(
@@ -93,6 +95,8 @@ class Federation:
             self.loss_fn = make_weighted_classifier_loss(forward_fn, mcfg)
             self.evaluate_fn = make_evaluator(
                 forward_fn, mcfg, xte, yte, batch=min(eval_batch, len(yte)))
+            self._eval_builder = (forward_fn, mcfg, xte, yte,
+                                  min(eval_batch, len(yte)))
         self.client_eval_fn = client_eval_fn
 
         config.setdefault("events_per_eval", num_clients)
@@ -100,6 +104,36 @@ class Federation:
             algorithm=algorithm, num_clients=num_clients,
             local=local or LocalSpec(), compressor=compressor,
             broadcast_compressor=broadcast_compressor, **config)
+
+    def _client_eval_for(self, cfg):
+        """The per-client evaluator for one run: the user's explicit
+        ``client_eval_fn`` when given, else — under ``eval_subsample`` —
+        a deterministic subsampled evaluator built (once per
+        (subsample, seed), memoized) from the federation's test data
+        (the VAFL eval fast path, docs/ASYNC_ENGINE.md).  Combining the
+        knob with an explicit ``client_eval_fn`` is a loud error —
+        silently ignoring either would surprise whoever set it."""
+        if not cfg.eval_subsample:
+            return self.client_eval_fn
+        if self.client_eval_fn is not None:
+            raise ValueError(
+                "eval_subsample conflicts with an explicit client_eval_fn "
+                "(the facade cannot subsample inside your closure) — drop "
+                "the knob and build the evaluator yourself with "
+                "make_evaluator(..., subsample=...)")
+        if self._eval_builder is None:
+            raise ValueError(
+                "eval_subsample needs the federation's test data (model "
+                "mode); in explicit-fn mode build the subsampled evaluator "
+                "yourself with make_evaluator(..., subsample=...) and pass "
+                "it as client_eval_fn")
+        key = (cfg.eval_subsample, cfg.seed)
+        if key not in self._subsampled_evals:
+            fwd, mcfg, xte, yte, batch = self._eval_builder
+            self._subsampled_evals[key] = make_evaluator(
+                fwd, mcfg, xte, yte, batch=batch,
+                subsample=cfg.eval_subsample, subsample_seed=cfg.seed)
+        return self._subsampled_evals[key]
 
     def run(self, rounds: Optional[int] = None, *, mode: str = "round",
             speed=None, verbose: bool = False, **overrides):
@@ -121,7 +155,7 @@ class Federation:
                else self.config)
         kw = dict(init_params_fn=self.init_params_fn, loss_fn=self.loss_fn,
                   fed_data=self.data, evaluate_fn=self.evaluate_fn,
-                  client_eval_fn=self.client_eval_fn, verbose=verbose)
+                  client_eval_fn=self._client_eval_for(cfg), verbose=verbose)
         if mode == "round":
             return run_round_based(cfg, **kw)
         return run_event_driven(cfg, speed=speed, **kw)

@@ -72,6 +72,13 @@ class RoundRecord:
     selected: List[int] = field(default_factory=list)
     values: Optional[List[float]] = None
     client_accs: Optional[List[float]] = None
+    # how many events_per_eval boundaries this record spans.  The batched
+    # engine evaluates at WINDOW granularity: when a window covers w > epe
+    # events, the boundaries that fell inside it collapse into one record
+    # with boundaries_crossed > 1 (the per-boundary globals between two
+    # mix points are not materialised).  Sequential/round runtimes always
+    # record exactly one boundary per record.
+    boundaries_crossed: int = 1
 
 
 @dataclass

@@ -7,6 +7,34 @@ the gathered sub-stack, and accepted uploads flow through a
 FedBuff-style buffer flushed as a staleness-weighted mean every
 ``buffer_size`` arrivals.
 
+Three performance layers on top of that execution model:
+
+* **Full-window fast path.**  At ``max_batch=0`` (the throughput
+  default) a window is a *permutation* of all N clients, so the engine
+  skips the three O(N·|params|) stack copies entirely: the update runs
+  over the stacked state in CLIENT order with per-client RNG keys
+  permuted to their arrival positions (bit-exact with the gathered
+  path — ``make_local_update_keyed``), prev_grads becomes the update's
+  eff output by reference, and the download write-back is a pure gather
+  of version trees (no scatter).
+
+* **Sharded client state.**  ``FLRunConfig.shard_clients`` places the
+  stacked pytrees on a 1-D ``("clients",)`` mesh
+  (``repro.distributed.sharding.client_state_sharding``): the vmapped
+  window update is data-parallel across devices, and the engine's jit
+  set (``_engine_jits``) keeps stacked outputs constrained to the
+  client axis.  A 1-device mesh is bit-exact with the unsharded engine.
+
+* **One-window-deep pipeline.**  Host work that cannot affect gating —
+  rescheduling the window's clients, popping the NEXT window, gathering
+  its data — happens between dispatching a window's device work and
+  blocking on its gating inputs (whose device→host copies are started
+  asynchronously), so the host never sits idle in front of
+  ``np.asarray``.  Eval records hold device scalars until the end of the
+  run, the download write-back + prev-grad scatter land as one donated
+  jitted commit, and a flush triggered by the window's final event is
+  folded into that same call.
+
 The algorithm is the ``UploadPolicy`` / ``Aggregator`` protocol: the
 policy's declared stacked inputs (Eq. 1 values, gradient norms) are
 computed once per window as a single vmapped dispatch — the one-dispatch
@@ -21,18 +49,59 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.common.pytree import stacked_index, tree_bytes, tree_gather
+from repro.algorithms.base import Aggregator
+from repro.common.pytree import (stacked_index, tree_bytes, tree_gather,
+                                 tree_shard)
 from repro.core.aggregation import buffered_coefs, buffered_mix
-from repro.core.client import make_local_update
+from repro.core.client import make_local_update, make_local_update_keyed
 from repro.core.metrics import CommStats, RoundRecord, RunResult
 from repro.core.runtimes.common import (_BROADCAST, _UPLOAD,
-                                        _apply_downloads_jit,
                                         _compressed_broadcast,
                                         _compressed_upload, _enc_seed,
-                                        _event_helpers, _gather_jit,
-                                        _make_codecs, _scatter_jit,
-                                        _stack_jit, _tree_delta, _value_fn)
+                                        _engine_jits, _event_helpers,
+                                        _make_codecs, _tree_delta, _value_fn)
 from repro.core.scheduler import EventScheduler
+
+
+def _host_async(x):
+    """Start a non-blocking device→host copy so the later np.asarray
+    completes immediately (no-op for values that are already host-side)."""
+    try:
+        x.copy_to_host_async()
+    except AttributeError:
+        pass
+    return x
+
+
+class _AccCache:
+    """Per-client Eq. 1 accuracy cache (``FLRunConfig.eval_cache``):
+    each client's accuracy term is refreshed at most once every ``every``
+    of its own events and the cached scalar reused in between.  Fresh
+    rows are gathered and evaluated in power-of-two buckets so the
+    number of compiled eval variants stays O(log N)."""
+
+    def __init__(self, num_clients: int, every: int, batch_eval, gather):
+        self.every = every
+        self.batch_eval = batch_eval
+        self.gather = gather
+        self.acc = np.zeros(num_clients, np.float32)
+        # "never evaluated" sorts as infinitely stale
+        self.age = np.full(num_clients, np.iinfo(np.int32).max, np.int64)
+
+    def window_accs(self, newp, clients: np.ndarray) -> jnp.ndarray:
+        """Accuracies for the window's clients, indexed by ``newp`` rows
+        (``clients[r]`` = client id of row r)."""
+        need = np.flatnonzero(self.age[clients] >= self.every)
+        if len(need):
+            bucket = 1 << (len(need) - 1).bit_length()
+            rows = np.concatenate([need, np.zeros(bucket - len(need),
+                                                  np.int64)])
+            fresh = np.asarray(self.batch_eval(
+                self.gather(newp, jnp.asarray(rows))), np.float32)
+            self.acc[clients[need]] = fresh[:len(need)]
+            self.age[clients[need]] = 0
+        self.age[clients] += 1
+        return jnp.asarray(self.acc[clients])
 
 
 def _run_event_batched(run_cfg, policy, aggregator, init_params_fn, loss_fn,
@@ -47,16 +116,28 @@ def _run_event_batched(run_cfg, policy, aggregator, init_params_fn, loss_fn,
     sq_diff = _value_fn(run_cfg)
 
     local_update = make_local_update(loss_fn, run_cfg.local)
+    keyed_update = make_local_update_keyed(loss_fn, run_cfg.local)
     data = {"images": jnp.asarray(fed_data.images),
             "labels": jnp.asarray(fed_data.labels),
             "mask": jnp.asarray(fed_data.mask)}
 
+    sharding = None
+    if run_cfg.shard_clients:
+        from repro.distributed.sharding import client_state_sharding
+        sharding = client_state_sharding(N)
+    ops = _engine_jits(sharding)
+
     # device-resident stacked per-client state: no Python lists of full
-    # pytrees, everything gathers/scatters on a leading axis
+    # pytrees, everything gathers/scatters on a leading axis (sharded on
+    # the ("clients",) mesh when configured)
     client_params = jax.tree.map(
         lambda x: jnp.broadcast_to(x, (N,) + x.shape), global_params)
     prev_grads = jax.tree.map(
         lambda x: jnp.zeros((N,) + x.shape, jnp.float32), global_params)
+    if sharding is not None:
+        client_params = tree_shard(client_params, sharding)
+        prev_grads = tree_shard(prev_grads, sharding)
+        data = tree_shard(data, sharding)
     model_version = np.zeros(N, int)  # version each client last downloaded
     server_version = 0
     prev_global = global_params
@@ -64,6 +145,12 @@ def _run_event_batched(run_cfg, policy, aggregator, init_params_fn, loss_fn,
 
     batch_eval, values_fn, norms_fn = _event_helpers(
         run_cfg, client_eval_fn, sq_diff)
+    acc_cache = (_AccCache(N, run_cfg.eval_cache, batch_eval, ops.gather)
+                 if policy.needs_values and run_cfg.eval_cache > 0 else None)
+    # a window's final flush folds into the commit only when the default
+    # flush math applies (a plugin aggregator's override must stay in
+    # charge of its own mixing)
+    foldable_flush = type(aggregator).flush_mix is Aggregator.flush_mix
 
     W = run_cfg.max_batch if run_cfg.max_batch > 0 else N
     W = max(1, min(W, N))
@@ -72,8 +159,9 @@ def _run_event_batched(run_cfg, policy, aggregator, init_params_fn, loss_fn,
     sched = EventScheduler(N, speed)
     records: list = []
     # the FedBuff buffer: (stacked_tree, row) references — rows of the
-    # window's vmapped output for identity uploads, size-1 stacks for
-    # codec reconstructions; gathered/stacked only at flush time
+    # window's vmapped output for identity uploads (client ids on the
+    # fast path, window positions otherwise), size-1 stacks for codec
+    # reconstructions; gathered/stacked only at flush time
     buffer: list = []
     buf_stale: list = []              # their staleness weights s(tau)
 
@@ -109,27 +197,73 @@ def _run_event_batched(run_cfg, policy, aggregator, init_params_fn, loss_fn,
         buffer.clear()
         buf_stale.clear()
 
+    last_eval = (None, None)           # (server_version, acc device scalar)
     ev = 0
-    while ev < total_events:
-        times, idx_np = sched.pop_window(min(W, total_events - ev))
+    pre_d = None                       # next window's pre-dispatched data
+    times, idx_np = (sched.pop_window(min(W, total_events))
+                     if total_events else (np.empty(0), np.empty(0, int)))
+    while len(idx_np):
         t_now = float(times[-1])
         w = len(idx_np)
-        idx = jnp.asarray(idx_np)
+        full = w == N                  # a full window = client permutation
         rng, urng = jax.random.split(rng)
-        sub_base = _gather_jit(client_params, idx)     # the downloaded models
-        d_w = _gather_jit(data, idx)
-        newp, eff, _ = local_update(sub_base, d_w, urng)
+
+        # ---- dispatch the window's device work ------------------------
+        if full:
+            # run in client order with keys permuted to arrival positions:
+            # bit-exact with the gathered path, but the three O(N*|params|)
+            # stack copies (gather, prev-grad scatter, download scatter)
+            # vanish.  row(client i) == i.
+            inv = np.empty(N, np.int64)
+            inv[idx_np] = np.arange(N)
+            keys = jax.random.split(urng, N)[jnp.asarray(inv)]
+            sub_base = client_params
+            newp, eff, _ = keyed_update(client_params, data, keys)
+            row_of = idx_np            # event j -> row in newp/eff
+        else:
+            idx = jnp.asarray(idx_np)
+            sub_base = ops.gather(client_params, idx)
+            d_w = pre_d if pre_d is not None else ops.gather(data, idx)
+            newp, eff, _ = local_update(sub_base, d_w, urng)
+            row_of = np.arange(w)
+        pre_d = None
 
         # the policy's declared stacked inputs: ONE vmapped dispatch per
-        # window each, then cheap host-side scalar decisions per event
-        V_w = norms_w = None
+        # window each, with the device->host copy started immediately so
+        # the host can keep dispatching while it lands
+        V_dev = norms_dev = None
         if policy.needs_values:
-            accs = batch_eval(newp)
-            V_w = np.asarray(
-                values_fn(_gather_jit(prev_grads, idx), eff, accs),
-                np.float64)
+            if acc_cache is not None:
+                # rows of newp map to clients: identity on the fast path
+                # (client order), the window's arrival ids otherwise
+                accs = acc_cache.window_accs(
+                    newp, np.arange(N) if full else idx_np)
+            else:
+                accs = batch_eval(newp)
+            pg_w = prev_grads if full else ops.gather(prev_grads,
+                                                      jnp.asarray(idx_np))
+            V_dev = _host_async(values_fn(pg_w, eff, accs))
         if policy.needs_norms:
-            norms_w = np.asarray(norms_fn(eff), np.float64)
+            norms_dev = _host_async(norms_fn(eff))
+
+        # ---- the one-window-deep pipeline ----------------------------
+        # everything gating CANNOT change happens before we block on the
+        # gating inputs: restart each client from its own completion time
+        # (window execution must not barrier the simulated clock), pop
+        # the NEXT window, and pre-dispatch its data gather
+        for j in range(w):
+            sched.schedule(int(idx_np[j]), start=float(times[j]))
+        remaining = total_events - ev - w
+        nxt = sched.pop_window(min(W, remaining)) if remaining else None
+        if nxt is not None and len(nxt[1]) < N:
+            pre_d = ops.gather(data, jnp.asarray(nxt[1]))
+
+        V_w = (None if V_dev is None
+               else np.asarray(V_dev, np.float64)[row_of if full else
+                                                  slice(None)])
+        norms_w = (None if norms_dev is None
+                   else np.asarray(norms_dev, np.float64)[row_of if full else
+                                                          slice(None)])
         # the policy's server-side threshold (EAFLM Eq. 3) is evaluated
         # once per WINDOW, from the deltas as of window start — an
         # intentional engine approximation: mid-window flushes (whenever
@@ -143,8 +277,10 @@ def _run_event_batched(run_cfg, policy, aggregator, init_params_fn, loss_fn,
         ver_trees: list = []                # distinct globals downloaded
         ver_pos: dict = {}                  # server_version -> position
         enc_downloads: list = []            # per-client lossy downlink trees
+        pending = None                      # final flush folded into commit
         for j in range(w):
             i = int(idx_np[j])
+            r = int(row_of[j])
             if policy.reports:
                 comm.record_report(1)
             upload = policy.decide(
@@ -153,79 +289,142 @@ def _run_event_batched(run_cfg, policy, aggregator, init_params_fn, loss_fn,
 
             if upload:
                 if codec.is_identity:
-                    buffer.append((newp, j))
+                    buffer.append((newp, r))
                     comm.record_upload(1)
                 else:
                     recon = _compressed_upload(
-                        codec, ef, comm, stacked_index(sub_base, j),
-                        stacked_index(newp, j), i,
+                        codec, ef, comm, stacked_index(sub_base, r),
+                        stacked_index(newp, r), i,
                         _enc_seed(run_cfg, ev + j, i, _UPLOAD))
                     buffer.append((jax.tree.map(lambda x: x[None], recon), 0))
                 buf_stale.append(aggregator.stale_weight(
                     server_version - model_version[i]))
                 if len(buffer) >= K:
-                    flush()
+                    if (j == w - 1 and len(buffer) > 1 and foldable_flush
+                            and bcodec is None
+                            and all(ref is newp for ref, _ in buffer)):
+                        # window's final flush: fold into the commit call
+                        # (only this event can download the new version)
+                        rows = np.asarray([rr for _, rr in buffer], np.int32)
+                        coef, rho_sbar = buffered_coefs(
+                            buf_stale, aggregator.mix_rate)
+                        pending = (rows, coef, rho_sbar)
+                        server_version += 1
+                        buffer.clear()
+                        buf_stale.clear()
+                    else:
+                        flush()
 
             if bcodec is None:
                 comm.record_broadcast(1)
-                if server_version not in ver_pos:
-                    ver_pos[server_version] = len(ver_trees)
-                    ver_trees.append(global_params)
-                dl_rel[j] = ver_pos[server_version]
+                if pending is not None and server_version not in ver_pos:
+                    dl_rel[j] = -1      # the in-commit flushed global
+                else:
+                    if server_version not in ver_pos:
+                        ver_pos[server_version] = len(ver_trees)
+                        ver_trees.append(global_params)
+                    dl_rel[j] = ver_pos[server_version]
             else:
                 enc_downloads.append(_compressed_broadcast(
                     bcodec, comm, global_params, 1,
                     _enc_seed(run_cfg, ev + j, i, _BROADCAST)))
             model_version[i] = server_version
-            # restart from the client's own completion time — window
-            # execution must not barrier the simulated clock
-            sched.schedule(i, start=times[j])
 
         if any(ref is newp for ref, _ in buffer):
-            # detach leftover buffer entries from the W-wide window output
-            # before it goes out of scope: under gating a partially-full
-            # buffer would otherwise pin one full (W, ...) stack per window
-            # until the flush — gather just the buffered rows instead
+            # detach leftover buffer entries from the window output before
+            # it goes out of scope: under gating a partially-full buffer
+            # would otherwise pin one full (w, ...) stack per window until
+            # the flush — gather just the buffered rows instead
             rows = np.asarray([r for ref, r in buffer if ref is newp])
             sub = tree_gather(newp, rows)
             fresh = iter(range(len(rows)))
             buffer[:] = [(sub, next(fresh)) if ref is newp else (ref, r)
                          for ref, r in buffer]
+        sub_base = None    # release the window's download-base reference
 
-        # write the window back in one jitted call each: downloads gather
-        # from the stack of distinct globals, prev eff-grads scatter direct.
-        # The version count varies per window under gating, so the stack is
-        # padded to the next power of two — O(log W) compiled variants
-        # instead of one per distinct count (padding rows are never indexed)
+        # ---- commit: flush remainder + download write-back + prev-grad
+        # scatter, ONE donated jitted call ------------------------------
+        if pending is not None:
+            prev_prev_global = prev_global
+            prev_global = global_params
         if bcodec is None:
+            # the version count varies per window under gating, so the
+            # stack is padded to the next power of two — O(log W) compiled
+            # variants instead of one per distinct count (padding rows are
+            # never indexed)
             if len(ver_trees) > 1:
                 bucket = 1 << (len(ver_trees) - 1).bit_length()
                 padded = ver_trees + [ver_trees[-1]] * (bucket
                                                         - len(ver_trees))
-                vstack = _stack_jit(tuple(padded))
             else:
-                vstack = jax.tree.map(lambda x: x[None], ver_trees[0])
-            client_params = _apply_downloads_jit(client_params, idx, vstack,
-                                                 jnp.asarray(dl_rel))
+                padded = ver_trees
+            vstack = ops.stack(tuple(padded))
+            # fast path: re-index the per-event versions by CLIENT (row i
+            # of the new stack belongs to client i, whose event was j =
+            # inv[i]); sub-full windows keep arrival order
+            rel_np = dl_rel[inv] if full else dl_rel
+            rel = jnp.asarray(np.where(rel_np < 0, len(padded), rel_np))
+            if full:
+                if pending is not None:
+                    global_params, client_params, prev_grads = \
+                        ops.commit_full_flush(global_params, vstack, rel,
+                                              eff, newp, *pending)
+                else:
+                    client_params, prev_grads = ops.commit_full(vstack, rel,
+                                                                eff)
+            else:
+                idx = jnp.asarray(idx_np)
+                if pending is not None:
+                    global_params, client_params, prev_grads = \
+                        ops.commit_win_flush(global_params, client_params,
+                                             prev_grads, idx, vstack, rel,
+                                             eff, newp, *pending)
+                else:
+                    client_params, prev_grads = ops.commit_win(
+                        client_params, prev_grads, idx, vstack, rel, eff)
         else:
-            client_params = _scatter_jit(client_params, idx,
-                                         _stack_jit(tuple(enc_downloads)))
-        prev_grads = _scatter_jit(prev_grads, idx, eff)
+            assert pending is None     # bcodec downloads are never folded
+            if full:
+                # client order: client i received enc_downloads[inv[i]]
+                client_params = ops.place(ops.stack(
+                    tuple(enc_downloads[int(v)] for v in inv)))
+                prev_grads = eff
+            else:
+                idx = jnp.asarray(idx_np)
+                client_params = ops.scatter_donated(
+                    client_params, idx, ops.stack(tuple(enc_downloads)))
+                prev_grads = ops.scatter_donated(prev_grads, idx, eff)
 
         prev_ev, ev = ev, ev + w
         epe = run_cfg.events_per_eval
-        if ev // epe > prev_ev // epe:
-            acc = float(evaluate_fn(global_params))
+        crossed = ev // epe - prev_ev // epe
+        if crossed:
+            # eval records hold device scalars until the end of the run so
+            # evaluation overlaps the next window's compute; a record whose
+            # global model is bit-identical to the previous one (no flush
+            # since) reuses its scalar outright
+            if last_eval[0] == server_version:
+                acc = last_eval[1]     # bit-identical model: reuse (exact)
+            else:
+                acc = _host_async(evaluate_fn(global_params))
+                last_eval = (server_version, acc)
             records.append(RoundRecord(round=ev, time=t_now, global_acc=acc,
-                                       uploads_so_far=comm.model_uploads))
+                                       uploads_so_far=comm.model_uploads,
+                                       boundaries_crossed=crossed))
             if verbose:
                 print(f"[{run_cfg.algorithm}/batched] ev {ev:5d} "
-                      f"t={t_now:8.1f} acc={acc:.4f} "
+                      f"t={t_now:8.1f} acc={float(acc):.4f} "
                       f"uploads={comm.model_uploads}")
+
+        if nxt is None:
+            break
+        times, idx_np = nxt
 
     if buffer:  # partial buffer at run end — flush so no update is lost
         flush()
 
+    for r in records:                  # resolve the deferred eval scalars
+        r.global_acc = float(r.global_acc)
     res = RunResult(run_cfg.algorithm, records, comm,
                     run_cfg.target_acc).finalize_target()
     res.idle_fraction = float(sched.idle_fraction().mean())

@@ -9,7 +9,8 @@ algorithm-dependent decision.
 """
 from __future__ import annotations
 
-from functools import lru_cache
+from functools import lru_cache, partial
+from types import SimpleNamespace
 
 import jax
 import jax.numpy as jnp
@@ -126,22 +127,102 @@ def _round_broadcast(run_cfg, bcodec, comm, global_params, n, t):
 
 # ----------------------------------------------- jitted event-path helpers ---
 
-# module-level jitted composites: built once, reused across runs — repeated
-# runs over the same shapes (benchmark sweeps, engine comparisons) hit the
-# compile cache instead of re-jitting per run
-_scatter_jit = jax.jit(tree_scatter)
-_gather_jit = jax.jit(tree_gather)
-# stacking a tuple of pytrees eagerly costs one dispatch per element per
-# leaf; under jit it is one compiled concat (retraces only on a new length)
-_stack_jit = jax.jit(lambda trees: tree_stack(list(trees)))
+# ------------------------------------------- batched-engine jit set ---
+
+def _fold_flush(gp, src, rows, coef, rho_sbar):
+    """The FedBuff flush math (== aggregation.flush_mix_jit) as a plain
+    traceable function, so the window-commit jits can fold the window's
+    final flush into the same compiled call as the download write-back."""
+    from repro.core.aggregation import async_mix, buffered_mean
+    bar = buffered_mean(tree_gather(src, rows), coef)
+    return async_mix(gp, bar, rho_sbar)
 
 
-@jax.jit
-def _apply_downloads_jit(cp, idx, vstack, rel):
-    """Window download write-back: every client in ``idx`` receives the
-    global model version it downloaded (``vstack[rel]``), one scatter."""
+def _append_version(vstack, gnew):
+    """Extend the stacked download-version trees with the in-jit flushed
+    global (the version clients downloading AFTER the folded flush see)."""
     return jax.tree.map(
-        lambda s, v: s.at[idx].set(v[rel].astype(s.dtype)), cp, vstack)
+        lambda v, g: jnp.concatenate([v, g[None].astype(v.dtype)], 0),
+        vstack, gnew)
+
+
+@lru_cache(maxsize=8)
+def _engine_jits(sharding):
+    """The batched engine's compiled helper set, built once per client
+    sharding (``None`` = unsharded single-host).  Everything that writes
+    the big (N, ...) stacked state donates it (``donate_argnums``) — at
+    N=1024 a non-donated scatter doubles peak memory for client_params
+    every window — and constrains its stacked outputs back onto the
+    client sharding so updates never silently migrate to one device.
+    Cached on the sharding so benchmark sweeps reuse executables."""
+    nshard = 1 if sharding is None else int(sharding.mesh.devices.size)
+
+    def _cons(x):
+        # divisibility-guarded, like sharding.spec_for: odd-sized window
+        # sub-stacks stay wherever XLA put them
+        if sharding is None or x.ndim == 0 or x.shape[0] % nshard:
+            return x
+        return jax.lax.with_sharding_constraint(x, sharding)
+
+    def cons(tree):
+        return jax.tree.map(_cons, tree)
+
+    gather = jax.jit(lambda s, i: cons(tree_gather(s, i)))
+    # NOT constrained: stack() builds the download-version stack, whose
+    # leading dim is versions, not clients — constraining it whenever the
+    # version count happened to divide the device count would spread the
+    # versions across devices and turn every commit's v[rel] gather into
+    # an all-gather.  Client-axis stacks go through place() explicitly.
+    stack = jax.jit(lambda trees: tree_stack(list(trees)))
+    place = jax.jit(cons)
+
+    @partial(jax.jit, donate_argnums=(0, 1))
+    def commit_win(cp, pg, idx, vstack, rel, eff):
+        """Sub-full-window commit: downloads gather from the stack of
+        distinct global versions and scatter into ``cp``; the window's
+        effective gradients scatter into ``pg`` — one call, both stacked
+        buffers donated."""
+        cp = jax.tree.map(
+            lambda s, v: s.at[idx].set(v[rel].astype(s.dtype)), cp, vstack)
+        pg = jax.tree.map(lambda s, u: s.at[idx].set(u), pg, eff)
+        return cons(cp), cons(pg)
+
+    @partial(jax.jit, donate_argnums=(1, 2))
+    def commit_win_flush(gp, cp, pg, idx, vstack, rel, eff,
+                         src, rows, coef, rho_sbar):
+        """commit_win with the window's final buffer flush folded in:
+        the new global is produced and applied to the clients that
+        downloaded it (rel == len(vstack)) inside the same executable."""
+        gnew = _fold_flush(gp, src, rows, coef, rho_sbar)
+        vx = _append_version(vstack, gnew)
+        cp = jax.tree.map(
+            lambda s, v: s.at[idx].set(v[rel].astype(s.dtype)), cp, vx)
+        pg = jax.tree.map(lambda s, u: s.at[idx].set(u), pg, eff)
+        return gnew, cons(cp), cons(pg)
+
+    @jax.jit
+    def commit_full(vstack, rel, eff):
+        """Full-window commit (w == N): every client downloaded, so the
+        write-back is a pure per-client gather of download versions — no
+        scatter, no donation needed (the old stacks are simply dropped);
+        prev_grads IS the window's eff stack (client order)."""
+        return cons(jax.tree.map(lambda v: v[rel], vstack)), cons(eff)
+
+    @jax.jit
+    def commit_full_flush(gp, vstack, rel, eff, src, rows, coef, rho_sbar):
+        gnew = _fold_flush(gp, src, rows, coef, rho_sbar)
+        vx = _append_version(vstack, gnew)
+        return gnew, cons(jax.tree.map(lambda v: v[rel], vx)), cons(eff)
+
+    @partial(jax.jit, donate_argnums=(0,))
+    def scatter_donated(s, idx, rows):
+        """Donated tree_scatter for the lossy-downlink (bcodec) path."""
+        return cons(tree_scatter(s, idx, rows))
+
+    return SimpleNamespace(
+        gather=gather, stack=stack, place=place, commit_win=commit_win,
+        commit_win_flush=commit_win_flush, commit_full=commit_full,
+        commit_full_flush=commit_full_flush, scatter_donated=scatter_donated)
 
 
 def _round_helpers(run_cfg, client_eval_fn):

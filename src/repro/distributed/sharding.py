@@ -32,6 +32,35 @@ def make_mesh(axis_shapes, axis_names) -> Mesh:
             axis_types=tuple(jax.sharding.AxisType.Auto for _ in axis_names))
     return jax.make_mesh(axis_shapes, axis_names)
 
+
+# ------------------------------------------------- federated client axis ---
+
+def client_mesh(num_devices: Optional[int] = None) -> Mesh:
+    """1-D ``("clients",)`` mesh over the host's devices — the batched
+    async engine's data-parallel axis.  Stacked per-client state (leading
+    axis = client) sharded on it runs each scheduler window's vmapped
+    local update as pure data parallelism: every device trains its slice
+    of the federation, no cross-device collectives in the update itself."""
+    n = num_devices if num_devices is not None else len(jax.devices())
+    return make_mesh((n,), ("clients",))
+
+
+def client_state_sharding(num_clients: int,
+                          mesh: Optional[Mesh] = None) -> Optional[NamedSharding]:
+    """``NamedSharding`` for stacked per-client pytrees: dim0 over
+    ``"clients"``, everything else replicated (``P("clients")`` names only
+    the leading dim).  Returns ``None`` — the replicated/single-host
+    fallback — when the client count does not divide the device count
+    (same divisibility policy as ``spec_for``: never a partial shard).
+    A single-device mesh is a valid degenerate case: the constraint is a
+    no-op there, which is what keeps the sharded engine bit-exact with
+    the unsharded one (tests/test_async_engine.py)."""
+    mesh = mesh if mesh is not None else client_mesh()
+    ndev = int(mesh.devices.size)
+    if num_clients % ndev:
+        return None
+    return NamedSharding(mesh, P("clients"))
+
 # FSDP x TP: d_model dim sharded over data (ZeRO-style), ff/heads/vocab over
 # model (tensor parallel); experts over model (expert parallel).
 TRAIN_RULES: Dict[str, Optional[str]] = {

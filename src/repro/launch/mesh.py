@@ -12,7 +12,7 @@ from __future__ import annotations
 
 import jax
 
-from repro.distributed.sharding import make_mesh
+from repro.distributed.sharding import client_mesh, make_mesh
 
 # v5e constants used by the roofline (benchmarks/roofline.py)
 PEAK_FLOPS_BF16 = 197e12        # per chip
@@ -26,6 +26,16 @@ def make_production_mesh(*, multi_pod: bool = False):
     shape = (2, 16, 16) if multi_pod else (16, 16)
     axes = ("pod", "data", "model") if multi_pod else ("data", "model")
     return make_mesh(shape, axes)
+
+
+def make_client_mesh(*, num_devices=None):
+    """1-D ``("clients",)`` mesh for the batched async FL engine
+    (``FLRunConfig.shard_clients``): stacked per-client state is sharded
+    on its leading axis so a window's vmapped local update runs
+    data-parallel across devices.  Production shape: one v5e pod, 256
+    chips, 256 | N federations; CPU tests force device counts via
+    XLA_FLAGS."""
+    return client_mesh(num_devices)
 
 
 def make_host_mesh(*, pods: int = 2):

@@ -38,8 +38,9 @@ def _run(setup, alg, engine, rounds=4, comp="identity", **kw):
     _, _, _, _, mcfg, loss_fn, evaluate, fed = setup
     rc = FLRunConfig(algorithm=alg, num_clients=7, rounds=rounds,
                      local=LocalSpec(batch_size=32, local_rounds=1, lr=0.1),
-                     target_acc=0.90, events_per_eval=7, compressor=comp,
-                     engine=engine, **kw)
+                     target_acc=0.90,
+                     events_per_eval=kw.pop("events_per_eval", 7),
+                     compressor=comp, engine=engine, **kw)
     return run_event_driven(rc, init_params_fn=lambda k: mlp_init(mcfg, k),
                             loss_fn=loss_fn, fed_data=fed,
                             evaluate_fn=evaluate)
@@ -190,6 +191,105 @@ class TestEngineEquivalence:
         with pytest.raises(ValueError):
             _run(setup, alg, "warp-drive")
 
+    @pytest.mark.parametrize("comp", ["identity", "topk0.1_int8"])
+    def test_sharded_single_device_bitmatches_sequential(self, setup, comp):
+        """shard_clients on a 1-device mesh must change NOTHING: the
+        sharding constraint is a no-op there, so the w=1/K=1 contract
+        holds bit-for-bit through the sharded jit set too."""
+        seq = _run(setup, "vafl", "sequential", comp=comp)
+        sh = _run(setup, "vafl", "batched", comp=comp, max_batch=1,
+                  buffer_size=1, shard_clients=True)
+        assert dataclasses.asdict(seq.comm) == dataclasses.asdict(sh.comm)
+        assert [(r.round, r.time, r.global_acc, r.uploads_so_far)
+                for r in seq.records] == \
+               [(r.round, r.time, r.global_acc, r.uploads_so_far)
+                for r in sh.records]
+
+    @pytest.mark.parametrize("alg", ["afl", "vafl"])
+    def test_sharded_full_window_bitmatches_unsharded(self, setup, alg):
+        """The full-window fast path under shard_clients (1-device mesh)
+        vs the plain batched engine: identical records and comm."""
+        ref = _run(setup, alg, "batched", buffer_size=2)
+        sh = _run(setup, alg, "batched", buffer_size=2, shard_clients=True)
+        assert dataclasses.asdict(ref.comm) == dataclasses.asdict(sh.comm)
+        assert [r.global_acc for r in ref.records] == \
+               [r.global_acc for r in sh.records]
+
+    def test_tree_shard_roundtrip(self):
+        """tree_shard places a stacked tree on the client sharding and
+        tree_gather_sharded reassembles it to host numpy unchanged."""
+        from repro.common.pytree import tree_gather_sharded, tree_shard
+        from repro.distributed.sharding import client_state_sharding
+        n = 2 * jax.device_count()       # always divides the device count
+        tree = {"w": jnp.arange(n * 6.0).reshape(n, 3, 2),
+                "b": jnp.ones((n, 5), jnp.float32)}
+        sharding = client_state_sharding(n)
+        assert sharding is not None
+        placed = tree_shard(tree, sharding)
+        back = tree_gather_sharded(placed)
+        for a, b in zip(jax.tree.leaves(tree), jax.tree.leaves(back)):
+            assert isinstance(b, np.ndarray)
+            np.testing.assert_array_equal(np.asarray(a), b)
+        assert tree_shard(tree, None) is tree   # unsharded fallback
+
+    def test_multi_device_sharded_parity(self, setup):
+        """The real thing: 4 forced CPU devices, stacked client state
+        sharded on the ("clients",) mesh — upload decisions identical to
+        the sequential runtime and record accuracies equal to fp32 noise
+        (per-client lanes are independent, so in practice they match
+        exactly; the tolerance only guards against cross-device layout
+        differences)."""
+        import subprocess
+        import sys
+        import textwrap
+        code = textwrap.dedent("""
+            import os
+            os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=4"
+            import sys; sys.path.insert(0, "src")
+            import numpy as np, jax
+            from repro.core import FLRunConfig, run_event_driven
+            from repro.core.client import (LocalSpec, make_evaluator,
+                                           make_weighted_classifier_loss)
+            from repro.data.partition import iid_partition
+            from repro.data.synthetic import synthetic_mnist
+            from repro.models.cnn import MLPConfig, mlp_forward, mlp_init
+
+            assert jax.device_count() == 4
+            xtr, ytr, xte, yte = synthetic_mnist(8 * 60 + 200, 200, seed=0)
+            mcfg = MLPConfig(hidden=(16,))
+            loss_fn = make_weighted_classifier_loss(mlp_forward, mcfg)
+            evaluate = make_evaluator(mlp_forward, mcfg, xte, yte, batch=200)
+            fed = iid_partition(xtr, ytr, 8, samples_per_client=60, seed=0)
+
+            def go(**kw):
+                rc = FLRunConfig(algorithm="vafl", num_clients=8, rounds=2,
+                                 local=LocalSpec(batch_size=32,
+                                                 local_rounds=1, lr=0.1),
+                                 target_acc=0.99, events_per_eval=8, **kw)
+                return run_event_driven(
+                    rc, init_params_fn=lambda k: mlp_init(mcfg, k),
+                    loss_fn=loss_fn, fed_data=fed, evaluate_fn=evaluate)
+
+            seq = go()
+            sh = go(engine="batched", max_batch=1, buffer_size=1,
+                    shard_clients=True)
+            assert seq.comm.model_uploads == sh.comm.model_uploads
+            np.testing.assert_allclose(
+                [r.global_acc for r in seq.records],
+                [r.global_acc for r in sh.records], rtol=0, atol=1e-6)
+            full = go(engine="batched", buffer_size=4, shard_clients=True)
+            ref = go(engine="batched", buffer_size=4)
+            assert full.comm.model_uploads == ref.comm.model_uploads
+            np.testing.assert_allclose(
+                [r.global_acc for r in full.records],
+                [r.global_acc for r in ref.records], rtol=0, atol=1e-6)
+            print("OK")
+        """)
+        out = subprocess.run([sys.executable, "-c", code],
+                             capture_output=True, text=True, cwd=".")
+        assert out.returncode == 0, out.stderr[-2000:]
+        assert "OK" in out.stdout
+
 
 # -------------------------------------------------- buffered aggregation ---
 
@@ -276,6 +376,86 @@ class TestBatchedEngineScale:
         assert res.comm.broadcasts == N
         assert res.idle_fraction is not None
         assert np.isfinite(res.records[-1].global_acc)
+
+
+# ----------------------------------------------------- eval fast path ---
+
+class TestEvalFastPath:
+    def test_subsampled_evaluator_deterministic(self, setup):
+        """Same subsample seed -> the same test subset -> identical
+        scores; a subsample covering the whole set is the full evaluator."""
+        _, _, xte, yte, mcfg, _, _, _ = setup
+        params = mlp_init(mcfg, jax.random.key(3))
+        a = make_evaluator(mlp_forward, mcfg, xte, yte, batch=100,
+                           subsample=64, subsample_seed=5)
+        b = make_evaluator(mlp_forward, mcfg, xte, yte, batch=100,
+                           subsample=64, subsample_seed=5)
+        assert float(a(params)) == float(b(params))
+        full = make_evaluator(mlp_forward, mcfg, xte, yte, batch=500)
+        whole = make_evaluator(mlp_forward, mcfg, xte, yte, batch=500,
+                               subsample=len(yte))
+        assert float(full(params)) == float(whole(params))
+
+    def test_subsampled_run_records_deterministic(self, setup):
+        """Two identical runs under a subsampled client evaluator produce
+        identical records (the engine stays seed-reproducible)."""
+        _, _, xte, yte, mcfg, loss_fn, evaluate, fed = setup
+        sub = make_evaluator(mlp_forward, mcfg, xte, yte, batch=100,
+                             subsample=100, subsample_seed=0)
+        rc = FLRunConfig(algorithm="vafl", num_clients=7, rounds=3,
+                         local=LocalSpec(batch_size=32, local_rounds=1,
+                                         lr=0.1),
+                         target_acc=0.99, events_per_eval=7,
+                         engine="batched", buffer_size=2)
+        runs = [run_event_driven(rc,
+                                 init_params_fn=lambda k: mlp_init(mcfg, k),
+                                 loss_fn=loss_fn, fed_data=fed,
+                                 evaluate_fn=evaluate, client_eval_fn=sub)
+                for _ in range(2)]
+        assert [(r.round, r.global_acc, r.uploads_so_far)
+                for r in runs[0].records] == \
+               [(r.round, r.global_acc, r.uploads_so_far)
+                for r in runs[1].records]
+
+    def test_eval_cache_runs_and_gates(self, setup):
+        """eval_cache=3 refreshes each client's Eq. 1 accuracy every 3rd
+        own event: the run completes, still gates (vafl uploads < afl's
+        every-event count), and records stay finite."""
+        res = _run(setup, "vafl", "batched", rounds=6, buffer_size=2,
+                   eval_cache=3)
+        assert 0 < res.comm.model_uploads < 6 * 7
+        assert all(np.isfinite(r.global_acc) for r in res.records)
+
+    def test_eval_cache_zero_is_exact(self, setup):
+        """eval_cache=0 (default) is the exact path: bit-identical to a
+        run without the knob."""
+        a = _run(setup, "vafl", "batched", rounds=4, buffer_size=2)
+        b = _run(setup, "vafl", "batched", rounds=4, buffer_size=2,
+                 eval_cache=0)
+        assert dataclasses.asdict(a.comm) == dataclasses.asdict(b.comm)
+        assert [r.global_acc for r in a.records] == \
+               [r.global_acc for r in b.records]
+
+
+# ------------------------------------------------- eval-record cadence ---
+
+class TestEvalCadence:
+    def test_window_spanning_boundaries_are_counted(self, setup):
+        """events_per_eval boundaries inside one window collapse into a
+        single record at window granularity — but every crossed boundary
+        is accounted in boundaries_crossed, so cadence math stays exact:
+        sum(boundaries_crossed) == total_events // epe."""
+        res = _run(setup, "afl", "batched", rounds=4, buffer_size=2,
+                   events_per_eval=2)
+        total = 4 * 7
+        assert sum(r.boundaries_crossed for r in res.records) == total // 2
+        # full windows (w=7 > epe=2) must have collapsed several
+        assert any(r.boundaries_crossed > 1 for r in res.records)
+
+    def test_sequential_records_one_boundary_each(self, setup):
+        res = _run(setup, "afl", "sequential", rounds=2, events_per_eval=2)
+        assert all(r.boundaries_crossed == 1 for r in res.records)
+        assert len(res.records) == 2 * 7 // 2
 
 
 # --------------------------------------------- sync barrier participation ---

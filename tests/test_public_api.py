@@ -123,6 +123,28 @@ class TestFederation:
             Federation(model="mlp", data=fed, test_data=test,
                        algorithm="warp")
 
+    def test_eval_subsample_wiring(self, problem):
+        """eval_subsample builds a deterministic subsampled per-client
+        evaluator from the federation's test data; two identical runs
+        agree record-for-record, and explicit-fn mode without test data
+        rejects the knob loudly."""
+        fed, test = problem
+        f = Federation(model="mlp", data=fed, test_data=test,
+                       local=self.LOCAL, engine="batched",
+                       eval_subsample=64, target_acc=0.99)
+        a = f.run(rounds=2, mode="event")
+        b = f.run(rounds=2, mode="event")
+        assert [(r.round, r.global_acc) for r in a.records] == \
+               [(r.round, r.global_acc) for r in b.records]
+        mcfg = MLPConfig(hidden=(16,))
+        loss_fn = make_weighted_classifier_loss(mlp_forward, mcfg)
+        bare = Federation(data=fed, algorithm="vafl",
+                          init_params_fn=lambda k: mlp_init(mcfg, k),
+                          loss_fn=loss_fn, evaluate_fn=lambda p: 0.0,
+                          local=self.LOCAL, eval_subsample=64)
+        with pytest.raises(ValueError, match="eval_subsample"):
+            bare.run(rounds=1, mode="event")
+
 
 # -------------------------------------------------------- subprocess smokes ---
 
@@ -142,6 +164,28 @@ class TestEntryPoints:
         assert p.returncode == 0, p.stderr[-2000:]
         assert "[table3]" in p.stdout
         assert "communication_times" in p.stdout or "ccr" in p.stdout
+
+    def test_bench_engine_json_emitted(self, tmp_path):
+        """benchmarks/run.py --smoke must leave a machine-readable
+        BENCH_engine.json behind (events/sec per engine/N + byte CCR) —
+        the cross-PR perf-trajectory artifact."""
+        import json
+        p = subprocess.run(
+            [sys.executable, str(ROOT / "benchmarks" / "run.py"), "--smoke",
+             "--skip", "table3,fig4,fig5,compress"],
+            cwd=tmp_path, timeout=420, capture_output=True, text=True)
+        assert p.returncode == 0, p.stderr[-2000:]
+        out = tmp_path / "BENCH_engine.json"
+        assert out.exists(), p.stdout[-2000:]
+        doc = json.loads(out.read_text())
+        assert doc["schema"].startswith("bench-engine/")
+        assert doc["rows"], "no benchmark rows emitted"
+        for row in doc["rows"]:
+            for key in ("N", "sequential_events_per_sec",
+                        "batched_events_per_sec", "speedup", "byte_ccr",
+                        "vafl_subsampled_events_per_sec"):
+                assert key in row, f"missing {key}"
+                assert np.isfinite(row[key])
 
     @pytest.mark.slow
     def test_benchmarks_smoke_all_sections(self):

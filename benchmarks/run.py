@@ -8,6 +8,7 @@ Sections:
   [fig5/6]   paper Fig. 5/6  — per-client + cross-experiment VAFL Acc
   [compress] codec x algorithm uplink-bytes/CCR sweep (repro.compress)
   [engine]   batched async engine events/sec + accuracy at N up to 1024
+  [scenarios] repro.sim scenario x algorithm x codec time-to-accuracy
   [kernels]  grad_diff_norm / linear_scan microbenchmarks
   [roofline] three-term roofline per (arch x shape) from dry-run artifacts
   [gated]    cross-pod gated-collective accounting (multi-pod artifacts)
@@ -105,6 +106,20 @@ def main() -> None:
             out_json=os.path.join(
                 "artifacts" if os.path.isdir("artifacts") else "",
                 "BENCH_engine.json"))
+        print()
+
+    if "scenarios" not in skip:
+        print("== [scenarios] scenario x algorithm x codec "
+              "time-to-accuracy (repro.sim) ==")
+        from benchmarks.scenario_bench import run as sb
+        # always emits the machine-readable BENCH_scenarios.json —
+        # tier-1 asserts it shows the byte-aware clock coupling (vafl +
+        # topk_int8 reaches the target in less simulated time than
+        # vafl + identity on the same scenario)
+        sb(smoke=args.smoke or args.fast,
+           out_json=os.path.join(
+               "artifacts" if os.path.isdir("artifacts") else "",
+               "BENCH_scenarios.json"))
         print()
 
     if "kernels" not in skip:

@@ -1,0 +1,138 @@
+"""Scenario sweep — algorithm x scenario x codec time-to-accuracy frontier.
+
+The paper's headline claim is that communication is the async-FL
+bottleneck; ``repro.sim``'s byte-aware network models let us show it as
+a *time-to-accuracy* win instead of a proxy upload count: on the same
+scenario, a codec that ships fewer bytes advances the simulated clock
+less per round, so vafl+topk_int8 reaches the target accuracy in less
+simulated time than vafl+identity.  (Counter-based per-client draws make
+the comparison exact: both runs consume identical service/availability
+draws, so every completion time in the compressed run is pointwise <=
+the uncompressed one.)
+
+    PYTHONPATH=src python -m benchmarks.scenario_bench \
+        [--smoke] [--scenarios mobile_fleet,flaky_edge] \
+        [--algs vafl,afl] [--codecs identity,topk0.1_int8] \
+        [--json BENCH_scenarios.json]
+
+Emits the machine-readable ``BENCH_scenarios.json`` (schema
+``bench-scenarios/v1``) asserted by tier-1 (tests/test_public_api.py).
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import sys
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), ".."))
+
+SMOKE_SCENARIOS = ("mobile_fleet",)
+FULL_SCENARIOS = ("paper_testbed", "mobile_fleet", "flaky_edge",
+                  "datacenter")
+
+
+def _row(res, scenario, alg, codec, target):
+    return {
+        "scenario": scenario, "algorithm": alg, "codec": codec,
+        "target_acc": target,
+        "time_to_target": res.time_to_target,
+        "sim_time": res.sim_time,
+        "best_acc": round(res.best_acc, 4),
+        "uploads": res.comm.model_uploads,
+        "uplink_mb": round(res.comm.uplink_bytes / 1e6, 3),
+        "downlink_mb": round(res.comm.downlink_bytes / 1e6, 3),
+        "byte_ccr": round(res.byte_ccr, 4),
+        "mean_idle": (None if res.idle_fraction is None
+                      else round(res.idle_fraction, 4)),
+        "failed_rounds": (None if res.client_failed_rounds is None
+                          else int(sum(res.client_failed_rounds))),
+    }
+
+
+def run(scale=None, *, scenarios=None, algorithms=("vafl", "afl"),
+        codecs=("identity", "topk0.1_int8"), num_clients=7,
+        smoke=False, out_json=None):
+    from benchmarks.fl_common import BenchScale, build_problem
+    from repro.core import Federation
+    from repro.core.client import LocalSpec
+
+    scale = scale or (BenchScale(samples_per_client=400, rounds=10,
+                                 test_samples=300, target_acc=0.5)
+                      if smoke else BenchScale(rounds=12, target_acc=0.85))
+    scenarios = scenarios or (SMOKE_SCENARIOS if smoke else FULL_SCENARIOS)
+    if smoke:
+        algorithms = ("vafl",)
+    fed, triple, test = build_problem("mlp", scale, num_clients, iid=True)
+
+    rows = []
+    hdr = (f"{'scenario':<14} {'alg':<6} {'codec':<14} "
+           f"{'t_to_acc':>9} {'sim_time':>9} {'best':>6} "
+           f"{'upl MB':>8} {'idle':>6}")
+    print(hdr)
+    print("-" * len(hdr))
+    for scen in scenarios:
+        for alg in algorithms:
+            for codec in codecs:
+                f = Federation(
+                    model=triple, data=fed, test_data=test, algorithm=alg,
+                    compressor=codec, scenario=scen,
+                    local=LocalSpec(batch_size=32, local_epochs=1,
+                                    local_rounds=scale.local_rounds, lr=0.1),
+                    rounds=scale.rounds, target_acc=scale.target_acc,
+                    seed=scale.seed,
+                    eval_batch=min(500, scale.test_samples))
+                res = f.run(mode="event")
+                row = _row(res, scen, alg, codec, scale.target_acc)
+                rows.append(row)
+                tta = ("   n/a " if row["time_to_target"] is None
+                       else f"{row['time_to_target']:8.1f}s")
+                print(f"{scen:<14} {alg:<6} {codec:<14} {tta:>9} "
+                      f"{row['sim_time']:8.1f}s {row['best_acc']:6.3f} "
+                      f"{row['uplink_mb']:8.2f} {row['mean_idle']:6.3f}")
+
+    # the headline comparison: per (scenario, algorithm), the frontier of
+    # codecs by simulated time to target
+    for scen in scenarios:
+        for alg in algorithms:
+            sub = [r for r in rows
+                   if r["scenario"] == scen and r["algorithm"] == alg
+                   and r["time_to_target"] is not None]
+            if len(sub) > 1:
+                best = min(sub, key=lambda r: r["time_to_target"])
+                print(f"[frontier] {scen}/{alg}: fastest to "
+                      f"{scale.target_acc:.0%} is {best['codec']} "
+                      f"({best['time_to_target']:.1f}s simulated)")
+
+    if out_json:
+        if os.path.dirname(out_json):
+            os.makedirs(os.path.dirname(out_json), exist_ok=True)
+        with open(out_json, "w") as fp:
+            json.dump({"schema": "bench-scenarios/v1",
+                       "num_clients": num_clients,
+                       "rounds": scale.rounds,
+                       "target_acc": scale.target_acc,
+                       "rows": rows}, fp, indent=2)
+        print(f"[json] {out_json}")
+    return rows
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--smoke", action="store_true")
+    ap.add_argument("--scenarios", default=None)
+    ap.add_argument("--algs", default="vafl,afl")
+    ap.add_argument("--codecs", default="identity,topk0.1_int8")
+    ap.add_argument("--clients", type=int, default=7)
+    ap.add_argument("--json", default=None)
+    args = ap.parse_args()
+    run(scenarios=tuple(args.scenarios.split(",")) if args.scenarios
+        else None,
+        algorithms=tuple(args.algs.split(",")),
+        codecs=tuple(args.codecs.split(",")),
+        num_clients=args.clients, smoke=args.smoke, out_json=args.json)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,2 +1,4 @@
-from repro.checkpoint.store import (latest_step, load_pytree, restore,
-                                    save_pytree, save)
+from repro.checkpoint.store import (latest_step, load_pytree,
+                                    load_state_dict, restore,
+                                    restore_scheduler, save, save_pytree,
+                                    save_scheduler)

@@ -56,6 +56,38 @@ def load_pytree(path: str, like):
     return jax.tree_util.tree_unflatten(treedef, leaves)
 
 
+def load_state_dict(path: str) -> Dict[str, Any]:
+    """Load an npz checkpoint back into the nested dict it was flattened
+    from (keys split on "/") — for states with no ``like`` template, e.g.
+    a scheduler snapshot whose heap length may differ from a freshly
+    built scheduler's."""
+    if not path.endswith(".npz"):
+        path += ".npz"
+    data = np.load(path)
+    out: Dict[str, Any] = {}
+    for key in data.files:
+        node = out
+        parts = key.split("/")
+        for p in parts[:-1]:
+            node = node.setdefault(p, {})
+        node[parts[-1]] = data[key]
+    return out
+
+
+def save_scheduler(path: str, sched, metadata: Optional[Dict[str, Any]] = None):
+    """Persist an ``EventScheduler.snapshot()`` (heap, clocks, per-client
+    accounting, model RNG counters).  Event-driven runs checkpointed at an
+    event boundary resume bit-deterministically: counter-based draws have
+    no hidden RNG state beyond what the snapshot carries."""
+    save_pytree(path, sched.snapshot(), metadata)
+
+
+def restore_scheduler(path: str, sched):
+    """Restore a saved scheduler snapshot into ``sched`` (built with the
+    same num_clients and scenario models) and return it."""
+    return sched.restore(load_state_dict(path))
+
+
 def save(ckpt_dir: str, step: int, tree, metadata=None):
     md = {"step": step}
     md.update(metadata or {})

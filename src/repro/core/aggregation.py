@@ -37,8 +37,10 @@ def masked_weighted_average(stacked_params, mask, sample_counts):
 
 def aggregate_or_keep(global_params, stacked_params, mask, sample_counts):
     """Masked FedAvg; falls back to the current global model when the mask
-    is empty (jit-safe select)."""
-    any_sel = jnp.any(mask)
+    is empty — or when the selected set holds zero samples in total (a
+    lone zero-count client must not zero the global model), jit-safe."""
+    w = aggregation_weights(mask, sample_counts)
+    any_sel = jnp.sum(w) > 0
     agg = masked_weighted_average(stacked_params, mask, sample_counts)
     return jax.tree.map(
         lambda g, a: jnp.where(any_sel, a.astype(g.dtype), g), global_params, agg)

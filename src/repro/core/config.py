@@ -88,6 +88,14 @@ class FLRunConfig:
     shard_clients: bool = False
     eval_subsample: int = 0
     eval_cache: int = 0
+    # simulation scenario (repro.sim, docs/SCENARIOS.md): a zoo name
+    # ("paper_testbed", "mobile_fleet", "flaky_edge", "datacenter", ...)
+    # or an explicit repro.sim.ScenarioConfig.  Selects the compute fleet,
+    # the byte-aware network model (compressed payload bytes become
+    # simulated link delay) and the availability pattern for every
+    # runtime.  None — the default — is today's simulation exactly:
+    # paper-testbed speeds, free network, always-on clients.
+    scenario: Optional[object] = None
 
     def __post_init__(self):
         get_algorithm(self.algorithm)  # raises ValueError listing names
@@ -95,6 +103,11 @@ class FLRunConfig:
             raise ValueError(
                 f"unknown engine: {self.engine!r}; known engines: "
                 f"{', '.join(ENGINES)}")
+        if self.scenario is not None:
+            # lazy import: repro.sim is only pulled in when a scenario is
+            # actually configured
+            from repro.sim import resolve_scenario
+            self.scenario = resolve_scenario(self.scenario)
         if self.eval_subsample < 0 or self.eval_cache < 0:
             raise ValueError("eval_subsample and eval_cache must be >= 0 "
                              f"(got {self.eval_subsample}, {self.eval_cache})")

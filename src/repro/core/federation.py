@@ -16,9 +16,13 @@ that plumbing:
 init_fn, model_cfg)`` triple for any classifier pytree, or omitted
 entirely when explicit ``init_params_fn``/``loss_fn``/``evaluate_fn``
 are passed (arbitrary workloads — see examples/fl_llm_finetune.py).
-``algorithm`` is any registered name (``repro.algorithms``); extra
-keyword arguments flow into ``FLRunConfig`` unchanged, so every knob
-(engine, buffer_size, participation, DP, ...) stays reachable.
+``algorithm`` is any registered name (``repro.algorithms``);
+``scenario`` is a ``repro.sim`` zoo name ("paper_testbed",
+"mobile_fleet", "flaky_edge", "datacenter", ...) or ScenarioConfig
+selecting the simulated compute fleet, byte-aware network and client
+availability (docs/SCENARIOS.md); extra keyword arguments flow into
+``FLRunConfig`` unchanged, so every knob (engine, buffer_size,
+participation, DP, ...) stays reachable.
 """
 from __future__ import annotations
 
@@ -60,6 +64,7 @@ class Federation:
     def __init__(self, *, data, model="mlp", test_data=None,
                  algorithm: str = "vafl", compressor: str = "identity",
                  broadcast_compressor: Optional[str] = None,
+                 scenario=None,
                  local: Optional[LocalSpec] = None,
                  init_params_fn: Optional[Callable] = None,
                  loss_fn: Optional[Callable] = None,
@@ -103,7 +108,8 @@ class Federation:
         self.config = FLRunConfig(
             algorithm=algorithm, num_clients=num_clients,
             local=local or LocalSpec(), compressor=compressor,
-            broadcast_compressor=broadcast_compressor, **config)
+            broadcast_compressor=broadcast_compressor, scenario=scenario,
+            **config)
 
     def _client_eval_for(self, cfg):
         """The per-client evaluator for one run: the user's explicit

@@ -94,6 +94,18 @@ class RunResult:
     # the wall-clock runtimes (event-driven + sync barrier), None for the
     # round-based runtime where no clock is simulated
     idle_fraction: Optional[float] = None
+    # scenario-aware simulation surface (repro.sim, docs/SCENARIOS.md).
+    # Set by every runtime that simulates a clock; the round-based runtime
+    # fills them only under an active scenario= (otherwise its "time" is
+    # the round index, as before).  Bytes are the actual on-the-wire
+    # payloads attributed per client (uplink includes scalar V reports in
+    # event mode); failed_rounds counts mid-round failures whose work an
+    # availability model discarded.
+    sim_time: Optional[float] = None                   # final simulated clock
+    client_idle: Optional[List[float]] = None          # per-client idle frac
+    client_uplink_bytes: Optional[List[int]] = None
+    client_downlink_bytes: Optional[List[int]] = None
+    client_failed_rounds: Optional[List[int]] = None
 
     @property
     def best_acc(self) -> float:

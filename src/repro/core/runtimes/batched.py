@@ -56,6 +56,7 @@ from repro.core.aggregation import buffered_coefs, buffered_mix
 from repro.core.client import make_local_update, make_local_update_keyed
 from repro.core.metrics import CommStats, RoundRecord, RunResult
 from repro.core.runtimes.common import (_BROADCAST, _UPLOAD,
+                                        _attach_sim_result,
                                         _compressed_broadcast,
                                         _compressed_upload, _enc_seed,
                                         _engine_jits, _event_helpers,
@@ -106,7 +107,7 @@ class _AccCache:
 
 def _run_event_batched(run_cfg, policy, aggregator, init_params_fn, loss_fn,
                        fed_data, evaluate_fn, client_eval_fn, speed,
-                       verbose) -> RunResult:
+                       net=None, avail=None, verbose=False) -> RunResult:
     N = run_cfg.num_clients
     rng = jax.random.key(run_cfg.seed)
     rng, krng = jax.random.split(rng)
@@ -156,7 +157,11 @@ def _run_event_batched(run_cfg, policy, aggregator, init_params_fn, loss_fn,
     W = max(1, min(W, N))
     K = max(1, run_cfg.buffer_size)
     total_events = run_cfg.rounds * N
-    sched = EventScheduler(N, speed)
+    sched = EventScheduler(N, speed, network=net, availability=avail)
+    # a reactive scenario consumes per-event payload bytes (or
+    # availability draws) at reschedule time, so the pipeline's
+    # reschedule+pop-ahead must wait for the window's upload decisions
+    reactive = sched.reactive
     records: list = []
     # the FedBuff buffer: (stacked_tree, row) references — rows of the
     # window's vmapped output for identity uploads (client ids on the
@@ -250,13 +255,17 @@ def _run_event_batched(run_cfg, policy, aggregator, init_params_fn, loss_fn,
         # everything gating CANNOT change happens before we block on the
         # gating inputs: restart each client from its own completion time
         # (window execution must not barrier the simulated clock), pop
-        # the NEXT window, and pre-dispatch its data gather
-        for j in range(w):
-            sched.schedule(int(idx_np[j]), start=float(times[j]))
-        remaining = total_events - ev - w
-        nxt = sched.pop_window(min(W, remaining)) if remaining else None
-        if nxt is not None and len(nxt[1]) < N:
-            pre_d = ops.gather(data, jnp.asarray(nxt[1]))
+        # the NEXT window, and pre-dispatch its data gather.  A reactive
+        # scenario defers all of this to after the decision loop — the
+        # network model needs each event's actual payload bytes.
+        nxt = None
+        if not reactive:
+            for j in range(w):
+                sched.schedule(int(idx_np[j]), start=float(times[j]))
+            remaining = total_events - ev - w
+            nxt = sched.pop_window(min(W, remaining)) if remaining else None
+            if nxt is not None and len(nxt[1]) < N:
+                pre_d = ops.gather(data, jnp.asarray(nxt[1]))
 
         V_w = (None if V_dev is None
                else np.asarray(V_dev, np.float64)[row_of if full else
@@ -278,9 +287,12 @@ def _run_event_batched(run_cfg, policy, aggregator, init_params_fn, loss_fn,
         ver_pos: dict = {}                  # server_version -> position
         enc_downloads: list = []            # per-client lossy downlink trees
         pending = None                      # final flush folded into commit
+        ev_up = np.zeros(w, np.int64)       # per-event on-the-wire bytes
+        ev_down = np.zeros(w, np.int64)
         for j in range(w):
             i = int(idx_np[j])
             r = int(row_of[j])
+            u0, d0 = comm.uplink_bytes, comm.downlink_bytes
             if policy.reports:
                 comm.record_report(1)
             upload = policy.decide(
@@ -329,6 +341,25 @@ def _run_event_batched(run_cfg, policy, aggregator, init_params_fn, loss_fn,
                     bcodec, comm, global_params, 1,
                     _enc_seed(run_cfg, ev + j, i, _BROADCAST)))
             model_version[i] = server_version
+            ev_up[j] = comm.uplink_bytes - u0
+            ev_down[j] = comm.downlink_bytes - d0
+
+        if reactive:
+            # byte-aware reschedule: each client restarts from its own
+            # completion time plus the link delay its actual payload cost
+            for j in range(w):
+                sched.schedule(int(idx_np[j]), start=float(times[j]),
+                               upload_bytes=int(ev_up[j]),
+                               download_bytes=int(ev_down[j]))
+            remaining = total_events - ev - w
+            nxt = sched.pop_window(min(W, remaining)) if remaining else None
+            if nxt is not None and len(nxt[1]) < N:
+                pre_d = ops.gather(data, jnp.asarray(nxt[1]))
+        else:
+            # already rescheduled (pipeline); ledger the bytes only
+            for j in range(w):
+                sched.account_bytes(int(idx_np[j]), int(ev_up[j]),
+                                    int(ev_down[j]))
 
         if any(ref is newp for ref, _ in buffer):
             # detach leftover buffer entries from the window output before
@@ -427,5 +458,4 @@ def _run_event_batched(run_cfg, policy, aggregator, init_params_fn, loss_fn,
         r.global_acc = float(r.global_acc)
     res = RunResult(run_cfg.algorithm, records, comm,
                     run_cfg.target_acc).finalize_target()
-    res.idle_fraction = float(sched.idle_fraction().mean())
-    return res
+    return _attach_sim_result(res, sched)

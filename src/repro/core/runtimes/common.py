@@ -42,6 +42,24 @@ def _make_codecs(run_cfg):
 _UPLOAD, _BROADCAST = 1, 2
 
 
+# ------------------------------------------------- scenario plumbing ---
+
+def _scenario_models(run_cfg, num_clients):
+    """Build the run's ``repro.sim`` scenario models: ``(compute,
+    network, availability)``, or ``(None, None, None)`` for the default
+    scenario — ``scenario=None`` *or* an all-defaults config (the
+    ``"default"`` zoo entry) — the bit-exact legacy path."""
+    if run_cfg.scenario is None or run_cfg.scenario.is_default():
+        return None, None, None
+    return run_cfg.scenario.build(num_clients, run_cfg.seed)
+
+
+def _active(model):
+    """A scenario model that is present and not a declared no-op
+    (ideal network / always-on availability carry ``active = False``)."""
+    return model is not None and getattr(model, "active", True)
+
+
 def _participation_mask(part_rng, participation: float, n: int) -> np.ndarray:
     """The round's participating set S — ONE sampler shared by the
     round-based runtime and the sync barrier so the FedAvg baseline stays
@@ -96,33 +114,64 @@ def _compressed_broadcast(bcodec, comm, params, n, seed):
     return bcodec.decode(bp)
 
 
-def _round_uploads(run_cfg, codec, ef, comm, base, stacked, mask, t):
+def _round_uploads(run_cfg, codec, ef, comm, base, stacked, mask, t,
+                   up_acc=None):
     """One synchronous round's upload leg, shared by the round-based and
     sync-barrier runtimes: account the selected set's uploads; with a
     codec, each selected client ships codec(delta vs ``base``, its
     download) with error feedback and the reconstructions are scattered
-    back into the stack (the server aggregates what it received)."""
+    back into the stack (the server aggregates what it received).
+    ``up_acc`` (optional (N,) int array) receives each client's actual
+    on-the-wire upload bytes — the scenario clock's input."""
     sel = [int(i) for i in np.flatnonzero(mask)]
     if codec.is_identity:
         comm.record_upload(len(sel))
+        if up_acc is not None:
+            for i in sel:
+                up_acc[i] += comm.model_bytes
         return stacked
-    recon = [_compressed_upload(codec, ef, comm, base,
-                                stacked_index(stacked, i), i,
-                                _enc_seed(run_cfg, t, i, _UPLOAD))
-             for i in sel]
+    recon = []
+    for i in sel:
+        b0 = comm.uplink_bytes
+        recon.append(_compressed_upload(codec, ef, comm, base,
+                                        stacked_index(stacked, i), i,
+                                        _enc_seed(run_cfg, t, i, _UPLOAD)))
+        if up_acc is not None:
+            up_acc[i] += comm.uplink_bytes - b0
     if sel:   # one scatter per leaf, not one stack copy per client
         stacked = tree_scatter(stacked, jnp.asarray(sel), tree_stack(recon))
     return stacked
 
 
-def _round_broadcast(run_cfg, bcodec, comm, global_params, n, t):
+def _round_broadcast(run_cfg, bcodec, comm, global_params, n, t,
+                     down_acc=None):
     """One synchronous round's broadcast leg: returns the model the
-    clients actually receive (lossy under a downlink codec)."""
+    clients actually receive (lossy under a downlink codec).  ``down_acc``
+    (optional (n,) int array) receives each client's downlink bytes."""
     if bcodec is None:
         comm.record_broadcast(n)
+        if down_acc is not None:
+            down_acc += comm.model_bytes
         return global_params
-    return _compressed_broadcast(bcodec, comm, global_params, n,
-                                 _enc_seed(run_cfg, t, 0, _BROADCAST))
+    d0 = comm.downlink_bytes
+    out = _compressed_broadcast(bcodec, comm, global_params, n,
+                                _enc_seed(run_cfg, t, 0, _BROADCAST))
+    if down_acc is not None:
+        down_acc += (comm.downlink_bytes - d0) // n
+    return out
+
+
+def _attach_sim_result(res, sched):
+    """Copy the scheduler's per-client simulation ledger onto a
+    ``RunResult`` (event-driven runtimes, both engines)."""
+    idle = sched.idle_fraction()
+    res.sim_time = float(sched.now)
+    res.idle_fraction = float(idle.mean())
+    res.client_idle = [float(x) for x in idle]
+    res.client_uplink_bytes = [int(x) for x in sched.client_up_bytes]
+    res.client_downlink_bytes = [int(x) for x in sched.client_down_bytes]
+    res.client_failed_rounds = [int(x) for x in sched.client_failed_rounds]
+    return res
 
 
 # ----------------------------------------------- jitted event-path helpers ---

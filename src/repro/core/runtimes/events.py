@@ -22,10 +22,12 @@ import numpy as np
 from repro.common.pytree import tree_bytes
 from repro.core.metrics import CommStats, RoundRecord, RunResult
 from repro.core.runtimes.common import (_BROADCAST, _UPLOAD,
+                                        _attach_sim_result,
                                         _compressed_broadcast,
                                         _compressed_upload, _enc_seed,
                                         _event_helpers, _make_codecs,
-                                        _tree_delta, _value_fn)
+                                        _scenario_models, _tree_delta,
+                                        _value_fn)
 from repro.core.client import make_local_update
 from repro.core.scheduler import EventScheduler, SpeedModel
 
@@ -46,7 +48,12 @@ def run_event_driven(run_cfg, *, init_params_fn, loss_fn, fed_data,
     policy.begin_run(N)
     aggregator.begin_run(N)
     client_eval_fn = client_eval_fn or evaluate_fn
-    speed = speed or SpeedModel.paper_testbed(N, run_cfg.seed)
+    # scenario models (repro.sim): the compute fleet becomes the speed
+    # model (an explicitly passed ``speed`` still wins), the network and
+    # availability models ride into the scheduler.  The default scenario
+    # builds (None, None, None) — bit-exact with the pre-scenario runtime.
+    compute, net, avail = _scenario_models(run_cfg, N)
+    speed = speed or compute or SpeedModel.paper_testbed(N, run_cfg.seed)
     # (engine strings are validated at FLRunConfig construction)
     if alg.event_mode == "sync-barrier":
         # round-barrier baselines are their own runtime (already one
@@ -54,12 +61,12 @@ def run_event_driven(run_cfg, *, init_params_fn, loss_fn, fed_data,
         from repro.core.runtimes.sync import _run_sync_barrier
         return _run_sync_barrier(run_cfg, policy, aggregator, init_params_fn,
                                  loss_fn, fed_data, evaluate_fn,
-                                 client_eval_fn, speed, verbose)
+                                 client_eval_fn, speed, net, avail, verbose)
     if run_cfg.engine == "batched":
         from repro.core.runtimes.batched import _run_event_batched
         return _run_event_batched(run_cfg, policy, aggregator, init_params_fn,
                                   loss_fn, fed_data, evaluate_fn,
-                                  client_eval_fn, speed, verbose)
+                                  client_eval_fn, speed, net, avail, verbose)
     rng = jax.random.key(run_cfg.seed)
     rng, krng = jax.random.split(rng)
     global_params = init_params_fn(krng)
@@ -83,12 +90,13 @@ def run_event_driven(run_cfg, *, init_params_fn, loss_fn, fed_data,
 
     records: list = []
     total_events = run_cfg.rounds * N
-    sched = EventScheduler(N, speed)
+    sched = EventScheduler(N, speed, network=net, availability=avail)
     batch_eval, values_fn, norms_fn = _event_helpers(
         run_cfg, client_eval_fn, sq_diff)
 
     for ev in range(total_events):
         t_now, i = sched.pop()
+        u0, d0 = comm.uplink_bytes, comm.downlink_bytes
         rng, urng = jax.random.split(rng)
         one = jax.tree.map(lambda x: x[None], client_params[i])
         d_i = {k: v[i:i + 1] for k, v in data.items()}
@@ -141,7 +149,11 @@ def run_event_driven(run_cfg, *, init_params_fn, loss_fn, fed_data,
                 _enc_seed(run_cfg, ev, i, _BROADCAST))
         model_version[i] = server_version
         prev_grads[i] = eff_grad
-        sched.schedule(i)
+        # the round's actual on-the-wire bytes (report + payload up, the
+        # received broadcast down) feed the scenario's network model: an
+        # active one turns them into link delay before the next round
+        sched.schedule(i, upload_bytes=comm.uplink_bytes - u0,
+                       download_bytes=comm.downlink_bytes - d0)
 
         if (ev + 1) % run_cfg.events_per_eval == 0:
             acc = float(evaluate_fn(global_params))
@@ -155,5 +167,4 @@ def run_event_driven(run_cfg, *, init_params_fn, loss_fn, fed_data,
 
     res = RunResult(run_cfg.algorithm, records, comm,
                     run_cfg.target_acc).finalize_target()
-    res.idle_fraction = float(sched.idle_fraction().mean())
-    return res
+    return _attach_sim_result(res, sched)

@@ -16,9 +16,11 @@ from repro.algorithms.base import RoundContext
 from repro.common.pytree import tree_bytes
 from repro.core.client import make_local_update
 from repro.core.metrics import CommStats, RoundRecord, RunResult
-from repro.core.runtimes.common import (_make_codecs, _participation_mask,
+from repro.core.runtimes.common import (_active, _make_codecs,
+                                        _participation_mask,
                                         _round_broadcast, _round_helpers,
-                                        _round_uploads, _tree_delta)
+                                        _round_uploads, _scenario_models,
+                                        _tree_delta)
 
 
 def run_round_based(run_cfg, *, init_params_fn, loss_fn, fed_data,
@@ -55,6 +57,20 @@ def run_round_based(run_cfg, *, init_params_fn, loss_fn, fed_data,
                                                           client_eval_fn)
     part_rng = np.random.RandomState(run_cfg.seed + 101)
 
+    # scenario (repro.sim): the round-based runtime has no clock by
+    # default (record time = the round index, as always) — under an
+    # active scenario= it simulates one like the sync barrier: every
+    # round costs the slowest participant's service + byte-aware link
+    # delay, and availability failures discard uploads mid-round
+    compute, net, avail = _scenario_models(run_cfg, N)
+    net = net if _active(net) else None
+    avail = avail if _active(avail) else None
+    now = 0.0
+    busy = np.zeros(N)
+    up_bytes = np.zeros(N, np.int64)
+    down_bytes = np.zeros(N, np.int64)
+    failed = np.zeros(N, np.int64)
+
     for t in range(1, run_cfg.rounds + 1):
         rng, urng = jax.random.split(rng)
         stacked, eff_grads, losses = local_update(stacked, data, urng)
@@ -84,8 +100,16 @@ def run_round_based(run_cfg, *, init_params_fn, loss_fn, fed_data,
             norms_np = np.asarray(ctx.norms(), np.float64)
             norms_np[~part] = -np.inf
             mask = norms_np == norms_np.max()
+        service = (np.array([compute.sample(c, now) for c in range(N)])
+                   if compute is not None else None)
+        if avail is not None:
+            for c in np.flatnonzero(part):
+                if avail.round_fails(int(c)):
+                    failed[c] += 1
+                    mask = mask & (np.arange(N) != c)
+        u0, d0 = up_bytes.copy(), down_bytes.copy()
         stacked = _round_uploads(run_cfg, codec, ef, comm, client_base,
-                                 stacked, mask, t)
+                                 stacked, mask, t, up_acc=up_bytes)
 
         prev_prev_global = prev_global
         prev_global = global_params
@@ -93,7 +117,15 @@ def run_round_based(run_cfg, *, init_params_fn, loss_fn, fed_data,
                                                    jnp.asarray(mask), counts)
         # broadcast the new global model to every client
         client_base = _round_broadcast(run_cfg, bcodec, comm, global_params,
-                                       N, t)
+                                       N, t, down_acc=down_bytes)
+        if service is not None:
+            delay = np.zeros(N)
+            if net is not None:
+                delay = np.array([net.delay(c, int(up_bytes[c] - u0[c]),
+                                            int(down_bytes[c] - d0[c]), now)
+                                  for c in range(N)])
+            busy[part] += service[part]
+            now += float((service + delay)[part].max())
         stacked = jax.tree.map(lambda x: jnp.broadcast_to(x, (N,) + x.shape),
                                client_base)
         prev_grads = eff_grads
@@ -101,7 +133,8 @@ def run_round_based(run_cfg, *, init_params_fn, loss_fn, fed_data,
         if t % run_cfg.eval_every == 0:
             acc = float(evaluate_fn(global_params))
             records.append(RoundRecord(
-                round=t, time=float(t), global_acc=acc,
+                round=t, time=now if compute is not None else float(t),
+                global_acc=acc,
                 uploads_so_far=comm.model_uploads,
                 selected=[int(i) for i in np.where(mask)[0]],
                 values=vals_list,
@@ -112,5 +145,14 @@ def run_round_based(run_cfg, *, init_params_fn, loss_fn, fed_data,
                       f"uploads={comm.model_uploads} "
                       f"selected={int(mask.sum())}/{N}")
 
-    return RunResult(run_cfg.algorithm, records, comm,
-                     run_cfg.target_acc).finalize_target()
+    res = RunResult(run_cfg.algorithm, records, comm,
+                    run_cfg.target_acc).finalize_target()
+    res.client_uplink_bytes = [int(x) for x in up_bytes]
+    res.client_downlink_bytes = [int(x) for x in down_bytes]
+    res.client_failed_rounds = [int(x) for x in failed]
+    if compute is not None:   # a simulated clock exists only under scenario=
+        idle = np.clip(1.0 - busy / max(now, 1e-9), 0.0, 1.0)
+        res.sim_time = float(now)
+        res.idle_fraction = float(idle.mean())
+        res.client_idle = [float(x) for x in idle]
+    return res

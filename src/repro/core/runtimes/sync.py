@@ -21,14 +21,15 @@ from repro.algorithms.base import RoundContext
 from repro.common.pytree import tree_bytes
 from repro.core.client import make_local_update
 from repro.core.metrics import CommStats, RoundRecord, RunResult
-from repro.core.runtimes.common import (_make_codecs, _participation_mask,
+from repro.core.runtimes.common import (_active, _make_codecs,
+                                        _participation_mask,
                                         _round_broadcast, _round_helpers,
                                         _round_uploads, _tree_delta)
 
 
 def _run_sync_barrier(run_cfg, policy, aggregator, init_params_fn, loss_fn,
                       fed_data, evaluate_fn, client_eval_fn, speed,
-                      verbose) -> RunResult:
+                      net=None, avail=None, verbose=False) -> RunResult:
     N = run_cfg.num_clients
     rng = jax.random.key(run_cfg.seed)
     rng, krng = jax.random.split(rng)
@@ -53,6 +54,11 @@ def _run_sync_barrier(run_cfg, policy, aggregator, init_params_fn, loss_fn,
     records = []
     now = 0.0
     busy = np.zeros(N)
+    up_bytes = np.zeros(N, np.int64)      # per-client on-the-wire ledger
+    down_bytes = np.zeros(N, np.int64)
+    failed = np.zeros(N, np.int64)
+    net = net if _active(net) else None
+    avail = avail if _active(avail) else None
     part_rng = np.random.RandomState(run_cfg.seed + 101)
     for t in range(1, run_cfg.rounds + 1):
         rng, urng = jax.random.split(rng)
@@ -61,9 +67,9 @@ def _run_sync_barrier(run_cfg, policy, aggregator, init_params_fn, loss_fn,
         stacked = jax.tree.map(lambda x: jnp.broadcast_to(x, (N,) + x.shape),
                                client_base)
         stacked, eff_grads, _ = local_update(stacked, data, urng)
-        round_times = np.array([speed.sample(c) for c in range(N)])
-        now += round_times[part].max()    # barrier: slowest *participant*
+        round_times = np.array([speed.sample(c, now) for c in range(N)])
         busy[part] += round_times[part]   # non-participants idle all round
+        u0, d0 = up_bytes.copy(), down_bytes.copy()
         ctx = RoundContext(
             part=part, comm=comm,
             values_fn=lambda: values_fn(
@@ -78,14 +84,29 @@ def _run_sync_barrier(run_cfg, policy, aggregator, init_params_fn, loss_fn,
             norms_np = np.asarray(ctx.norms(), np.float64)
             norms_np[~part] = -np.inf
             mask = norms_np == norms_np.max()
+        if avail is not None:
+            # mid-round failure: the participant burned the round's
+            # compute but its update never reaches the server
+            for c in np.flatnonzero(part):
+                if avail.round_fails(int(c)):
+                    failed[c] += 1
+                    mask = mask & (np.arange(N) != c)
         stacked = _round_uploads(run_cfg, codec, ef, comm, client_base,
-                                 stacked, mask, t)
+                                 stacked, mask, t, up_acc=up_bytes)
         prev_prev_global = prev_global
         prev_global = global_params
         global_params = aggregator.round_aggregate(global_params, stacked,
                                                    jnp.asarray(mask), counts)
         client_base = _round_broadcast(run_cfg, bcodec, comm, global_params,
-                                       N, t)
+                                       N, t, down_acc=down_bytes)
+        # barrier: slowest *participant*, including its own transfer time
+        # under a byte-aware network model
+        delay = np.zeros(N)
+        if net is not None:
+            delay = np.array([net.delay(c, int(up_bytes[c] - u0[c]),
+                                        int(down_bytes[c] - d0[c]), now)
+                              for c in range(N)])
+        now += float((round_times + delay)[part].max())
         if policy.needs_values:   # fedavg never reads it: don't retain
             prev_grads = eff_grads
         if t % run_cfg.eval_every == 0:
@@ -97,5 +118,11 @@ def _run_sync_barrier(run_cfg, policy, aggregator, init_params_fn, loss_fn,
                       f"acc={acc:.4f}")
     res = RunResult(run_cfg.algorithm, records, comm,
                     run_cfg.target_acc).finalize_target()
+    idle = np.clip(1.0 - busy / max(now, 1e-9), 0.0, 1.0)
     res.idle_fraction = float(1.0 - (busy / max(now, 1e-9)).mean())
+    res.sim_time = float(now)
+    res.client_idle = [float(x) for x in idle]
+    res.client_uplink_bytes = [int(x) for x in up_bytes]
+    res.client_downlink_bytes = [int(x) for x in down_bytes]
+    res.client_failed_rounds = [int(x) for x in failed]
     return res

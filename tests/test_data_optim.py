@@ -72,6 +72,94 @@ class TestPartitioning:
         assert (fed.mask.sum(1) == fed.counts).all()
 
 
+class TestPartitionEdgeCases:
+    """Dirichlet extremes and empty clients (the scenario matrix makes
+    pathological fleets easy to hit, so the data layer must not NaN)."""
+
+    def test_dirichlet_extreme_alpha_skewed_but_consistent(self):
+        xtr, ytr, _, _ = synthetic_mnist(600, 10, seed=0)
+        fed = dirichlet_partition(xtr, ytr, 6, alpha=0.01, seed=1)
+        assert fed.counts.sum() == 600
+        assert (fed.mask.sum(1) == fed.counts).all()
+        # alpha=0.01 concentrates: the biggest client dwarfs the smallest
+        assert fed.counts.max() > 5 * max(int(fed.counts.min()), 1)
+
+    def test_dirichlet_huge_alpha_near_uniform(self):
+        xtr, ytr, _, _ = synthetic_mnist(600, 10, seed=0)
+        fed = dirichlet_partition(xtr, ytr, 6, alpha=100.0, seed=1)
+        assert fed.counts.sum() == 600
+        assert fed.counts.max() <= 2 * fed.counts.min()
+
+    def test_zero_sample_client_trains_finite(self):
+        """A client with zero samples (possible under Dirichlet
+        alpha=0.01) must not produce a NaN mask divide: its loss is
+        finite, its parameters don't move, and the global eval stays
+        finite."""
+        import jax
+        import jax.numpy as jnp
+        from repro.core.client import (LocalSpec, make_local_update,
+                                       make_weighted_classifier_loss)
+        from repro.data.partition import _pack
+        from repro.models.cnn import MLPConfig, mlp_forward, mlp_init
+        xtr, ytr, _, _ = synthetic_mnist(200, 10, seed=0)
+        fed = _pack([np.arange(60), np.array([], np.int64),
+                     np.arange(60, 120)], xtr, ytr)
+        assert list(fed.counts) == [60, 0, 60]
+        assert fed.mask[1].sum() == 0
+        mcfg = MLPConfig(hidden=(16,))
+        loss_fn = make_weighted_classifier_loss(mlp_forward, mcfg)
+        upd = make_local_update(loss_fn, LocalSpec(batch_size=32,
+                                                   local_rounds=1, lr=0.1))
+        params = mlp_init(mcfg, jax.random.key(0))
+        stacked = jax.tree.map(
+            lambda x: jnp.broadcast_to(x, (3,) + x.shape), params)
+        data = {"images": jnp.asarray(fed.images),
+                "labels": jnp.asarray(fed.labels),
+                "mask": jnp.asarray(fed.mask)}
+        newp, eff, loss = upd(stacked, data, jax.random.key(1))
+        assert np.isfinite(np.asarray(loss)).all()
+        for a, b in zip(jax.tree.leaves(newp), jax.tree.leaves(stacked)):
+            assert np.isfinite(np.asarray(a)).all()
+            np.testing.assert_array_equal(np.asarray(a[1]),
+                                          np.asarray(b[1]))  # no movement
+        for g in jax.tree.leaves(eff):
+            np.testing.assert_array_equal(np.asarray(g[1]), 0.0)
+
+    def test_lone_zero_count_upload_keeps_global(self):
+        """aggregate_or_keep: a selected set whose total sample count is
+        zero must keep the current global model, not zero it."""
+        import jax.numpy as jnp
+        from repro.core.aggregation import aggregate_or_keep
+        g = {"w": jnp.ones((3, 2))}
+        stacked = {"w": jnp.full((4, 3, 2), 7.0)}
+        counts = jnp.array([10.0, 0.0, 5.0, 8.0])
+        only_empty = jnp.array([False, True, False, False])
+        out = aggregate_or_keep(g, stacked, only_empty, counts)
+        np.testing.assert_array_equal(np.asarray(out["w"]),
+                                      np.asarray(g["w"]))
+        some = aggregate_or_keep(g, stacked, jnp.array([True, True, False,
+                                                        False]), counts)
+        np.testing.assert_allclose(np.asarray(some["w"]), 7.0)
+
+    @settings(max_examples=12, deadline=None)
+    @given(st.integers(min_value=2, max_value=8),
+           st.sampled_from([0.01, 0.1, 1.0, 100.0]),
+           st.integers(min_value=0, max_value=5))
+    def test_counts_mask_consistency_property(self, n, alpha, seed):
+        """For any Dirichlet partition: mask rows sum to counts, padding
+        is fully masked out, and real labels stay in range."""
+        xtr, ytr, _, _ = synthetic_mnist(400, 10, seed=0)
+        fed = dirichlet_partition(xtr, ytr, n, alpha=alpha, seed=seed)
+        assert fed.counts.sum() == 400
+        assert (fed.mask.sum(1) == fed.counts).all()
+        for i in range(n):
+            c = int(fed.counts[i])
+            assert (fed.mask[i, :c] == 1.0).all()
+            assert (fed.mask[i, c:] == 0.0).all()
+            labels = fed.labels[i][fed.mask[i] > 0]
+            assert ((labels >= 0) & (labels < 10)).all()
+
+
 class TestOptim:
     def _quad(self):
         p = {"w": jnp.array([5.0, -3.0])}

@@ -160,7 +160,7 @@ class TestEntryPoints:
         """table3/fig4/fig5 at smoke scale — the Federation-backed
         benchmark harness end to end (~10 s)."""
         p = _run(["-m", "benchmarks.run", "--smoke",
-                  "--skip", "engine,compress"])
+                  "--skip", "engine,compress,scenarios"])
         assert p.returncode == 0, p.stderr[-2000:]
         assert "[table3]" in p.stdout
         assert "communication_times" in p.stdout or "ccr" in p.stdout
@@ -172,7 +172,7 @@ class TestEntryPoints:
         import json
         p = subprocess.run(
             [sys.executable, str(ROOT / "benchmarks" / "run.py"), "--smoke",
-             "--skip", "table3,fig4,fig5,compress"],
+             "--skip", "table3,fig4,fig5,compress,scenarios"],
             cwd=tmp_path, timeout=420, capture_output=True, text=True)
         assert p.returncode == 0, p.stderr[-2000:]
         out = tmp_path / "BENCH_engine.json"
@@ -186,6 +186,38 @@ class TestEntryPoints:
                         "vafl_subsampled_events_per_sec"):
                 assert key in row, f"missing {key}"
                 assert np.isfinite(row[key])
+
+    def test_bench_scenarios_json_emitted(self, tmp_path):
+        """benchmarks/run.py --smoke must leave BENCH_scenarios.json
+        behind (schema bench-scenarios/v1) and it must show the byte-aware
+        clock coupling: on the same scenario, vafl + topk_int8 reaches the
+        target accuracy in LESS simulated time than vafl + identity (and
+        finishes its whole event budget earlier) — the paper's
+        communication-bottleneck claim as a time-to-accuracy win."""
+        import json
+        p = subprocess.run(
+            [sys.executable, str(ROOT / "benchmarks" / "run.py"), "--smoke",
+             "--skip", "table3,fig4,fig5,compress,engine"],
+            cwd=tmp_path, timeout=420, capture_output=True, text=True)
+        assert p.returncode == 0, p.stderr[-2000:]
+        out = tmp_path / "BENCH_scenarios.json"
+        assert out.exists(), p.stdout[-2000:]
+        doc = json.loads(out.read_text())
+        assert doc["schema"] == "bench-scenarios/v1"
+        assert doc["rows"], "no scenario rows emitted"
+        for row in doc["rows"]:
+            for key in ("scenario", "algorithm", "codec", "sim_time",
+                        "time_to_target", "uplink_mb", "byte_ccr"):
+                assert key in row, f"missing {key}"
+            assert np.isfinite(row["sim_time"])
+        rows = {(r["algorithm"], r["codec"]): r for r in doc["rows"]
+                if r["scenario"] == "mobile_fleet"}
+        ident = rows[("vafl", "identity")]
+        topk = rows[("vafl", "topk0.1_int8")]
+        assert topk["sim_time"] < ident["sim_time"]
+        assert ident["time_to_target"] is not None
+        assert topk["time_to_target"] is not None
+        assert topk["time_to_target"] < ident["time_to_target"]
 
     @pytest.mark.slow
     def test_benchmarks_smoke_all_sections(self):

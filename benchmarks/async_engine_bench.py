@@ -148,6 +148,9 @@ def run(Ns=None, *, smoke=False, buffer_size=16, out_json=None):
         print(f"{N:5d} {'vafl-eval':>10s} {N:7d} {vafl_eps:9.1f} "
               f"-> {vafl_sub_eps:.1f} ev/s with eval_subsample={sub} "
               f"(byte CCR {vc.byte_ccr:.3f})")
+        # per-run numbers come from the shared RunResult.to_summary()
+        # core; this row only layers the throughput/sweep fields on top
+        va1s, vaks = va1.to_summary(), vak.to_summary()
         rows.append({
             "N": N, "buffer_size": buffer_size,
             "sequential_events_per_sec": round(seq_eps, 1),
@@ -156,11 +159,11 @@ def run(Ns=None, *, smoke=False, buffer_size=16, out_json=None):
             "vafl_events_per_sec": round(vafl_eps, 1),
             "vafl_subsampled_events_per_sec": round(vafl_sub_eps, 1),
             "eval_subsample": sub,
-            "byte_ccr": round(float(vc.byte_ccr), 4),
-            "vafl_k1_best_acc": round(va1.best_acc, 4),
-            "vafl_k1_uploads": va1.comm.model_uploads,
-            "vafl_buffered_best_acc": round(vak.best_acc, 4),
-            "vafl_buffered_uploads": vak.comm.model_uploads,
+            "byte_ccr": vc.to_summary()["byte_ccr"],
+            "vafl_k1_best_acc": va1s["best_acc"],
+            "vafl_k1_uploads": va1s["uploads"],
+            "vafl_buffered_best_acc": vaks["best_acc"],
+            "vafl_buffered_uploads": vaks["uploads"],
             "window1_buffer1_upload_bitmatch": bitmatch,
         })
     _write_json(rows, out_json, "scale")
@@ -189,12 +192,13 @@ def frontier(N=64, *, buffers=(1, 4, 8, 16, 32), mix_rates=(0.25, 0.5, 0.75),
             res, dt = _run(problem, "afl", "batched", N, rounds,
                            buffer_size=K, mix_rate=rho, events_per_eval=N)
             eps = rounds * N / dt
-            print(f"{K:4d} {rho:6.2f} {eps:9.1f} {res.best_acc:9.4f} "
-                  f"{res.comm.model_uploads:8d}")
+            s = res.to_summary()
+            print(f"{K:4d} {rho:6.2f} {eps:9.1f} {s['best_acc']:9.4f} "
+                  f"{s['uploads']:8d}")
             rows.append({"N": N, "buffer_size": K, "mix_rate": rho,
                          "events_per_sec": round(eps, 1),
-                         "best_acc": round(res.best_acc, 4),
-                         "uploads": res.comm.model_uploads})
+                         "best_acc": s["best_acc"],
+                         "uploads": s["uploads"]})
     _write_json(rows, out_json, "frontier")
     return rows
 

@@ -88,19 +88,21 @@ def run_experiment(exp: str, alg: str, *, model: str = "mlp",
 
 
 def table3_row(exp: str, results: dict) -> list:
-    """results: {alg: RunResult} -> rows (exp, alg, comm_times, ccr)."""
-    base = results["afl"]
-    c0 = base.uploads_to_target or base.comm.model_uploads
+    """results: {alg: RunResult} -> rows (exp, alg, comm_times, ccr).
+    Per-run numbers come from the shared ``RunResult.to_summary()``
+    core; the cross-run CCR (Eq. 4 against the AFL baseline) is the one
+    field no single run can know about itself."""
+    base = results["afl"].to_summary()
+    c0 = base["uploads_to_target"] or base["uploads"]
     rows = []
     for alg in ALGS:
-        r = results[alg]
-        c1 = r.uploads_to_target or r.comm.model_uploads
-        hit = r.uploads_to_target is not None
+        s = results[alg].to_summary()
+        c1 = s["uploads_to_target"] or s["uploads"]
         rows.append({
-            "experiment": exp, "algorithm": alg,
+            "experiment": exp, "algorithm": s["algorithm"],
             "communication_times": c1,
-            "reached_target": hit,
-            "best_acc": round(r.best_acc, 4),
+            "reached_target": s["uploads_to_target"] is not None,
+            "best_acc": s["best_acc"],
             "ccr": round(ccr(c0, c1), 4) if alg != "afl" else 0.0,
         })
     return rows

@@ -1,0 +1,142 @@
+"""Observability overhead + trace-export benchmark (repro.obs,
+docs/OBSERVABILITY.md).
+
+Two claims, measured:
+
+* **Zero when off, cheap when on.**  The same batched-engine lap is
+  timed with ``obs=None`` and with in-memory tracing + metrics enabled
+  (no exporters inside the timed region); the contract is <5% overhead
+  at N=1024 (the ``--full`` lap; smoke Ns are too fast to resolve a
+  stable percentage, so the JSON records whatever it measured and the
+  N=1024 gate is asserted manually / in --full sweeps).
+
+* **The trace is the run.**  The enabled lap's numeric results must be
+  bit-exact with the disabled lap, its metric counters must reconcile
+  with ``CommStats``, and the Chrome ``trace_event`` export must be
+  loadable JSON with one event per traced record.
+
+    PYTHONPATH=src python -m benchmarks.obs_bench \
+        [--smoke] [--full] [--ns 64,256] [--json BENCH_obs.json]
+
+Emits the machine-readable ``BENCH_obs.json`` (schema ``bench-obs/v1``)
+asserted by tier-1 (tests/test_public_api.py).
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import sys
+import tempfile
+import time
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), ".."))
+
+
+def _lap(problem, N, rounds, obs, *, engine="batched", seed=0):
+    from benchmarks.async_engine_bench import _run
+    t0 = time.perf_counter()
+    res, _ = _run(problem, "vafl", engine, N, rounds, seed=seed,
+                  events_per_eval=N, obs=obs)
+    return res, time.perf_counter() - t0
+
+
+def run(Ns=None, *, smoke=False, full=False, out_json=None):
+    from benchmarks.async_engine_bench import _build
+    from repro.obs import ObsConfig, read_jsonl
+
+    if Ns is None:
+        Ns = (16,) if smoke else (64, 1024) if full else (64,)
+    rows = []
+    print(f"{'N':>5s} {'events':>7s} {'off s':>8s} {'on s':>8s} "
+          f"{'overhead':>9s} {'trace ev':>9s} {'bitexact':>9s}")
+    for N in Ns:
+        problem = _build(N, 16 if N >= 1024 else 24, 256)
+        rounds = 2
+        # warm with the SAME round count as the timed laps — a different
+        # event budget schedules different window shapes, whose
+        # compiles would otherwise bill to the first timed lap
+        _lap(problem, N, rounds, None)
+        # interleaved best-of-3: single laps on a shared CPU drift by
+        # more than the effect being measured, so each arm keeps its
+        # fastest lap (standard microbenchmark practice)
+        sec_off = sec_on = float("inf")
+        for _ in range(3):
+            off, dt = _lap(problem, N, rounds, None)
+            sec_off = min(sec_off, dt)
+            # in-memory tracing+metrics only: exporters run after
+            # finish() and would otherwise bill file I/O to the hot loop
+            on, dt = _lap(problem, N, rounds, ObsConfig())
+            sec_on = min(sec_on, dt)
+        bit_exact = (
+            [(r.round, r.global_acc) for r in off.records]
+            == [(r.round, r.global_acc) for r in on.records]
+            and off.comm.model_uploads == on.comm.model_uploads
+            and off.comm.uplink_bytes == on.comm.uplink_bytes)
+        m = on.metrics
+        assert m["counters"]["uploads"] == on.comm.model_uploads
+        assert (m["counters"].get("upload_payload_bytes", 0)
+                == on.comm.upload_payload_bytes)
+
+        # the exporters, validated end to end on a short traced run
+        with tempfile.TemporaryDirectory() as td:
+            jsonl = os.path.join(td, "trace.jsonl")
+            chrome = os.path.join(td, "trace.json")
+            exp, _ = _lap(problem, N, 1, ObsConfig(trace_jsonl=jsonl,
+                                                   chrome_trace=chrome))
+            header, events = read_jsonl(jsonl)
+            assert header["events"] == len(events)
+            uploads = sum(1 for e in events if e["name"] == "upload")
+            assert uploads == exp.comm.model_uploads
+            with open(chrome) as f:
+                doc = json.load(f)
+            spans = [e for e in doc["traceEvents"] if e["ph"] in ("X", "i")]
+            # a host-timed span renders on BOTH timelines (sim + host)
+            want = sum((e.get("sim") is not None)
+                       + (e["ph"] == "X" and e.get("host_dur") is not None)
+                       + (e.get("sim") is None
+                          and not (e["ph"] == "X"
+                                   and e.get("host_dur") is not None))
+                       for e in events)
+            assert len(spans) == want, (len(spans), want)
+
+        overhead = 100.0 * (sec_on - sec_off) / max(sec_off, 1e-9)
+        print(f"{N:5d} {rounds * N:7d} {sec_off:8.2f} {sec_on:8.2f} "
+              f"{overhead:8.1f}% {m['counters']['trace_events']:9d} "
+              f"{str(bit_exact):>9s}")
+        rows.append({
+            "N": N, "engine": "batched", "events": rounds * N,
+            "sec_obs_off": round(sec_off, 3),
+            "sec_obs_on": round(sec_on, 3),
+            "overhead_pct": round(overhead, 2),
+            "trace_events": m["counters"]["trace_events"],
+            "jit_compiles": m["gauges"]["jit_compiles"],
+            "bit_exact_with_obs": bit_exact,
+            **{k: on.to_summary()[k] for k in ("uploads", "best_acc",
+                                               "total_wire_mb")},
+        })
+
+    if out_json:
+        if os.path.dirname(out_json):
+            os.makedirs(os.path.dirname(out_json), exist_ok=True)
+        with open(out_json, "w") as f:
+            json.dump({"schema": "bench-obs/v1", "rows": rows}, f, indent=2)
+        print(f"[json] {out_json}")
+    return rows
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--smoke", action="store_true")
+    ap.add_argument("--full", action="store_true",
+                    help="adds the N=1024 lap (the <5% overhead gate)")
+    ap.add_argument("--ns", default=None, help="comma list of client counts")
+    ap.add_argument("--json", default=None)
+    args = ap.parse_args()
+    ns = tuple(int(n) for n in args.ns.split(",")) if args.ns else None
+    run(ns, smoke=args.smoke, full=args.full, out_json=args.json)
+
+
+if __name__ == "__main__":
+    main()

@@ -9,6 +9,7 @@ Sections:
   [compress] codec x algorithm uplink-bytes/CCR sweep (repro.compress)
   [engine]   batched async engine events/sec + accuracy at N up to 1024
   [scenarios] repro.sim scenario x algorithm x codec time-to-accuracy
+  [obs]      repro.obs tracing/metrics overhead + trace-export checks
   [kernels]  grad_diff_norm / linear_scan microbenchmarks
   [roofline] three-term roofline per (arch x shape) from dry-run artifacts
   [gated]    cross-pod gated-collective accounting (multi-pod artifacts)
@@ -120,6 +121,20 @@ def main() -> None:
            out_json=os.path.join(
                "artifacts" if os.path.isdir("artifacts") else "",
                "BENCH_scenarios.json"))
+        print()
+
+    if "obs" not in skip:
+        print("== [obs] observability overhead + trace export (repro.obs) ==")
+        from benchmarks.obs_bench import run as ob
+        # always emits the machine-readable BENCH_obs.json (schema
+        # bench-obs/v1): obs-on vs obs-off lap time, trace event counts
+        # reconciled against CommStats, bit-exactness — tier-1 asserts
+        # it (tests/test_public_api.py); --full adds the N=1024 lap
+        # where the <5% overhead contract is measured
+        ob(smoke=args.smoke or args.fast, full=args.full,
+           out_json=os.path.join(
+               "artifacts" if os.path.isdir("artifacts") else "",
+               "BENCH_obs.json"))
         print()
 
     if "kernels" not in skip:

@@ -34,21 +34,9 @@ FULL_SCENARIOS = ("paper_testbed", "mobile_fleet", "flaky_edge",
 
 
 def _row(res, scenario, alg, codec, target):
-    return {
-        "scenario": scenario, "algorithm": alg, "codec": codec,
-        "target_acc": target,
-        "time_to_target": res.time_to_target,
-        "sim_time": res.sim_time,
-        "best_acc": round(res.best_acc, 4),
-        "uploads": res.comm.model_uploads,
-        "uplink_mb": round(res.comm.uplink_bytes / 1e6, 3),
-        "downlink_mb": round(res.comm.downlink_bytes / 1e6, 3),
-        "byte_ccr": round(res.byte_ccr, 4),
-        "mean_idle": (None if res.idle_fraction is None
-                      else round(res.idle_fraction, 4)),
-        "failed_rounds": (None if res.client_failed_rounds is None
-                          else int(sum(res.client_failed_rounds))),
-    }
+    # the per-run core is RunResult.to_summary() (shared by every
+    # BENCH_*.json writer); only the sweep axes are added here
+    return {"scenario": scenario, "codec": codec, **res.to_summary()}
 
 
 def run(scale=None, *, scenarios=None, algorithms=("vafl", "afl"),

@@ -96,6 +96,14 @@ class FLRunConfig:
     # runtime.  None — the default — is today's simulation exactly:
     # paper-testbed speeds, free network, always-on clients.
     scenario: Optional[object] = None
+    # observability (repro.obs, docs/OBSERVABILITY.md): None (the
+    # default) is off with zero overhead; True enables in-memory
+    # dual-timeline tracing + metrics with defaults; an
+    # repro.obs.ObsConfig (or dict of its fields) selects exporters
+    # (JSONL / Chrome trace / console summary / jax.profiler hook).
+    # Enabling obs never changes numeric results — golden-seed outputs
+    # stay bit-exact with tracing on (tests/test_obs.py).
+    obs: Optional[object] = None
 
     def __post_init__(self):
         get_algorithm(self.algorithm)  # raises ValueError listing names
@@ -108,6 +116,11 @@ class FLRunConfig:
             # actually configured
             from repro.sim import resolve_scenario
             self.scenario = resolve_scenario(self.scenario)
+        if self.obs is not None:
+            # lazy import, mirroring scenario=: repro.obs is only pulled
+            # in when observability is actually configured
+            from repro.obs import resolve_obs
+            self.obs = resolve_obs(self.obs)
         if self.eval_subsample < 0 or self.eval_cache < 0:
             raise ValueError("eval_subsample and eval_cache must be >= 0 "
                              f"(got {self.eval_subsample}, {self.eval_cache})")

@@ -20,9 +20,12 @@ are passed (arbitrary workloads — see examples/fl_llm_finetune.py).
 ``scenario`` is a ``repro.sim`` zoo name ("paper_testbed",
 "mobile_fleet", "flaky_edge", "datacenter", ...) or ScenarioConfig
 selecting the simulated compute fleet, byte-aware network and client
-availability (docs/SCENARIOS.md); extra keyword arguments flow into
-``FLRunConfig`` unchanged, so every knob (engine, buffer_size,
-participation, DP, ...) stays reachable.
+availability (docs/SCENARIOS.md); ``obs`` is ``True`` or an
+``repro.obs.ObsConfig`` enabling dual-timeline tracing, metrics and
+exporters (docs/OBSERVABILITY.md — ``None``, the default, is off with
+zero overhead); extra keyword arguments flow into ``FLRunConfig``
+unchanged, so every knob (engine, buffer_size, participation, DP, ...)
+stays reachable.
 """
 from __future__ import annotations
 
@@ -64,7 +67,7 @@ class Federation:
     def __init__(self, *, data, model="mlp", test_data=None,
                  algorithm: str = "vafl", compressor: str = "identity",
                  broadcast_compressor: Optional[str] = None,
-                 scenario=None,
+                 scenario=None, obs=None,
                  local: Optional[LocalSpec] = None,
                  init_params_fn: Optional[Callable] = None,
                  loss_fn: Optional[Callable] = None,
@@ -109,7 +112,7 @@ class Federation:
             algorithm=algorithm, num_clients=num_clients,
             local=local or LocalSpec(), compressor=compressor,
             broadcast_compressor=broadcast_compressor, scenario=scenario,
-            **config)
+            obs=obs, **config)
 
     def _client_eval_for(self, cfg):
         """The per-client evaluator for one run: the user's explicit

@@ -13,7 +13,23 @@ class CommStats:
     uploads; scalar V reports are tracked separately (they are what VAFL
     trades the heavy uploads for).  When a codec is active the runtimes
     pass actual payload sizes via ``nbytes``; otherwise a transfer costs
-    the full fp32 model (``model_bytes``)."""
+    the full fp32 model (``model_bytes``).
+
+    **The uplink ledger, in one place** (everything else cross-checks
+    against this — tests/test_obs.py):
+
+        uplink_bytes == upload_payload_bytes + scalar_report_bytes
+
+    ``upload_payload_bytes`` intentionally EXCLUDES the scalar V
+    reports: it is the codec-compressible model traffic ``byte_ccr``
+    measures, while ``uplink_bytes`` is everything on the wire.  The
+    per-client ledgers (``RunResult.client_uplink_bytes`` /
+    ``client_downlink_bytes``) reconcile as: event-driven runtimes
+    attribute ALL uplink bytes (reports included) to the reporting
+    client, so their sum equals ``uplink_bytes``; the round-based and
+    sync-barrier runtimes attribute only upload payloads (a whole
+    round's reports are recorded in one bulk call with no per-client
+    split), so their sum equals ``upload_payload_bytes``."""
     model_uploads: int = 0
     scalar_reports: int = 0
     broadcasts: int = 0
@@ -21,6 +37,7 @@ class CommStats:
     uplink_bytes: int = 0
     downlink_bytes: int = 0
     upload_payload_bytes: int = 0     # actual on-the-wire upload bytes
+    scalar_report_bytes: int = 0      # wire bytes of the scalar V reports
 
     def record_upload(self, n: int = 1, nbytes: Optional[int] = None):
         """n uploads costing ``nbytes`` total (full models when None)."""
@@ -31,7 +48,8 @@ class CommStats:
 
     def record_report(self, n: int = 1):
         self.scalar_reports += n
-        self.uplink_bytes += n * 4  # one fp32 scalar
+        self.scalar_report_bytes += n * 4  # one fp32 scalar each
+        self.uplink_bytes += n * 4
 
     def record_broadcast(self, n: int = 1, nbytes: Optional[int] = None):
         self.broadcasts += n
@@ -44,6 +62,12 @@ class CommStats:
         nothing but model broadcasts (unlike the uplink, where
         upload_payload_bytes excludes the scalar V reports)."""
         return self.downlink_bytes
+
+    @property
+    def total_wire_bytes(self) -> int:
+        """Everything on the wire, both directions: upload payloads +
+        scalar reports + broadcasts."""
+        return self.uplink_bytes + self.downlink_bytes
 
     @property
     def byte_ccr(self) -> float:
@@ -106,6 +130,13 @@ class RunResult:
     client_uplink_bytes: Optional[List[int]] = None
     client_downlink_bytes: Optional[List[int]] = None
     client_failed_rounds: Optional[List[int]] = None
+    # observability surface (repro.obs, docs/OBSERVABILITY.md) — set by
+    # Observer.finish when the run had obs enabled: ``trace_path`` is
+    # the exported trace file (JSONL or Chrome trace_event JSON),
+    # ``metrics`` the registry snapshot ({"counters": ..., "gauges":
+    # ..., "histograms": ...}, including the jit_compiles gauge).
+    trace_path: Optional[str] = None
+    metrics: Optional[dict] = None
 
     @property
     def best_acc(self) -> float:
@@ -126,3 +157,32 @@ class RunResult:
                 self.time_to_target = r.time
                 break
         return self
+
+    def to_summary(self) -> dict:
+        """The run as one JSON-ready dict — the shared core every
+        BENCH_*.json writer builds on (benchmarks/run.py,
+        scenario_bench, async_engine_bench, obs_bench) instead of
+        hand-rolling its own result dict."""
+        c = self.comm
+        return {
+            "algorithm": self.algorithm,
+            "target_acc": self.target_acc,
+            "best_acc": round(self.best_acc, 4),
+            "records": len(self.records),
+            "uploads": c.model_uploads,
+            "scalar_reports": c.scalar_reports,
+            "broadcasts": c.broadcasts,
+            "uplink_mb": round(c.uplink_bytes / 1e6, 3),
+            "downlink_mb": round(c.downlink_bytes / 1e6, 3),
+            "total_wire_mb": round(c.total_wire_bytes / 1e6, 3),
+            "byte_ccr": round(self.byte_ccr, 4),
+            "uploads_to_target": self.uploads_to_target,
+            "rounds_to_target": self.rounds_to_target,
+            "time_to_target": self.time_to_target,
+            "sim_time": self.sim_time,
+            "mean_idle": (None if self.idle_fraction is None
+                          else round(self.idle_fraction, 4)),
+            "failed_rounds": (None if self.client_failed_rounds is None
+                              else int(sum(self.client_failed_rounds))),
+            "trace_path": self.trace_path,
+        }

@@ -60,8 +60,10 @@ from repro.core.runtimes.common import (_BROADCAST, _UPLOAD,
                                         _compressed_broadcast,
                                         _compressed_upload, _enc_seed,
                                         _engine_jits, _event_helpers,
-                                        _make_codecs, _tree_delta, _value_fn)
+                                        _finish_obs, _make_codecs,
+                                        _obs_for_run, _tree_delta, _value_fn)
 from repro.core.scheduler import EventScheduler
+from repro.obs.console import progress
 
 
 def _host_async(x):
@@ -81,10 +83,12 @@ class _AccCache:
     rows are gathered and evaluated in power-of-two buckets so the
     number of compiled eval variants stays O(log N)."""
 
-    def __init__(self, num_clients: int, every: int, batch_eval, gather):
+    def __init__(self, num_clients: int, every: int, batch_eval, gather,
+                 obs=None):
         self.every = every
         self.batch_eval = batch_eval
         self.gather = gather
+        self.obs = obs
         self.acc = np.zeros(num_clients, np.float32)
         # "never evaluated" sorts as infinitely stale
         self.age = np.full(num_clients, np.iinfo(np.int32).max, np.int64)
@@ -93,6 +97,9 @@ class _AccCache:
         """Accuracies for the window's clients, indexed by ``newp`` rows
         (``clients[r]`` = client id of row r)."""
         need = np.flatnonzero(self.age[clients] >= self.every)
+        if self.obs is not None:
+            self.obs.eval_cache(hits=len(clients) - len(need),
+                                misses=len(need))
         if len(need):
             bucket = 1 << (len(need) - 1).bit_length()
             rows = np.concatenate([need, np.zeros(bucket - len(need),
@@ -144,9 +151,11 @@ def _run_event_batched(run_cfg, policy, aggregator, init_params_fn, loss_fn,
     prev_global = global_params
     prev_prev_global = global_params
 
+    obs = _obs_for_run(run_cfg)
     batch_eval, values_fn, norms_fn = _event_helpers(
         run_cfg, client_eval_fn, sq_diff)
-    acc_cache = (_AccCache(N, run_cfg.eval_cache, batch_eval, ops.gather)
+    acc_cache = (_AccCache(N, run_cfg.eval_cache, batch_eval, ops.gather,
+                           obs=obs)
                  if policy.needs_values and run_cfg.eval_cache > 0 else None)
     # a window's final flush folds into the commit only when the default
     # flush math applies (a plugin aggregator's override must stay in
@@ -157,7 +166,8 @@ def _run_event_batched(run_cfg, policy, aggregator, init_params_fn, loss_fn,
     W = max(1, min(W, N))
     K = max(1, run_cfg.buffer_size)
     total_events = run_cfg.rounds * N
-    sched = EventScheduler(N, speed, network=net, availability=avail)
+    sched = EventScheduler(N, speed, network=net, availability=avail,
+                           obs=obs)
     # a reactive scenario consumes per-event payload bytes (or
     # availability draws) at reschedule time, so the pipeline's
     # reschedule+pop-ahead must wait for the window's upload decisions
@@ -170,8 +180,10 @@ def _run_event_batched(run_cfg, policy, aggregator, init_params_fn, loss_fn,
     buffer: list = []
     buf_stale: list = []              # their staleness weights s(tau)
 
-    def flush():
+    def flush(sim=None):
         nonlocal global_params, prev_global, prev_prev_global, server_version
+        if obs is not None:
+            obs.flush(len(buffer), sim)
         prev_prev_global = prev_global
         prev_global = global_params
         if len(buffer) == 1:          # bit-exact sequential mix (K=1 path)
@@ -207,10 +219,13 @@ def _run_event_batched(run_cfg, policy, aggregator, init_params_fn, loss_fn,
     pre_d = None                       # next window's pre-dispatched data
     times, idx_np = (sched.pop_window(min(W, total_events))
                      if total_events else (np.empty(0), np.empty(0, int)))
+    if obs is not None:                # opt-in device profiler (hot loop)
+        obs.profile_start()
     while len(idx_np):
         t_now = float(times[-1])
         w = len(idx_np)
         full = w == N                  # a full window = client permutation
+        h0 = obs.host_now() if obs is not None else 0.0
         rng, urng = jax.random.split(rng)
 
         # ---- dispatch the window's device work ------------------------
@@ -232,6 +247,10 @@ def _run_event_batched(run_cfg, policy, aggregator, init_params_fn, loss_fn,
             newp, eff, _ = local_update(sub_base, d_w, urng)
             row_of = np.arange(w)
         pre_d = None
+        if obs is not None:
+            # host_dur here is DISPATCH time (XLA execution is async);
+            # the window span measures dispatch-through-commit
+            obs.local_update(float(times[0]), t_now, h0, clients=w)
 
         # the policy's declared stacked inputs: ONE vmapped dispatch per
         # window each, with the device->host copy started immediately so
@@ -292,14 +311,18 @@ def _run_event_batched(run_cfg, policy, aggregator, init_params_fn, loss_fn,
         for j in range(w):
             i = int(idx_np[j])
             r = int(row_of[j])
+            t_j = float(times[j])
             u0, d0 = comm.uplink_bytes, comm.downlink_bytes
             if policy.reports:
                 comm.record_report(1)
+                if obs is not None:
+                    obs.report(i, t_j)
             upload = policy.decide(
                 i, None if V_w is None else float(V_w[j]),
                 None if norms_w is None else float(norms_w[j]), thr)
 
             if upload:
+                p0 = comm.upload_payload_bytes
                 if codec.is_identity:
                     buffer.append((newp, r))
                     comm.record_upload(1)
@@ -307,10 +330,14 @@ def _run_event_batched(run_cfg, policy, aggregator, init_params_fn, loss_fn,
                     recon = _compressed_upload(
                         codec, ef, comm, stacked_index(sub_base, r),
                         stacked_index(newp, r), i,
-                        _enc_seed(run_cfg, ev + j, i, _UPLOAD))
+                        _enc_seed(run_cfg, ev + j, i, _UPLOAD), obs=obs)
                     buffer.append((jax.tree.map(lambda x: x[None], recon), 0))
-                buf_stale.append(aggregator.stale_weight(
-                    server_version - model_version[i]))
+                staleness = server_version - model_version[i]
+                buf_stale.append(aggregator.stale_weight(staleness))
+                if obs is not None:
+                    obs.upload(i, t_j, staleness=int(staleness),
+                               nbytes=comm.upload_payload_bytes - p0,
+                               codec=codec.name)
                 if len(buffer) >= K:
                     if (j == w - 1 and len(buffer) > 1 and foldable_flush
                             and bcodec is None
@@ -321,11 +348,13 @@ def _run_event_batched(run_cfg, policy, aggregator, init_params_fn, loss_fn,
                         coef, rho_sbar = buffered_coefs(
                             buf_stale, aggregator.mix_rate)
                         pending = (rows, coef, rho_sbar)
+                        if obs is not None:
+                            obs.flush(len(buffer), t_j, folded=True)
                         server_version += 1
                         buffer.clear()
                         buf_stale.clear()
                     else:
-                        flush()
+                        flush(t_j)
 
             if bcodec is None:
                 comm.record_broadcast(1)
@@ -339,10 +368,13 @@ def _run_event_batched(run_cfg, policy, aggregator, init_params_fn, loss_fn,
             else:
                 enc_downloads.append(_compressed_broadcast(
                     bcodec, comm, global_params, 1,
-                    _enc_seed(run_cfg, ev + j, i, _BROADCAST)))
+                    _enc_seed(run_cfg, ev + j, i, _BROADCAST), obs=obs))
             model_version[i] = server_version
             ev_up[j] = comm.uplink_bytes - u0
             ev_down[j] = comm.downlink_bytes - d0
+            if obs is not None:
+                obs.broadcast(i, t_j, nbytes=int(ev_down[j]),
+                              codec=None if bcodec is None else bcodec.name)
 
         if reactive:
             # byte-aware reschedule: each client restarts from its own
@@ -426,6 +458,10 @@ def _run_event_batched(run_cfg, policy, aggregator, init_params_fn, loss_fn,
                     client_params, idx, ops.stack(tuple(enc_downloads)))
                 prev_grads = ops.scatter_donated(prev_grads, idx, eff)
 
+        if obs is not None:
+            # one span per window: sim bounds = first/last completion,
+            # host duration = dispatch through commit (this point)
+            obs.window(w, float(times[0]), t_now, h0)
         prev_ev, ev = ev, ev + w
         epe = run_cfg.events_per_eval
         crossed = ev // epe - prev_ev // epe
@@ -434,28 +470,36 @@ def _run_event_batched(run_cfg, policy, aggregator, init_params_fn, loss_fn,
             # evaluation overlaps the next window's compute; a record whose
             # global model is bit-identical to the previous one (no flush
             # since) reuses its scalar outright
-            if last_eval[0] == server_version:
+            h0e = obs.host_now() if obs is not None else 0.0
+            reused = last_eval[0] == server_version
+            if reused:
                 acc = last_eval[1]     # bit-identical model: reuse (exact)
             else:
                 acc = _host_async(evaluate_fn(global_params))
                 last_eval = (server_version, acc)
+            if obs is not None:
+                # the acc scalar stays deferred — the hook never reads it
+                obs.eval_event(ev, t_now, h0e, boundaries=crossed,
+                               reused=reused)
             records.append(RoundRecord(round=ev, time=t_now, global_acc=acc,
                                        uploads_so_far=comm.model_uploads,
                                        boundaries_crossed=crossed))
             if verbose:
-                print(f"[{run_cfg.algorithm}/batched] ev {ev:5d} "
-                      f"t={t_now:8.1f} acc={float(acc):.4f} "
-                      f"uploads={comm.model_uploads}")
+                progress(f"[{run_cfg.algorithm}/batched] ev {ev:5d} "
+                         f"t={t_now:8.1f} acc={float(acc):.4f} "
+                         f"uploads={comm.model_uploads}")
 
         if nxt is None:
             break
         times, idx_np = nxt
 
+    if obs is not None:
+        obs.profile_stop()
     if buffer:  # partial buffer at run end — flush so no update is lost
-        flush()
+        flush(float(sched.now))
 
     for r in records:                  # resolve the deferred eval scalars
         r.global_acc = float(r.global_acc)
     res = RunResult(run_cfg.algorithm, records, comm,
                     run_cfg.target_acc).finalize_target()
-    return _attach_sim_result(res, sched)
+    return _finish_obs(_attach_sim_result(res, sched), obs)

@@ -9,6 +9,7 @@ algorithm-dependent decision.
 """
 from __future__ import annotations
 
+from contextlib import nullcontext
 from functools import lru_cache, partial
 from types import SimpleNamespace
 
@@ -40,6 +41,31 @@ def _make_codecs(run_cfg):
 
 
 _UPLOAD, _BROADCAST = 1, 2
+
+
+# ------------------------------------------------- obs plumbing ---
+
+def _obs_for_run(run_cfg):
+    """The run's ``repro.obs`` Observer, or None when observability is
+    off (``obs=None``, the default) — every hook site in the runtimes is
+    behind an ``if obs is not None`` so the disabled path costs one
+    branch, nothing else (docs/OBSERVABILITY.md)."""
+    ocfg = getattr(run_cfg, "obs", None)
+    if ocfg is None:
+        return None
+    from repro.obs import Observer
+    return Observer(ocfg, meta={
+        "algorithm": run_cfg.algorithm, "engine": run_cfg.engine,
+        "num_clients": run_cfg.num_clients, "seed": run_cfg.seed,
+        "compressor": run_cfg.compressor,
+        "broadcast_compressor": run_cfg.broadcast_compressor})
+
+
+def _finish_obs(res, obs):
+    """Seal the observer onto the result (exports + metrics snapshot)."""
+    if obs is not None:
+        obs.finish(res)
+    return res
 
 
 # ------------------------------------------------- scenario plumbing ---
@@ -95,69 +121,93 @@ def _tree_apply_delta(base, delta):
                       ).astype(b.dtype), base, delta)
 
 
-def _compressed_upload(codec, ef, comm, base, client_tree, i, seed):
+def _compressed_upload(codec, ef, comm, base, client_tree, i, seed,
+                       obs=None):
     """One client's compressed upload: encode codec(delta vs ``base``, the
     model the client downloaded) with error feedback, account the wire
-    bytes, and return the reconstruction the server actually receives."""
+    bytes, and return the reconstruction the server actually receives.
+    Under obs the encode+decode is a host-timed "encode" span tagged
+    with the codec and the payload's actual wire bytes."""
     delta = _tree_delta(client_tree, base)
-    payload, decoded = compress_update(codec, ef, i, delta, seed=seed)
+    with (obs.timed("encode", client=i, codec=codec.name)
+          if obs is not None else nullcontext()):
+        payload, decoded = compress_update(codec, ef, i, delta, seed=seed)
     comm.record_upload(1, nbytes=payload.nbytes)
     return _tree_apply_delta(base, decoded)
 
 
-def _compressed_broadcast(bcodec, comm, params, n, seed):
+def _compressed_broadcast(bcodec, comm, params, n, seed, obs=None):
     """Encode one model broadcast to ``n`` clients; returns the lossy
     model they actually receive (no EF on the downlink — clients train
     from what arrived)."""
-    bp = bcodec.encode(params, seed=seed)
+    with (obs.timed("encode", codec=bcodec.name, broadcast=True)
+          if obs is not None else nullcontext()):
+        bp = bcodec.encode(params, seed=seed)
+        out = bcodec.decode(bp)
     comm.record_broadcast(n, nbytes=n * bp.nbytes)
-    return bcodec.decode(bp)
+    return out
 
 
 def _round_uploads(run_cfg, codec, ef, comm, base, stacked, mask, t,
-                   up_acc=None):
+                   up_acc=None, obs=None, sim=None):
     """One synchronous round's upload leg, shared by the round-based and
     sync-barrier runtimes: account the selected set's uploads; with a
     codec, each selected client ships codec(delta vs ``base``, its
     download) with error feedback and the reconstructions are scattered
     back into the stack (the server aggregates what it received).
     ``up_acc`` (optional (N,) int array) receives each client's actual
-    on-the-wire upload bytes — the scenario clock's input."""
+    on-the-wire upload bytes — the scenario clock's input.  Under obs
+    each selected client's upload becomes a trace event (staleness is 0
+    by construction: synchronous rounds aggregate fresh models)."""
     sel = [int(i) for i in np.flatnonzero(mask)]
     if codec.is_identity:
         comm.record_upload(len(sel))
-        if up_acc is not None:
-            for i in sel:
+        for i in sel:
+            if up_acc is not None:
                 up_acc[i] += comm.model_bytes
+            if obs is not None:
+                obs.upload(i, sim, nbytes=comm.model_bytes, codec=codec.name)
         return stacked
     recon = []
     for i in sel:
         b0 = comm.uplink_bytes
         recon.append(_compressed_upload(codec, ef, comm, base,
                                         stacked_index(stacked, i), i,
-                                        _enc_seed(run_cfg, t, i, _UPLOAD)))
+                                        _enc_seed(run_cfg, t, i, _UPLOAD),
+                                        obs=obs))
         if up_acc is not None:
             up_acc[i] += comm.uplink_bytes - b0
+        if obs is not None:
+            obs.upload(i, sim, nbytes=comm.uplink_bytes - b0,
+                       codec=codec.name)
     if sel:   # one scatter per leaf, not one stack copy per client
         stacked = tree_scatter(stacked, jnp.asarray(sel), tree_stack(recon))
     return stacked
 
 
 def _round_broadcast(run_cfg, bcodec, comm, global_params, n, t,
-                     down_acc=None):
+                     down_acc=None, obs=None, sim=None):
     """One synchronous round's broadcast leg: returns the model the
     clients actually receive (lossy under a downlink codec).  ``down_acc``
-    (optional (n,) int array) receives each client's downlink bytes."""
+    (optional (n,) int array) receives each client's downlink bytes.
+    Under obs the whole round's broadcast is ONE trace event with n
+    receivers and the TOTAL wire bytes."""
     if bcodec is None:
         comm.record_broadcast(n)
         if down_acc is not None:
             down_acc += comm.model_bytes
+        if obs is not None:
+            obs.broadcast(None, sim, nbytes=n * comm.model_bytes, n=n)
         return global_params
     d0 = comm.downlink_bytes
     out = _compressed_broadcast(bcodec, comm, global_params, n,
-                                _enc_seed(run_cfg, t, 0, _BROADCAST))
+                                _enc_seed(run_cfg, t, 0, _BROADCAST),
+                                obs=obs)
     if down_acc is not None:
         down_acc += (comm.downlink_bytes - d0) // n
+    if obs is not None:
+        obs.broadcast(None, sim, nbytes=comm.downlink_bytes - d0, n=n,
+                      codec=bcodec.name)
     return out
 
 

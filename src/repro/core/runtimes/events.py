@@ -25,11 +25,13 @@ from repro.core.runtimes.common import (_BROADCAST, _UPLOAD,
                                         _attach_sim_result,
                                         _compressed_broadcast,
                                         _compressed_upload, _enc_seed,
-                                        _event_helpers, _make_codecs,
+                                        _event_helpers, _finish_obs,
+                                        _make_codecs, _obs_for_run,
                                         _scenario_models, _tree_delta,
                                         _value_fn)
 from repro.core.client import make_local_update
 from repro.core.scheduler import EventScheduler, SpeedModel
+from repro.obs.console import progress
 
 
 def run_event_driven(run_cfg, *, init_params_fn, loss_fn, fed_data,
@@ -90,7 +92,9 @@ def run_event_driven(run_cfg, *, init_params_fn, loss_fn, fed_data,
 
     records: list = []
     total_events = run_cfg.rounds * N
-    sched = EventScheduler(N, speed, network=net, availability=avail)
+    obs = _obs_for_run(run_cfg)
+    sched = EventScheduler(N, speed, network=net, availability=avail,
+                           obs=obs)
     batch_eval, values_fn, norms_fn = _event_helpers(
         run_cfg, client_eval_fn, sq_diff)
 
@@ -100,9 +104,13 @@ def run_event_driven(run_cfg, *, init_params_fn, loss_fn, fed_data,
         rng, urng = jax.random.split(rng)
         one = jax.tree.map(lambda x: x[None], client_params[i])
         d_i = {k: v[i:i + 1] for k, v in data.items()}
+        h0 = obs.host_now() if obs is not None else 0.0
         newp_s, eff_s, _ = local_update(one, d_i, urng)
         newp = jax.tree.map(lambda x: x[0], newp_s)
         eff_grad = jax.tree.map(lambda x: x[0], eff_s)
+        if obs is not None:
+            # sim span: the client's whole local round ended at t_now
+            obs.local_update(t_now, t_now, h0, client=i)
 
         # the policy's declared inputs, computed as size-1 stacked calls
         # through the same jitted helpers the batched engine uses
@@ -119,9 +127,12 @@ def run_event_driven(run_cfg, *, init_params_fn, loss_fn, fed_data,
             lambda: _tree_delta(prev_global, prev_prev_global))
         if policy.reports:
             comm.record_report(1)
+            if obs is not None:
+                obs.report(i, t_now)
         upload = policy.decide(i, value, norm, thr)
 
         if upload:
+            p0 = comm.upload_payload_bytes
             if codec.is_identity:
                 recon = newp
                 comm.record_upload(1)
@@ -130,8 +141,12 @@ def run_event_driven(run_cfg, *, init_params_fn, loss_fn, fed_data,
                 # the server mixes the reconstruction it actually received
                 recon = _compressed_upload(
                     codec, ef, comm, client_params[i], newp, i,
-                    _enc_seed(run_cfg, ev, i, _UPLOAD))
+                    _enc_seed(run_cfg, ev, i, _UPLOAD), obs=obs)
             staleness = server_version - model_version[i]
+            if obs is not None:
+                obs.upload(i, t_now, staleness=int(staleness),
+                           nbytes=comm.upload_payload_bytes - p0,
+                           codec=codec.name)
             s = aggregator.stale_weight(staleness)
             prev_prev_global = prev_global
             prev_global = global_params
@@ -146,7 +161,10 @@ def run_event_driven(run_cfg, *, init_params_fn, loss_fn, fed_data,
         else:
             client_params[i] = _compressed_broadcast(
                 bcodec, comm, global_params, 1,
-                _enc_seed(run_cfg, ev, i, _BROADCAST))
+                _enc_seed(run_cfg, ev, i, _BROADCAST), obs=obs)
+        if obs is not None:
+            obs.broadcast(i, t_now, nbytes=comm.downlink_bytes - d0,
+                          codec=None if bcodec is None else bcodec.name)
         model_version[i] = server_version
         prev_grads[i] = eff_grad
         # the round's actual on-the-wire bytes (report + payload up, the
@@ -156,15 +174,18 @@ def run_event_driven(run_cfg, *, init_params_fn, loss_fn, fed_data,
                        download_bytes=comm.downlink_bytes - d0)
 
         if (ev + 1) % run_cfg.events_per_eval == 0:
+            h0 = obs.host_now() if obs is not None else 0.0
             acc = float(evaluate_fn(global_params))
+            if obs is not None:
+                obs.eval_event(ev + 1, t_now, h0)
             records.append(RoundRecord(
                 round=ev + 1, time=t_now, global_acc=acc,
                 uploads_so_far=comm.model_uploads))
             if verbose:
-                print(f"[{run_cfg.algorithm}/event] ev {ev+1:4d} "
-                      f"t={t_now:8.1f} acc={acc:.4f} "
-                      f"uploads={comm.model_uploads}")
+                progress(f"[{run_cfg.algorithm}/event] ev {ev+1:4d} "
+                         f"t={t_now:8.1f} acc={acc:.4f} "
+                         f"uploads={comm.model_uploads}")
 
     res = RunResult(run_cfg.algorithm, records, comm,
                     run_cfg.target_acc).finalize_target()
-    return _attach_sim_result(res, sched)
+    return _finish_obs(_attach_sim_result(res, sched), obs)

@@ -16,11 +16,12 @@ from repro.algorithms.base import RoundContext
 from repro.common.pytree import tree_bytes
 from repro.core.client import make_local_update
 from repro.core.metrics import CommStats, RoundRecord, RunResult
-from repro.core.runtimes.common import (_active, _make_codecs,
-                                        _participation_mask,
+from repro.core.runtimes.common import (_active, _finish_obs, _make_codecs,
+                                        _obs_for_run, _participation_mask,
                                         _round_broadcast, _round_helpers,
                                         _round_uploads, _scenario_models,
                                         _tree_delta)
+from repro.obs.console import progress
 
 
 def run_round_based(run_cfg, *, init_params_fn, loss_fn, fed_data,
@@ -51,6 +52,7 @@ def run_round_based(run_cfg, *, init_params_fn, loss_fn, fed_data,
 
     comm = CommStats(model_bytes=tree_bytes(global_params))
     codec, bcodec, ef = _make_codecs(run_cfg)
+    obs = _obs_for_run(run_cfg)
     client_base = global_params   # what clients actually received last
     records = []
     batch_eval, values_fn, grad_norms_fn = _round_helpers(run_cfg,
@@ -72,8 +74,14 @@ def run_round_based(run_cfg, *, init_params_fn, loss_fn, fed_data,
     failed = np.zeros(N, np.int64)
 
     for t in range(1, run_cfg.rounds + 1):
+        # without a scenario the round-based runtime has no clock: its
+        # simulated timeline is the round index (matching record.time)
+        sim = now if compute is not None else float(t)
         rng, urng = jax.random.split(rng)
+        h0 = obs.host_now() if obs is not None else 0.0
         stacked, eff_grads, losses = local_update(stacked, data, urng)
+        if obs is not None:
+            obs.local_update(sim, sim, h0, clients=N)
         # per-client eval: needed by Eq.1 values and/or the round record
         client_accs = (batch_eval(stacked)
                        if policy.needs_values or run_cfg.record_client_accs
@@ -95,7 +103,12 @@ def run_round_based(run_cfg, *, init_params_fn, loss_fn, fed_data,
             norms_fn=lambda: grad_norms_fn(eff_grads),
             server_delta_fn=lambda: _tree_delta(prev_global,
                                                 prev_prev_global))
+        r0 = comm.scalar_reports
         mask, vals_list = policy.round_mask(ctx)
+        if obs is not None and comm.scalar_reports > r0:
+            # policies report in bulk (ctx.comm.record_report(|S|)) with
+            # no per-client split — one trace event carries the count
+            obs.report(None, sim, n=comm.scalar_reports - r0)
         if not mask.any():  # guard (a policy may suppress all participants)
             norms_np = np.asarray(ctx.norms(), np.float64)
             norms_np[~part] = -np.inf
@@ -107,17 +120,23 @@ def run_round_based(run_cfg, *, init_params_fn, loss_fn, fed_data,
                 if avail.round_fails(int(c)):
                     failed[c] += 1
                     mask = mask & (np.arange(N) != c)
+                    if obs is not None:
+                        obs.failure(int(c), sim)
         u0, d0 = up_bytes.copy(), down_bytes.copy()
         stacked = _round_uploads(run_cfg, codec, ef, comm, client_base,
-                                 stacked, mask, t, up_acc=up_bytes)
+                                 stacked, mask, t, up_acc=up_bytes,
+                                 obs=obs, sim=sim)
 
         prev_prev_global = prev_global
         prev_global = global_params
         global_params = aggregator.round_aggregate(global_params, stacked,
                                                    jnp.asarray(mask), counts)
+        if obs is not None:
+            obs.aggregate(sim, n=int(mask.sum()))
         # broadcast the new global model to every client
         client_base = _round_broadcast(run_cfg, bcodec, comm, global_params,
-                                       N, t, down_acc=down_bytes)
+                                       N, t, down_acc=down_bytes,
+                                       obs=obs, sim=sim)
         if service is not None:
             delay = np.zeros(N)
             if net is not None:
@@ -131,7 +150,11 @@ def run_round_based(run_cfg, *, init_params_fn, loss_fn, fed_data,
         prev_grads = eff_grads
 
         if t % run_cfg.eval_every == 0:
+            h0 = obs.host_now() if obs is not None else 0.0
             acc = float(evaluate_fn(global_params))
+            if obs is not None:
+                obs.eval_event(t, now if compute is not None else float(t),
+                               h0)
             records.append(RoundRecord(
                 round=t, time=now if compute is not None else float(t),
                 global_acc=acc,
@@ -141,9 +164,9 @@ def run_round_based(run_cfg, *, init_params_fn, loss_fn, fed_data,
                 client_accs=None if not run_cfg.record_client_accs else
                 [float(a) for a in np.asarray(client_accs)]))
             if verbose:
-                print(f"[{run_cfg.algorithm}] round {t:3d} acc={acc:.4f} "
-                      f"uploads={comm.model_uploads} "
-                      f"selected={int(mask.sum())}/{N}")
+                progress(f"[{run_cfg.algorithm}] round {t:3d} acc={acc:.4f} "
+                         f"uploads={comm.model_uploads} "
+                         f"selected={int(mask.sum())}/{N}")
 
     res = RunResult(run_cfg.algorithm, records, comm,
                     run_cfg.target_acc).finalize_target()
@@ -155,4 +178,4 @@ def run_round_based(run_cfg, *, init_params_fn, loss_fn, fed_data,
         res.sim_time = float(now)
         res.idle_fraction = float(idle.mean())
         res.client_idle = [float(x) for x in idle]
-    return res
+    return _finish_obs(res, obs)

@@ -21,10 +21,11 @@ from repro.algorithms.base import RoundContext
 from repro.common.pytree import tree_bytes
 from repro.core.client import make_local_update
 from repro.core.metrics import CommStats, RoundRecord, RunResult
-from repro.core.runtimes.common import (_active, _make_codecs,
-                                        _participation_mask,
+from repro.core.runtimes.common import (_active, _finish_obs, _make_codecs,
+                                        _obs_for_run, _participation_mask,
                                         _round_broadcast, _round_helpers,
                                         _round_uploads, _tree_delta)
+from repro.obs.console import progress
 
 
 def _run_sync_barrier(run_cfg, policy, aggregator, init_params_fn, loss_fn,
@@ -36,6 +37,7 @@ def _run_sync_barrier(run_cfg, policy, aggregator, init_params_fn, loss_fn,
     global_params = init_params_fn(krng)
     comm = CommStats(model_bytes=tree_bytes(global_params))
     codec, bcodec, ef = _make_codecs(run_cfg)
+    obs = _obs_for_run(run_cfg)
     client_base = global_params
     local_update = make_local_update(loss_fn, run_cfg.local)
     data = {"images": jnp.asarray(fed_data.images),
@@ -66,7 +68,10 @@ def _run_sync_barrier(run_cfg, policy, aggregator, init_params_fn, loss_fn,
         part = _participation_mask(part_rng, run_cfg.participation, N)
         stacked = jax.tree.map(lambda x: jnp.broadcast_to(x, (N,) + x.shape),
                                client_base)
+        h0 = obs.host_now() if obs is not None else 0.0
         stacked, eff_grads, _ = local_update(stacked, data, urng)
+        if obs is not None:
+            obs.local_update(now, now, h0, clients=N)
         round_times = np.array([speed.sample(c, now) for c in range(N)])
         busy[part] += round_times[part]   # non-participants idle all round
         u0, d0 = up_bytes.copy(), down_bytes.copy()
@@ -79,7 +84,10 @@ def _run_sync_barrier(run_cfg, policy, aggregator, init_params_fn, loss_fn,
             norms_fn=lambda: grad_norms_fn(eff_grads),
             server_delta_fn=lambda: _tree_delta(prev_global,
                                                 prev_prev_global))
+        r0 = comm.scalar_reports
         mask, _ = policy.round_mask(ctx)
+        if obs is not None and comm.scalar_reports > r0:
+            obs.report(None, now, n=comm.scalar_reports - r0)
         if not mask.any():  # guard (a policy may suppress all participants)
             norms_np = np.asarray(ctx.norms(), np.float64)
             norms_np[~part] = -np.inf
@@ -91,14 +99,20 @@ def _run_sync_barrier(run_cfg, policy, aggregator, init_params_fn, loss_fn,
                 if avail.round_fails(int(c)):
                     failed[c] += 1
                     mask = mask & (np.arange(N) != c)
+                    if obs is not None:
+                        obs.failure(int(c), now)
         stacked = _round_uploads(run_cfg, codec, ef, comm, client_base,
-                                 stacked, mask, t, up_acc=up_bytes)
+                                 stacked, mask, t, up_acc=up_bytes,
+                                 obs=obs, sim=now)
         prev_prev_global = prev_global
         prev_global = global_params
         global_params = aggregator.round_aggregate(global_params, stacked,
                                                    jnp.asarray(mask), counts)
+        if obs is not None:
+            obs.aggregate(now, n=int(mask.sum()))
         client_base = _round_broadcast(run_cfg, bcodec, comm, global_params,
-                                       N, t, down_acc=down_bytes)
+                                       N, t, down_acc=down_bytes,
+                                       obs=obs, sim=now)
         # barrier: slowest *participant*, including its own transfer time
         # under a byte-aware network model
         delay = np.zeros(N)
@@ -110,12 +124,15 @@ def _run_sync_barrier(run_cfg, policy, aggregator, init_params_fn, loss_fn,
         if policy.needs_values:   # fedavg never reads it: don't retain
             prev_grads = eff_grads
         if t % run_cfg.eval_every == 0:
+            h0 = obs.host_now() if obs is not None else 0.0
             acc = float(evaluate_fn(global_params))
+            if obs is not None:
+                obs.eval_event(t, now, h0)
             records.append(RoundRecord(round=t, time=now, global_acc=acc,
                                        uploads_so_far=comm.model_uploads))
             if verbose:
-                print(f"[{run_cfg.algorithm}] round {t:3d} t={now:8.1f} "
-                      f"acc={acc:.4f}")
+                progress(f"[{run_cfg.algorithm}] round {t:3d} t={now:8.1f} "
+                         f"acc={acc:.4f}")
     res = RunResult(run_cfg.algorithm, records, comm,
                     run_cfg.target_acc).finalize_target()
     idle = np.clip(1.0 - busy / max(now, 1e-9), 0.0, 1.0)
@@ -125,4 +142,4 @@ def _run_sync_barrier(run_cfg, policy, aggregator, init_params_fn, loss_fn,
     res.client_uplink_bytes = [int(x) for x in up_bytes]
     res.client_downlink_bytes = [int(x) for x in down_bytes]
     res.client_failed_rounds = [int(x) for x in failed]
-    return res
+    return _finish_obs(res, obs)

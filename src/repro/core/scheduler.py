@@ -95,10 +95,13 @@ class EventScheduler:
     pre-scenario scheduler)."""
 
     def __init__(self, num_clients: int, speed: SpeedModel,
-                 network=None, availability=None):
+                 network=None, availability=None, obs=None):
         self.speed = speed
         self.network = network if _is_active(network) else None
         self.availability = availability if _is_active(availability) else None
+        # optional repro.obs Observer: mid-round failures become trace
+        # events (the runtimes own every other hook site)
+        self.obs = obs
         self.heap: List[Event] = []
         self._seq = 0
         self.now = 0.0
@@ -160,6 +163,8 @@ class EventScheduler:
                 # the client goes again — clock and busy time advance,
                 # but no update (and no bytes) ever reach the server
                 self.client_failed_rounds[client] += 1
+                if self.obs is not None:
+                    self.obs.failure(client, t)
             self.busy_until[client] = t
         self._seq += 1
         heapq.heappush(self.heap, Event(t, self._seq, client))

@@ -1,0 +1,32 @@
+"""``repro.obs`` — always-available, off-by-default observability
+(docs/OBSERVABILITY.md).
+
+Three layers, one config:
+
+* **Tracer** — structured spans/events on a dual timeline (simulated
+  clock from ``repro.sim`` + host monotonic) for every upload,
+  broadcast, local update, window execution, aggregation flush, eval
+  and mid-round failure, tagged with client id, staleness, window size,
+  codec and actual payload bytes.
+* **Metrics registry** — counters/gauges/histograms (window size,
+  staleness, wire bytes, eval-cache hit rate, JIT recompile count via
+  ``jax.monitoring``) snapshot onto ``RunResult.metrics``.
+* **Exporters** — JSONL trace, Chrome/Perfetto ``trace_event`` JSON
+  (``chrome://tracing``-loadable), console run summary, and an opt-in
+  ``jax.profiler`` hook around the batched engine's hot loop.
+
+Enable with ``FLRunConfig(obs=True)`` / ``Federation(obs=ObsConfig(
+chrome_trace="run.json"))``; ``obs=None`` (the default) keeps every
+hook site a dead branch — zero overhead, bit-exact either way.
+"""
+from repro.obs.compile_tracking import compile_count, compile_secs, install
+from repro.obs.config import ObsConfig, resolve_obs
+from repro.obs.exporters import read_jsonl
+from repro.obs.metrics import MetricsRegistry
+from repro.obs.observer import Observer
+from repro.obs.tracer import Tracer
+
+__all__ = [
+    "ObsConfig", "Observer", "Tracer", "MetricsRegistry", "resolve_obs",
+    "compile_count", "compile_secs", "install", "read_jsonl",
+]

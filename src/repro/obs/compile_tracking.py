@@ -1,0 +1,43 @@
+"""JIT compile tracking via ``jax.monitoring``.
+
+JAX emits a ``/jax/core/compile/backend_compile_duration`` duration
+event for every *actual* backend (XLA) compilation — jit-cache hits
+emit nothing — so a registered listener gives an exact process-wide
+compile counter with zero patching.  ``install()`` is idempotent;
+``compile_count()`` / ``compile_secs()`` read the running totals.
+
+This is what the recompile regression guard asserts on
+(tests/test_obs.py: a second ``Federation`` run with an identical
+config must trigger ZERO new compiles — the PR 2 memoized-jit
+contract), and what fills the ``jit_compiles`` gauge in every
+``RunResult.metrics`` snapshot.
+"""
+from __future__ import annotations
+
+_COMPILE_EVENT = "/jax/core/compile/backend_compile_duration"
+_state = {"installed": False, "count": 0, "secs": 0.0}
+
+
+def _listener(event: str, duration: float, **kw) -> None:
+    if event == _COMPILE_EVENT:
+        _state["count"] += 1
+        _state["secs"] += duration
+
+
+def install() -> None:
+    """Register the compile listener (idempotent, process-wide)."""
+    if _state["installed"]:
+        return
+    import jax.monitoring
+    jax.monitoring.register_event_duration_secs_listener(_listener)
+    _state["installed"] = True
+
+
+def compile_count() -> int:
+    """Backend compilations observed since ``install()``."""
+    return _state["count"]
+
+
+def compile_secs() -> float:
+    """Total backend-compile seconds observed since ``install()``."""
+    return _state["secs"]

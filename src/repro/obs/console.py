@@ -1,0 +1,16 @@
+"""Console output for the runtimes.
+
+``progress`` is the ONE sanctioned console print inside
+``repro.core.runtimes`` — the source lint (tests/test_algorithms.py)
+forbids ad-hoc ``print(`` / ``time.time(`` / ``time.perf_counter(``
+there so that every instrumentation path flows through ``repro.obs``
+(docs/OBSERVABILITY.md).
+"""
+from __future__ import annotations
+
+import sys
+
+
+def progress(msg: str) -> None:
+    """A verbose-mode progress line (``verbose=True`` runs)."""
+    print(msg, file=sys.stdout, flush=True)

@@ -1,0 +1,106 @@
+"""Run-scoped metrics registry: counters, gauges and histograms with a
+plain-dict snapshot export.
+
+Deliberately tiny and dependency-free — values are Python scalars, a
+histogram keeps count/sum/min/max plus power-of-two bucket counts (the
+same bucketing the engine uses for compiled-variant control), and
+``snapshot()`` is JSON-ready.  Everything is get-or-create by name so
+call sites never pre-register.
+"""
+from __future__ import annotations
+
+import math
+
+
+class Counter:
+    __slots__ = ("value",)
+
+    def __init__(self):
+        self.value = 0
+
+    def inc(self, n=1):
+        self.value += n
+
+
+class Gauge:
+    __slots__ = ("value",)
+
+    def __init__(self):
+        self.value = None
+
+    def set(self, v):
+        self.value = v
+
+
+class Histogram:
+    """count / sum / min / max plus power-of-two bucket counts: bucket k
+    counts observations in (2^(k-1), 2^k] (k=0 holds v <= 1, negatives
+    and zeros included)."""
+    __slots__ = ("count", "total", "min", "max", "buckets")
+
+    def __init__(self):
+        self.count = 0
+        self.total = 0.0
+        self.min = math.inf
+        self.max = -math.inf
+        self.buckets = {}
+
+    def observe(self, v):
+        v = float(v)
+        self.count += 1
+        self.total += v
+        if v < self.min:
+            self.min = v
+        if v > self.max:
+            self.max = v
+        k = 0 if v <= 1.0 else (math.ceil(v) - 1).bit_length()
+        self.buckets[k] = self.buckets.get(k, 0) + 1
+
+    @property
+    def mean(self):
+        return self.total / self.count if self.count else 0.0
+
+
+class MetricsRegistry:
+    """Name -> metric, get-or-create.  A name is one kind only — asking
+    for an existing name as a different kind is a loud error."""
+
+    def __init__(self):
+        self._metrics = {}
+
+    def _get(self, name, cls):
+        m = self._metrics.get(name)
+        if m is None:
+            m = self._metrics[name] = cls()
+        elif not isinstance(m, cls):
+            raise TypeError(f"metric {name!r} already exists as "
+                            f"{type(m).__name__}, not {cls.__name__}")
+        return m
+
+    def counter(self, name) -> Counter:
+        return self._get(name, Counter)
+
+    def gauge(self, name) -> Gauge:
+        return self._get(name, Gauge)
+
+    def hist(self, name) -> Histogram:
+        return self._get(name, Histogram)
+
+    def snapshot(self) -> dict:
+        """JSON-ready snapshot: {"counters": {...}, "gauges": {...},
+        "histograms": {name: {count,sum,mean,min,max,buckets}}}."""
+        out = {"counters": {}, "gauges": {}, "histograms": {}}
+        for name, m in sorted(self._metrics.items()):
+            if isinstance(m, Counter):
+                out["counters"][name] = m.value
+            elif isinstance(m, Gauge):
+                out["gauges"][name] = m.value
+            else:
+                out["histograms"][name] = {
+                    "count": m.count, "sum": m.total, "mean": m.mean,
+                    "min": None if m.count == 0 else m.min,
+                    "max": None if m.count == 0 else m.max,
+                    "buckets": {str(k): v
+                                for k, v in sorted(m.buckets.items())},
+                }
+        return out

@@ -1,0 +1,213 @@
+"""The ``Observer`` — the one object the runtimes talk to.
+
+Semantic hooks (``upload`` / ``broadcast`` / ``report`` / ``window`` /
+``local_update`` / ``flush`` / ``eval_event`` / ``failure``) each feed
+both the dual-timeline tracer and the metrics registry in one call, so
+the runtimes stay one-line-per-site and the counters are guaranteed to
+agree with the trace (tests/test_obs.py asserts both against
+``CommStats``).
+
+Off is *off*: ``FLRunConfig.obs=None`` means the runtimes carry a
+``None`` and every hook site is behind an ``if obs is not None`` — the
+disabled path costs one predictable branch per event, nothing else.
+The observer never reads device values the runtime didn't already
+materialise and never touches RNG, so enabling it leaves golden-seed
+outputs bit-exact.
+"""
+from __future__ import annotations
+
+from contextlib import contextmanager
+
+from repro.obs import compile_tracking
+from repro.obs.config import ObsConfig
+from repro.obs.exporters import (console_summary, write_chrome_trace,
+                                 write_jsonl)
+from repro.obs.metrics import MetricsRegistry
+from repro.obs.tracer import Tracer
+
+
+class Observer:
+    def __init__(self, cfg: ObsConfig, meta: dict = None):
+        self.cfg = cfg
+        self.meta = dict(meta or {})
+        self.meta.update(cfg.metadata)
+        self.metrics = MetricsRegistry()
+        self.tracer = Tracer(cfg.max_events) if cfg.trace else None
+        compile_tracking.install()
+        self._compiles0 = compile_tracking.compile_count()
+        # pre-bound metric objects for the per-event hooks: the hooks run
+        # inside the engines' decision loops, so they skip the registry
+        # name lookup (get-or-create) on every call
+        m = self.metrics
+        self._m_uploads = m.counter("uploads")
+        self._m_upload_bytes = m.counter("upload_payload_bytes")
+        self._m_staleness = m.hist("staleness")
+        self._m_upload_nb = m.hist("upload_nbytes")
+        self._m_reports = m.counter("scalar_reports")
+        self._m_bcasts = m.counter("broadcasts")
+        self._m_bcast_bytes = m.counter("broadcast_bytes")
+        self._m_windows = m.counter("windows")
+        self._m_window_size = m.hist("window_size")
+        self._m_local_updates = m.counter("local_updates")
+        self._m_flushes = m.counter("flushes")
+        self._m_flush_k = m.hist("flush_k")
+
+    # ------------------------------------------------------ time access ---
+
+    def host_now(self) -> float:
+        """Host-monotonic seconds since run start — the runtimes' ONE
+        sanctioned clock (the source lint forbids time.time()/
+        perf_counter() inside repro.core.runtimes)."""
+        return self.tracer.host_now() if self.tracer else 0.0
+
+    # -------------------------------------------------- semantic hooks ---
+    # every hook: metrics always; trace record when tracing is on
+
+    def upload(self, client, sim, *, staleness=0, nbytes=0,
+               codec="identity"):
+        """One accepted model upload (sim = the event's completion time,
+        nbytes = actual on-the-wire payload bytes)."""
+        self._m_uploads.inc()
+        self._m_upload_bytes.inc(nbytes)
+        self._m_staleness.observe(staleness)
+        self._m_upload_nb.observe(nbytes)
+        if self.tracer:
+            self.tracer.event("upload", sim, client, staleness=staleness,
+                              nbytes=nbytes, codec=codec)
+
+    def report(self, client, sim, n=1):
+        """Scalar V report(s) — client=None with n>1 for a whole round's
+        reports at once (round-based runtimes)."""
+        self._m_reports.inc(n)
+        if self.tracer:
+            self.tracer.event("report", sim, client, n=n)
+
+    def broadcast(self, client, sim, *, nbytes=0, n=1, codec=None):
+        """Model broadcast(s): n receivers, nbytes TOTAL wire bytes."""
+        self._m_bcasts.inc(n)
+        self._m_bcast_bytes.inc(nbytes)
+        if self.tracer:
+            self.tracer.event("broadcast", sim, client, nbytes=nbytes, n=n,
+                              **({"codec": codec} if codec else {}))
+
+    def window(self, size, sim0, sim1, host_start):
+        """One batched-engine window: size completions executed as one
+        vmapped update; sim bounds are the window's first/last completion
+        times, host duration covers dispatch through commit."""
+        self._m_windows.inc()
+        self._m_window_size.observe(size)
+        if self.tracer:
+            self.tracer.span("window", sim0, sim1, host_start, size=size)
+
+    def local_update(self, sim0, sim1, host_start, *, client=None,
+                     clients=None):
+        """A local-update dispatch: per event (sequential loop, client=)
+        or per window/round (batched & round runtimes, clients=count)."""
+        self._m_local_updates.inc()
+        if self.tracer:
+            tags = {} if clients is None else {"clients": clients}
+            self.tracer.span("local_update", sim0, sim1, host_start,
+                             client=client, **tags)
+
+    def flush(self, k, sim, *, folded=False):
+        """A buffered-aggregation flush of k reconstructions (the batched
+        engine's mix point; folded=True when it rode the commit call)."""
+        self._m_flushes.inc()
+        self._m_flush_k.observe(k)
+        if self.tracer:
+            self.tracer.event("flush", sim, None, k=k, folded=folded)
+
+    def aggregate(self, sim, *, n):
+        """A synchronous round aggregation folding n uploads."""
+        self.metrics.counter("aggregations").inc()
+        if self.tracer:
+            self.tracer.event("aggregate", sim, None, n=n)
+
+    def eval_event(self, round_, sim, host_start, *, boundaries=1,
+                   reused=False):
+        """One RoundRecord eval.  ``reused`` marks the batched engine's
+        exact bit-identical-model reuse (no device work dispatched)."""
+        self.metrics.counter("evals").inc()
+        self.metrics.counter("eval_boundaries").inc(boundaries)
+        if reused:
+            self.metrics.counter("eval_reused").inc()
+        if self.tracer:
+            self.tracer.span("eval", sim, sim, host_start, round=round_,
+                             boundaries=boundaries, reused=reused)
+
+    def eval_cache(self, hits, misses):
+        """Per-client Eq. 1 accuracy cache traffic (eval_cache > 0)."""
+        self.metrics.counter("eval_cache_hits").inc(hits)
+        self.metrics.counter("eval_cache_misses").inc(misses)
+
+    def failure(self, client, sim):
+        """A mid-round failure: the attempt's work was discarded by the
+        availability model before reaching the server."""
+        self.metrics.counter("failures").inc()
+        if self.tracer:
+            self.tracer.event("failure", sim, client)
+
+    @contextmanager
+    def timed(self, name, *, sim=None, client=None, **tags):
+        """Host-timed span around a code block (codec encodes etc.)."""
+        h0 = self.host_now()
+        try:
+            yield
+        finally:
+            self.metrics.counter(f"{name}_calls").inc()
+            if self.tracer:
+                self.tracer.span(name, sim, sim, h0, client=client, **tags)
+
+    def profile_start(self):
+        """Start the opt-in device profiler (``cfg.jax_profile`` = a
+        trace directory, TensorBoard-loadable); no-op otherwise.  The
+        batched engine brackets its hot loop with start/stop directly so
+        the loop body needs no extra indentation level."""
+        if self.cfg.jax_profile:
+            import jax
+            jax.profiler.start_trace(self.cfg.jax_profile)
+
+    def profile_stop(self):
+        if self.cfg.jax_profile:
+            import jax
+            jax.profiler.stop_trace()
+
+    @contextmanager
+    def jax_profile(self):
+        """``profile_start``/``profile_stop`` as a context manager."""
+        self.profile_start()
+        try:
+            yield
+        finally:
+            self.profile_stop()
+
+    # ------------------------------------------------------- finish ---
+
+    def finish(self, result=None):
+        """Seal the run: fill the compile gauge, export configured trace
+        files, attach ``metrics``/``trace_path`` to the ``RunResult``,
+        and print the summary if asked.  Returns the metrics snapshot."""
+        self.metrics.gauge("jit_compiles").set(
+            compile_tracking.compile_count() - self._compiles0)
+        if self.tracer is not None:
+            self.metrics.counter("trace_events").inc(
+                len(self.tracer.events))
+            if self.tracer.dropped:
+                self.metrics.counter("trace_events_dropped").inc(
+                    self.tracer.dropped)
+        snap = self.metrics.snapshot() if self.cfg.metrics else None
+        trace_path = None
+        if self.tracer is not None:
+            if self.cfg.trace_jsonl:
+                trace_path = write_jsonl(self.tracer, self.cfg.trace_jsonl,
+                                         self.meta)
+            if self.cfg.chrome_trace:
+                p = write_chrome_trace(self.tracer, self.cfg.chrome_trace,
+                                       self.meta)
+                trace_path = trace_path or p
+        if result is not None:
+            result.metrics = snap
+            result.trace_path = trace_path
+        if self.cfg.summary:
+            print(console_summary(self, result))
+        return snap

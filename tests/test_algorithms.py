@@ -279,3 +279,20 @@ def test_runtimes_have_no_algorithm_string_branches():
         offending = [ln for ln in p.read_text().splitlines()
                      if pat.search(ln)]
         assert not offending, (p, offending)
+
+
+def test_runtimes_have_no_adhoc_instrumentation():
+    """Every instrumentation path flows through ``repro.obs``
+    (docs/OBSERVABILITY.md): no runtime module calls ``print(`` (verbose
+    progress goes through ``repro.obs.console.progress``) or reads a
+    host clock directly (``time.time(`` / ``time.perf_counter(`` —
+    host timing is ``Observer.host_now``/``timed``, so a disabled
+    observer costs literally nothing and the dual-timeline trace is the
+    one source of timing truth)."""
+    root = pathlib.Path(__file__).resolve().parents[1] / "src/repro/core"
+    pat = re.compile(r"\bprint\s*\(|\btime\.time\s*\(|"
+                     r"\btime\.perf_counter\s*\(")
+    for p in (root / "runtimes").glob("*.py"):
+        offending = [ln for ln in p.read_text().splitlines()
+                     if pat.search(ln) and not ln.lstrip().startswith("#")]
+        assert not offending, (p, offending)

@@ -172,7 +172,7 @@ class TestEntryPoints:
         import json
         p = subprocess.run(
             [sys.executable, str(ROOT / "benchmarks" / "run.py"), "--smoke",
-             "--skip", "table3,fig4,fig5,compress,scenarios"],
+             "--skip", "table3,fig4,fig5,compress,scenarios,obs"],
             cwd=tmp_path, timeout=420, capture_output=True, text=True)
         assert p.returncode == 0, p.stderr[-2000:]
         out = tmp_path / "BENCH_engine.json"
@@ -197,7 +197,7 @@ class TestEntryPoints:
         import json
         p = subprocess.run(
             [sys.executable, str(ROOT / "benchmarks" / "run.py"), "--smoke",
-             "--skip", "table3,fig4,fig5,compress,engine"],
+             "--skip", "table3,fig4,fig5,compress,engine,obs"],
             cwd=tmp_path, timeout=420, capture_output=True, text=True)
         assert p.returncode == 0, p.stderr[-2000:]
         out = tmp_path / "BENCH_scenarios.json"
@@ -218,6 +218,31 @@ class TestEntryPoints:
         assert ident["time_to_target"] is not None
         assert topk["time_to_target"] is not None
         assert topk["time_to_target"] < ident["time_to_target"]
+
+    def test_bench_obs_json_emitted(self, tmp_path):
+        """benchmarks/run.py --smoke must leave BENCH_obs.json behind
+        (schema bench-obs/v1): obs-on vs obs-off lap timings, trace event
+        counts reconciled against CommStats inside the bench itself, and
+        — the load-bearing bit — bit-exactness of the traced run."""
+        import json
+        p = subprocess.run(
+            [sys.executable, str(ROOT / "benchmarks" / "run.py"), "--smoke",
+             "--skip", "table3,fig4,fig5,compress,engine,scenarios"],
+            cwd=tmp_path, timeout=420, capture_output=True, text=True)
+        assert p.returncode == 0, p.stderr[-2000:]
+        out = tmp_path / "BENCH_obs.json"
+        assert out.exists(), p.stdout[-2000:]
+        doc = json.loads(out.read_text())
+        assert doc["schema"] == "bench-obs/v1"
+        assert doc["rows"], "no obs rows emitted"
+        for row in doc["rows"]:
+            for key in ("N", "engine", "sec_obs_off", "sec_obs_on",
+                        "overhead_pct", "trace_events", "jit_compiles",
+                        "bit_exact_with_obs", "uploads", "total_wire_mb"):
+                assert key in row, f"missing {key}"
+            assert row["bit_exact_with_obs"] is True
+            assert row["trace_events"] > 0
+            assert np.isfinite(row["sec_obs_on"])
 
     @pytest.mark.slow
     def test_benchmarks_smoke_all_sections(self):

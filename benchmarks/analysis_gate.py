@@ -1,0 +1,60 @@
+"""The [analysis] smoke section: run the static-analysis gate, emit
+``BENCH_analysis.json`` (schema ``analysis-report/v1``).
+
+Unlike the perf sections this one measures the *source tree*, so it
+always analyzes the repo the benchmark script lives in (never the
+cwd — tier-1 runs the smoke from a temp directory), against the
+checked-in baseline.  Tier-1 (tests/test_public_api.py) asserts the
+emitted report has ≥8 rules and zero unsuppressed findings; the gate
+itself stays non-fatal here so one regression doesn't hide the other
+sections' artifacts.
+
+    PYTHONPATH=src python -m benchmarks.analysis_gate [--json OUT]
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import sys
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+
+REPO = os.path.abspath(os.path.join(os.path.dirname(__file__), ".."))
+
+
+def run(out_json=None):
+    from repro.analysis import (AnalysisConfig, collect_stats,
+                                console_report, json_report, run_analysis)
+
+    paths = tuple(os.path.join(REPO, p)
+                  for p in ("src/repro", "benchmarks", "examples"))
+    baseline = os.path.join(REPO, ".analysis-baseline.json")
+    report = run_analysis(AnalysisConfig(
+        paths=paths, root=REPO,
+        baseline=baseline if os.path.exists(baseline) else None))
+    stats = collect_stats(os.path.join(REPO, "tests"), REPO)
+    print(console_report(report))
+    pt = stats["property_tests"]
+    print(f"property tests (@given): {pt['total']}"
+          + (f" — ALL shim-skipped (hypothesis not installed)"
+             if pt["shim_skipped"] else " — active"))
+
+    if out_json:
+        doc = json_report(report, stats=stats)
+        with open(out_json, "w", encoding="utf-8") as f:
+            json.dump(doc, f, indent=2)
+        print(f"wrote {out_json}")
+    return report
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--json", default="BENCH_analysis.json")
+    args = ap.parse_args()
+    report = run(out_json=args.json)
+    return 1 if report.findings else 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

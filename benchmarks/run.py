@@ -10,6 +10,7 @@ Sections:
   [engine]   batched async engine events/sec + accuracy at N up to 1024
   [scenarios] repro.sim scenario x algorithm x codec time-to-accuracy
   [obs]      repro.obs tracing/metrics overhead + trace-export checks
+  [analysis] repro.analysis static gate over src/benchmarks/examples
   [kernels]  grad_diff_norm / linear_scan microbenchmarks
   [roofline] three-term roofline per (arch x shape) from dry-run artifacts
   [gated]    cross-pod gated-collective accounting (multi-pod artifacts)
@@ -135,6 +136,18 @@ def main() -> None:
            out_json=os.path.join(
                "artifacts" if os.path.isdir("artifacts") else "",
                "BENCH_obs.json"))
+        print()
+
+    if "analysis" not in skip:
+        print("== [analysis] static-analysis gate (repro.analysis) ==")
+        from benchmarks.analysis_gate import run as ag
+        # always emits the machine-readable BENCH_analysis.json (schema
+        # analysis-report/v1): the full rule set over the shipped tree
+        # against the checked-in baseline — tier-1 asserts zero
+        # unsuppressed findings (tests/test_public_api.py)
+        ag(out_json=os.path.join(
+            "artifacts" if os.path.isdir("artifacts") else "",
+            "BENCH_analysis.json"))
         print()
 
     if "kernels" not in skip:

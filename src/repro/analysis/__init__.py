@@ -1,0 +1,37 @@
+"""repro.analysis — JAX-aware static analysis (docs/STATIC_ANALYSIS.md).
+
+The repo's correctness contracts — golden-seed bit-exactness,
+zero-recompile reruns, byte-accurate CommStats ledgers, dead-branch obs
+hooks — rest on source-level JAX discipline no unit test can witness.
+This package enforces them mechanically: an AST rule registry mirroring
+``repro.algorithms``/``repro.sim`` (``get_rule`` / ``register_rule`` /
+``available_rules``), a two-pass engine with per-rule scopes, inline
+``# flcheck: ignore[rule]`` suppressions plus a checked-in baseline,
+and console/JSON (``analysis-report/v1``) reporters behind
+``python -m repro.analysis``.
+
+    from repro.analysis import AnalysisConfig, run_analysis
+    report = run_analysis(AnalysisConfig(paths=("src/repro",)))
+    assert not report.findings
+"""
+from repro.analysis.baseline import (baseline_doc, load_baseline,
+                                     write_baseline)
+from repro.analysis.engine import (AnalysisConfig, Report, detect_root,
+                                   run_analysis)
+from repro.analysis.finding import (BASELINED, ERROR, OPEN, SUPPRESSED,
+                                    WARNING, Finding)
+from repro.analysis.registry import (available_rules, get_rule,
+                                     get_rule_class, register_rule)
+from repro.analysis.reporters import (SCHEMA, console_report, json_report,
+                                      render)
+from repro.analysis.rules.base import Rule
+from repro.analysis.stats import collect_stats
+
+__all__ = [
+    "AnalysisConfig", "Report", "Finding", "Rule",
+    "run_analysis", "detect_root",
+    "get_rule", "get_rule_class", "register_rule", "available_rules",
+    "load_baseline", "write_baseline", "baseline_doc",
+    "console_report", "json_report", "render", "collect_stats",
+    "SCHEMA", "ERROR", "WARNING", "OPEN", "SUPPRESSED", "BASELINED",
+]

@@ -1,0 +1,70 @@
+"""Checked-in baselines: intentional residue, grandfathered explicitly.
+
+A baseline entry is a line-insensitive fingerprint — (rule, path,
+normalized snippet) plus a count — so unrelated edits above a finding
+don't churn the file, while *new* occurrences of the same hazard in the
+same file still fail (the count caps how many matches are absorbed).
+
+Schema ``analysis-baseline/v1``:
+
+    {"schema": "analysis-baseline/v1",
+     "entries": [{"rule": ..., "path": ..., "snippet": ..., "count": 1}]}
+
+Regenerate with ``python -m repro.analysis --write-baseline`` after
+auditing that every remaining finding is intentional.
+"""
+from __future__ import annotations
+
+import json
+from collections import Counter
+from typing import Iterable, List, Tuple
+
+from repro.analysis.finding import BASELINED, Finding
+
+SCHEMA = "analysis-baseline/v1"
+
+
+def load_baseline(path: str) -> Counter:
+    """Fingerprint -> remaining absorb count."""
+    with open(path, "r", encoding="utf-8") as f:
+        doc = json.load(f)
+    if doc.get("schema") != SCHEMA:
+        raise ValueError(f"{path}: expected schema {SCHEMA!r}, "
+                         f"got {doc.get('schema')!r}")
+    counts: Counter = Counter()
+    for e in doc.get("entries", []):
+        key = (e["rule"], e["path"], e.get("snippet", "").strip())
+        counts[key] += int(e.get("count", 1))
+    return counts
+
+
+def apply_baseline(findings: List[Finding],
+                   counts: Counter) -> List[Finding]:
+    """Re-status findings that match a baseline entry (first come,
+    first absorbed, up to each entry's count)."""
+    remaining = Counter(counts)
+    out = []
+    for f in findings:
+        key = f.fingerprint()
+        if remaining.get(key, 0) > 0:
+            remaining[key] -= 1
+            out.append(f.with_status(BASELINED))
+        else:
+            out.append(f)
+    return out
+
+
+def baseline_doc(findings: Iterable[Finding]) -> dict:
+    """Aggregate open findings into a fresh baseline document."""
+    counts: Counter = Counter(f.fingerprint() for f in findings)
+    entries = [{"rule": rule, "path": path, "snippet": snippet, "count": n}
+               for (rule, path, snippet), n in sorted(counts.items())]
+    return {"schema": SCHEMA, "entries": entries}
+
+
+def write_baseline(findings: Iterable[Finding], path: str) -> int:
+    doc = baseline_doc(findings)
+    with open(path, "w", encoding="utf-8") as f:
+        json.dump(doc, f, indent=2, sort_keys=False)
+        f.write("\n")
+    return len(doc["entries"])

@@ -1,0 +1,139 @@
+"""``python -m repro.analysis`` — the command-line front door.
+
+    python -m repro.analysis src/repro --format json
+    python -m repro.analysis src/repro benchmarks examples \
+        --baseline .analysis-baseline.json
+    python -m repro.analysis --list-rules
+    python -m repro.analysis src/repro --stats
+    python -m repro.analysis src/repro --write-baseline
+
+Exit code 1 when unsuppressed findings at/above ``--fail-on`` remain,
+0 otherwise — wire it straight into CI.
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import sys
+from typing import Optional, Sequence
+
+from repro.analysis.baseline import write_baseline
+from repro.analysis.engine import AnalysisConfig, detect_root, run_analysis
+from repro.analysis.registry import available_rules, get_rule
+from repro.analysis.reporters import render
+from repro.analysis.stats import collect_stats
+
+DEFAULT_BASELINE = ".analysis-baseline.json"
+
+
+def _list_rules() -> str:
+    out = []
+    for name in available_rules():
+        rule = get_rule(name)
+        scope = ", ".join(rule.scope) if rule.scope else "all files"
+        out.append(f"{name} [{rule.severity}] ({scope})")
+        out.append(f"    {rule.description}")
+        if rule.example:
+            for ln in rule.example.splitlines():
+                out.append(f"    | {ln}")
+    return "\n".join(out)
+
+
+def main(argv: Optional[Sequence[str]] = None) -> int:
+    ap = argparse.ArgumentParser(
+        prog="python -m repro.analysis",
+        description="JAX-aware static analysis for the repro codebase "
+                    "(docs/STATIC_ANALYSIS.md)")
+    ap.add_argument("paths", nargs="*", default=[],
+                    help="files/directories to analyze (default: src/repro "
+                         "under the detected repo root)")
+    ap.add_argument("--format", choices=("console", "json"),
+                    default="console")
+    ap.add_argument("--rules", default="",
+                    help="comma list of rule names (default: all)")
+    ap.add_argument("--list-rules", action="store_true",
+                    help="print the rule catalog and exit")
+    ap.add_argument("--baseline", default=None,
+                    help=f"baseline file (default: {DEFAULT_BASELINE} "
+                         f"at the repo root when present; 'none' disables)")
+    ap.add_argument("--write-baseline", action="store_true",
+                    help="write the open findings as the new baseline "
+                         "and exit 0")
+    ap.add_argument("--no-suppress", action="store_true",
+                    help="report inline-suppressed findings as open")
+    ap.add_argument("--everywhere", action="store_true",
+                    help="ignore per-rule scopes (run every rule on "
+                         "every file)")
+    ap.add_argument("--stats", action="store_true",
+                    help="include suite-shape stats (distinct "
+                         "hypothesis-shim skip accounting)")
+    ap.add_argument("--tests-dir", default=None,
+                    help="tests directory for --stats (default: "
+                         "<root>/tests)")
+    ap.add_argument("--show-suppressed", action="store_true",
+                    help="console format: also print suppressed/"
+                         "baselined findings")
+    ap.add_argument("--fail-on", choices=("error", "warning", "never"),
+                    default="error",
+                    help="exit 1 when unsuppressed findings at/above "
+                         "this severity remain (default: error)")
+    ap.add_argument("--output", default=None,
+                    help="write the report to a file instead of stdout")
+    args = ap.parse_args(argv)
+
+    if args.list_rules:
+        print(_list_rules())
+        return 0
+
+    paths = list(args.paths)
+    root = detect_root(paths or [os.getcwd()])
+    if not paths:
+        default = os.path.join(root, "src", "repro")
+        if not os.path.isdir(default):
+            ap.error("no paths given and no src/repro under the "
+                     "detected root")
+        paths = [default]
+
+    baseline = args.baseline
+    if baseline is None:
+        cand = os.path.join(root, DEFAULT_BASELINE)
+        baseline = cand if os.path.exists(cand) else None
+    elif baseline.lower() == "none":
+        baseline = None
+
+    rules = tuple(r.strip() for r in args.rules.split(",") if r.strip())
+    report = run_analysis(AnalysisConfig(
+        paths=tuple(paths), rules=rules, baseline=baseline, root=root,
+        respect_scope=not args.everywhere,
+        respect_suppressions=not args.no_suppress))
+
+    if args.write_baseline:
+        target = (args.baseline
+                  if args.baseline and args.baseline.lower() != "none"
+                  else os.path.join(root, DEFAULT_BASELINE))
+        n = write_baseline(report.findings, target)
+        print(f"wrote {n} baseline entr{'y' if n == 1 else 'ies'} "
+              f"({len(report.findings)} finding(s)) to {target}")
+        return 0
+
+    stats = (collect_stats(args.tests_dir or os.path.join(root, "tests"),
+                           root)
+             if args.stats else None)
+    text = render(report, args.format, stats=stats,
+                  show_suppressed=args.show_suppressed)
+    if args.output:
+        with open(args.output, "w", encoding="utf-8") as f:
+            f.write(text + "\n")
+    else:
+        print(text)
+
+    if args.fail_on == "never":
+        return 0
+    gate = (report.findings if args.fail_on == "warning"
+            else report.open_errors())
+    return 1 if gate else 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -1,0 +1,160 @@
+"""The analysis engine: parse once, two rule passes, three statuses.
+
+``run_analysis(AnalysisConfig(paths=("src/repro",)))`` walks the path
+set, parses each ``.py`` exactly once into a ``ParsedModule``, runs
+every selected rule's ``collect`` pass (project-wide context), then its
+``check`` pass, and finally re-statuses findings through the inline
+suppressions and the optional baseline file.  Paths in findings are
+relative to the detected repo root (nearest ancestor with a
+``pyproject.toml``/``.git``) so baselines are stable under any cwd.
+"""
+from __future__ import annotations
+
+import os
+from dataclasses import dataclass, field
+from typing import Dict, List, Optional, Sequence, Tuple
+
+from repro.analysis.baseline import apply_baseline, load_baseline
+from repro.analysis.finding import (BASELINED, ERROR, OPEN, SUPPRESSED,
+                                    Finding)
+from repro.analysis.registry import available_rules, get_rule
+from repro.analysis.source import ParsedModule
+from repro.analysis.suppress import is_suppressed, parse_suppressions
+
+_SKIP_DIRS = {"__pycache__", ".git", ".venv", "node_modules", "build",
+              "dist", ".eggs"}
+
+
+@dataclass
+class AnalysisConfig:
+    paths: Sequence[str]
+    rules: Sequence[str] = ()                  # () = every registered rule
+    baseline: Optional[str] = None             # analysis-baseline/v1 file
+    root: Optional[str] = None                 # override root detection
+    respect_scope: bool = True                 # False: run rules everywhere
+    respect_suppressions: bool = True
+    severity_overrides: Dict[str, str] = field(default_factory=dict)
+
+
+@dataclass
+class Report:
+    root: str
+    paths: Tuple[str, ...]
+    rules: Tuple[object, ...]                  # rule instances, name-sorted
+    files_analyzed: int
+    findings: List[Finding]                    # status == open
+    suppressed: List[Finding]
+    baselined: List[Finding]
+
+    @property
+    def all_findings(self) -> List[Finding]:
+        return sorted(self.findings + self.suppressed + self.baselined,
+                      key=lambda f: (f.path, f.line, f.rule))
+
+    def by_rule(self) -> Dict[str, int]:
+        out: Dict[str, int] = {}
+        for f in self.findings:
+            out[f.rule] = out.get(f.rule, 0) + 1
+        return out
+
+    def open_errors(self) -> List[Finding]:
+        return [f for f in self.findings if f.severity == ERROR]
+
+
+def detect_root(paths: Sequence[str]) -> str:
+    """Nearest ancestor of the first path carrying a repo marker; falls
+    back to the path's own directory.  Keeps finding paths (and thus
+    baselines) stable no matter where the CLI is invoked from."""
+    start = os.path.abspath(paths[0] if paths else os.getcwd())
+    cur = start if os.path.isdir(start) else os.path.dirname(start)
+    while True:
+        if any(os.path.exists(os.path.join(cur, m))
+               for m in ("pyproject.toml", ".git", "setup.py")):
+            return cur
+        parent = os.path.dirname(cur)
+        if parent == cur:
+            return (start if os.path.isdir(start)
+                    else os.path.dirname(start))
+        cur = parent
+
+
+def _collect_files(paths: Sequence[str]) -> List[str]:
+    files: List[str] = []
+    seen = set()
+    for p in paths:
+        p = os.path.abspath(p)
+        if os.path.isfile(p):
+            cands = [p]
+        else:
+            cands = []
+            for dirpath, dirnames, filenames in os.walk(p):
+                dirnames[:] = sorted(d for d in dirnames
+                                     if d not in _SKIP_DIRS)
+                cands.extend(os.path.join(dirpath, f)
+                             for f in sorted(filenames)
+                             if f.endswith(".py"))
+        for c in cands:
+            if c not in seen:
+                seen.add(c)
+                files.append(c)
+    return files
+
+
+def run_analysis(config: AnalysisConfig) -> Report:
+    rule_names = tuple(config.rules) or available_rules()
+    rules = [get_rule(n) for n in rule_names]
+    root = os.path.abspath(config.root or detect_root(config.paths))
+
+    modules: List[ParsedModule] = []
+    raw: List[Finding] = []
+    files = _collect_files(config.paths)
+    for path in files:
+        rel = os.path.relpath(path, root).replace(os.sep, "/")
+        try:
+            with open(path, "r", encoding="utf-8") as f:
+                src = f.read()
+            modules.append(ParsedModule(path, rel, src))
+        except (SyntaxError, UnicodeDecodeError) as e:
+            line = getattr(e, "lineno", 0) or 0
+            raw.append(Finding(rule="syntax-error", path=rel, line=line,
+                               message=f"file does not parse: {e}",
+                               severity=ERROR))
+
+    for rule in rules:
+        for mod in modules:
+            if rule.applies_to(mod.rel,
+                               respect_scope=config.respect_scope):
+                rule.collect(mod)
+    for rule in rules:
+        sev = config.severity_overrides.get(rule.name)
+        for mod in modules:
+            if not rule.applies_to(mod.rel,
+                                   respect_scope=config.respect_scope):
+                continue
+            for f in rule.check(mod):
+                raw.append(f if sev is None else f.with_severity(sev))
+
+    raw.sort(key=lambda f: (f.path, f.line, f.rule))
+
+    if config.respect_suppressions:
+        sup_by_path = {m.rel: parse_suppressions(m.lines) for m in modules}
+        raw = [f.with_status(SUPPRESSED)
+               if is_suppressed(sup_by_path.get(f.path, {}), f.rule, f.line)
+               else f
+               for f in raw]
+
+    if config.baseline and os.path.exists(config.baseline):
+        counts = load_baseline(config.baseline)
+        opens = [f for f in raw if f.status == OPEN]
+        rebased = iter(apply_baseline(opens, counts))
+        raw = [next(rebased) if f.status == OPEN else f for f in raw]
+
+    return Report(
+        root=root,
+        paths=tuple(os.path.abspath(p) for p in config.paths),
+        rules=tuple(rules),
+        files_analyzed=len(modules),
+        findings=[f for f in raw if f.status == OPEN],
+        suppressed=[f for f in raw if f.status == SUPPRESSED],
+        baselined=[f for f in raw if f.status == BASELINED],
+    )

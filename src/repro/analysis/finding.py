@@ -1,0 +1,54 @@
+"""Structured findings — the unit of currency of ``repro.analysis``.
+
+A ``Finding`` is one rule violation at one source location.  Findings
+are value objects: the engine produces them, the suppression and
+baseline passes re-status them (``open`` → ``suppressed`` /
+``baselined``), and the reporters serialize them.  The *fingerprint*
+(rule, path, normalized snippet) is deliberately line-insensitive so a
+checked-in baseline survives unrelated edits above the finding.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass, field, replace
+from typing import Tuple
+
+ERROR = "error"
+WARNING = "warning"
+SEVERITIES = (ERROR, WARNING)
+
+OPEN = "open"
+SUPPRESSED = "suppressed"   # inline ``# flcheck: ignore[rule]``
+BASELINED = "baselined"     # matched an entry in the baseline file
+
+
+@dataclass(frozen=True)
+class Finding:
+    """One rule violation: where, what, and how loud."""
+    rule: str
+    path: str           # posix path relative to the analysis root
+    line: int           # 1-based line of the offending node
+    message: str
+    snippet: str = ""   # the offending source line, stripped
+    severity: str = ERROR
+    status: str = OPEN
+
+    def fingerprint(self) -> Tuple[str, str, str]:
+        """Line-insensitive identity used for baseline matching."""
+        return (self.rule, self.path, self.snippet.strip())
+
+    def with_status(self, status: str) -> "Finding":
+        return replace(self, status=status)
+
+    def with_severity(self, severity: str) -> "Finding":
+        if severity not in SEVERITIES:
+            raise ValueError(f"unknown severity {severity!r}; "
+                             f"expected one of {SEVERITIES}")
+        return replace(self, severity=severity)
+
+    def to_dict(self) -> dict:
+        return {"rule": self.rule, "path": self.path, "line": self.line,
+                "severity": self.severity, "message": self.message,
+                "snippet": self.snippet, "status": self.status}
+
+    def location(self) -> str:
+        return f"{self.path}:{self.line}"

@@ -1,0 +1,87 @@
+"""String registry for analysis rules.
+
+Mirrors ``repro.algorithms.registry`` / ``repro.sim.registry``: builtin
+rules load lazily on first lookup, a third-party registration made
+*before* the builtin load wins (a deliberate override survives), and an
+unknown name fails loudly listing what is registered.
+
+The registry stores rule *classes*; ``get_rule`` returns a fresh
+instance so per-run rule state (the two-pass rules keep a collect-phase
+map) never leaks between analyses.
+"""
+from __future__ import annotations
+
+import importlib
+from typing import Dict, Tuple, Type
+
+_REGISTRY: Dict[str, type] = {}
+_BUILTIN_OWNED: set = set()
+_BUILTIN_MODULES = (
+    "repro.analysis.rules.jax_rules",
+    "repro.analysis.rules.determinism",
+    "repro.analysis.rules.hygiene",
+    "repro.analysis.rules.architecture",
+)
+_builtins_loaded = False
+
+
+def _ensure_builtins() -> None:
+    global _builtins_loaded
+    if not _builtins_loaded:
+        for mod in _BUILTIN_MODULES:
+            importlib.import_module(mod)
+        # only after every module imported cleanly: a failed import must
+        # stay retryable, not poison the registry for the process
+        _builtins_loaded = True
+
+
+def register_rule(rule_cls: type, *, overwrite: bool = False) -> type:
+    """Register a ``Rule`` subclass under ``rule_cls.name``.  Usable as a
+    class decorator; re-registration is an error unless ``overwrite``
+    (keeps typo'd duplicates loud)."""
+    name = rule_cls.name
+    if not name:
+        raise ValueError(f"{rule_cls.__name__} has no rule name")
+    if not overwrite and name in _REGISTRY and name not in _BUILTIN_OWNED:
+        raise ValueError(f"analysis rule {name!r} already registered")
+    _REGISTRY[name] = rule_cls
+    _BUILTIN_OWNED.discard(name)
+    return rule_cls
+
+
+def _register_builtin(rule_cls: type) -> type:
+    """Builtin registration: idempotent across re-imports and never
+    clobbers a third-party entry registered before the lazy load."""
+    name = rule_cls.name
+    if name in _REGISTRY and name not in _BUILTIN_OWNED:
+        return rule_cls
+    _REGISTRY[name] = rule_cls
+    _BUILTIN_OWNED.add(name)
+    return rule_cls
+
+
+def get_rule(name: str):
+    """Resolve a rule name to a fresh rule instance; raises ValueError
+    naming the registered set, so CLI typos fail with the fix inline."""
+    _ensure_builtins()
+    try:
+        return _REGISTRY[name]()
+    except KeyError:
+        raise ValueError(
+            f"unknown analysis rule {name!r}; registered rules: "
+            f"{', '.join(available_rules())}") from None
+
+
+def get_rule_class(name: str) -> Type:
+    _ensure_builtins()
+    if name not in _REGISTRY:
+        raise ValueError(
+            f"unknown analysis rule {name!r}; registered rules: "
+            f"{', '.join(available_rules())}")
+    return _REGISTRY[name]
+
+
+def available_rules() -> Tuple[str, ...]:
+    """Registered rule names, sorted (stable across entry paths)."""
+    _ensure_builtins()
+    return tuple(sorted(_REGISTRY))

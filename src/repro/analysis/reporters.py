@@ -1,0 +1,87 @@
+"""Reporters: human console output and the ``analysis-report/v1`` JSON.
+
+The JSON document is the machine contract — ``benchmarks/run.py
+--smoke`` emits it as ``BENCH_analysis.json`` and tier-1
+(tests/test_public_api.py) asserts ``summary.open == 0`` on the shipped
+tree, the same shape the other BENCH artifacts follow.
+"""
+from __future__ import annotations
+
+import json
+from typing import Optional
+
+from repro.analysis.engine import Report
+
+SCHEMA = "analysis-report/v1"
+
+
+def console_report(report: Report, *, show_suppressed: bool = False) -> str:
+    out = []
+    for f in report.findings:
+        out.append(f"{f.location()}: {f.severity}[{f.rule}] {f.message}")
+        if f.snippet:
+            out.append(f"    {f.snippet}")
+    if show_suppressed:
+        for f in report.suppressed + report.baselined:
+            out.append(f"{f.location()}: {f.status}[{f.rule}] {f.message}")
+    by_rule = report.by_rule()
+    detail = (" (" + ", ".join(f"{k}: {v}"
+                               for k, v in sorted(by_rule.items())) + ")"
+              if by_rule else "")
+    out.append(
+        f"{len(report.findings)} finding(s){detail}, "
+        f"{len(report.suppressed)} suppressed, "
+        f"{len(report.baselined)} baselined — "
+        f"{report.files_analyzed} files, {len(report.rules)} rules")
+    return "\n".join(out)
+
+
+def json_report(report: Report, *, stats: Optional[dict] = None) -> dict:
+    doc = {
+        "schema": SCHEMA,
+        "root": report.root,
+        "files_analyzed": report.files_analyzed,
+        "rules": [r.describe() for r in report.rules],
+        "findings": [f.to_dict() for f in report.findings],
+        "suppressed": [f.to_dict() for f in report.suppressed],
+        "baselined": [f.to_dict() for f in report.baselined],
+        "summary": {
+            "open": len(report.findings),
+            "open_errors": len(report.open_errors()),
+            "suppressed": len(report.suppressed),
+            "baselined": len(report.baselined),
+            "by_rule": report.by_rule(),
+        },
+    }
+    if stats is not None:
+        doc["stats"] = stats
+    return doc
+
+
+def render(report: Report, fmt: str = "console", *,
+           stats: Optional[dict] = None,
+           show_suppressed: bool = False) -> str:
+    if fmt == "json":
+        return json.dumps(json_report(report, stats=stats), indent=2)
+    if fmt == "console":
+        text = console_report(report, show_suppressed=show_suppressed)
+        if stats is not None:
+            text += "\n" + console_stats(stats)
+        return text
+    raise ValueError(f"unknown format {fmt!r}; expected console or json")
+
+
+def console_stats(stats: dict) -> str:
+    pt = stats.get("property_tests", {})
+    lines = [f"property tests (@given): {pt.get('total', 0)} across "
+             f"{len(pt.get('by_file', {}))} files"]
+    if pt.get("shim_skipped"):
+        lines.append(
+            f"  hypothesis NOT installed: all {pt['shim_skipped']} skip "
+            f"via tests/_hypothesis_shim.py — reported here distinctly, "
+            f"not folded into pytest's skip count")
+    elif pt.get("total"):
+        lines.append("  hypothesis installed: all property tests active")
+    for path, n in sorted(pt.get("by_file", {}).items()):
+        lines.append(f"    {path}: {n}")
+    return "\n".join(lines)

@@ -1,0 +1,7 @@
+"""Builtin analysis rules.
+
+Each module registers its rules at import time via
+``repro.analysis.registry._register_builtin``; the registry imports
+these lazily on first lookup (see ``_BUILTIN_MODULES`` there), so a
+third-party ``register_rule`` call made first deliberately wins.
+"""

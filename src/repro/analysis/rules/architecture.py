@@ -1,0 +1,111 @@
+"""Architecture rules: the registry inversion stays inverted.
+
+PR 3's core claim is that runtimes are algorithm-agnostic (zero name
+branches) and every pluggable axis resolves through its string registry
+— so a pre-registered override wins and construction-time validation
+applies.  These rules keep both properties mechanical.
+"""
+from __future__ import annotations
+
+import ast
+from typing import Iterator
+
+from repro.analysis.finding import Finding
+from repro.analysis.registry import _register_builtin
+from repro.analysis.rules.base import Rule
+from repro.analysis.source import ParsedModule
+
+_ALG_NAMES = {"afl", "vafl", "eaflm", "fedavg", "fedasync",
+              "fedasync_poly", "fedasync_const"}
+_ALG_VARS = {"alg", "algorithm"}
+
+# builtin modules that live behind a string registry; importing them
+# directly skips override resolution and construction-time validation
+_REGISTRY_BACKED = {
+    "repro.algorithms.builtin": "get_algorithm()",
+    "repro.algorithms.fedasync": "get_algorithm()",
+    "repro.sim.compute": "repro.sim.build_model()/ScenarioConfig",
+    "repro.sim.network": "repro.sim.build_model()/ScenarioConfig",
+    "repro.sim.availability": "repro.sim.build_model()/ScenarioConfig",
+}
+_SIM_SUBMODULES = {"compute", "network", "availability"}
+
+
+@_register_builtin
+class AlgStringBranch(Rule):
+    name = "alg-string-branch"
+    description = ("algorithm-name comparison inside a runtime — runtimes "
+                   "are algorithm-agnostic; behavior differences belong "
+                   "on the UploadPolicy/Aggregator protocol")
+    scope = ("core/runtimes", "core/server.py")
+    example = "if run_cfg.algorithm == \"vafl\":   # four-way surgery returns"
+
+    @staticmethod
+    def _terminal(node) -> str:
+        if isinstance(node, ast.Name):
+            return node.id
+        if isinstance(node, ast.Attribute):
+            return node.attr
+        return ""
+
+    def check(self, mod: ParsedModule) -> Iterator[Finding]:
+        for node in mod.walk():
+            if not isinstance(node, ast.Compare):
+                continue
+            operands = [node.left] + list(node.comparators)
+            lit = next((o.value for o in operands
+                        if isinstance(o, ast.Constant)
+                        and o.value in _ALG_NAMES), None)
+            eqish = any(isinstance(op, (ast.Eq, ast.NotEq))
+                        for op in node.ops)
+            inish = any(isinstance(op, (ast.In, ast.NotIn))
+                        for op in node.ops)
+            named = any(self._terminal(o) in _ALG_VARS for o in operands)
+            if lit is not None and (eqish or inish):
+                yield self.finding(
+                    mod, node,
+                    f"comparison against algorithm name {lit!r} in a "
+                    f"runtime — push the difference onto the "
+                    f"UploadPolicy/Aggregator protocol "
+                    f"(docs/ARCHITECTURE.md)")
+            elif named and eqish:
+                yield self.finding(
+                    mod, node,
+                    "algorithm-name equality branch in a runtime — "
+                    "runtimes must stay algorithm-agnostic; dispatch "
+                    "through the Algorithm protocol instead")
+
+
+@_register_builtin
+class RegistryBypass(Rule):
+    name = "registry-bypass"
+    description = ("direct import of a registry-backed builtin module — "
+                   "resolve through the registry so overrides and "
+                   "validation apply")
+    # the registries themselves (and their sibling builtins) may import
+    # their own modules; everything else goes through the string keys
+    exempt = ("repro/algorithms/", "repro/sim/")
+    example = "from repro.algorithms.builtin import VAFLPolicy"
+
+    def check(self, mod: ParsedModule) -> Iterator[Finding]:
+        for node in mod.walk():
+            if isinstance(node, ast.ImportFrom):
+                if node.module in _REGISTRY_BACKED:
+                    yield self._bypass(mod, node, node.module)
+                elif node.module == "repro.sim":
+                    for a in node.names:
+                        if a.name in _SIM_SUBMODULES:
+                            yield self._bypass(
+                                mod, node, f"repro.sim.{a.name}")
+            elif isinstance(node, ast.Import):
+                for a in node.names:
+                    if a.name in _REGISTRY_BACKED:
+                        yield self._bypass(mod, node, a.name)
+
+    def _bypass(self, mod, node, target: str) -> Finding:
+        via = _REGISTRY_BACKED[target]
+        return self.finding(
+            mod, node,
+            f"direct import of registry-backed {target} — resolve "
+            f"through {via} so pre-registered overrides win and unknown "
+            f"names fail at construction")

@@ -1,0 +1,86 @@
+"""The ``Rule`` protocol: what a registered analysis rule provides.
+
+A rule is a small stateful object created fresh per analysis run.  Two
+passes: ``collect`` sees every in-scope module first (project-wide
+context — e.g. which function names are donated jits), then ``check``
+yields findings per module.  Most rules only implement ``check``.
+
+``scope`` restricts a rule to path fragments ("core/runtimes" matches
+``src/repro/core/runtimes/batched.py``); ``exempt`` carves sanctioned
+locations back out (benchmarks may block_until_ready, registries may
+import their own builtins).  Fixture tests run with
+``respect_scope=False`` so every rule is exercisable on any file.
+"""
+from __future__ import annotations
+
+import ast
+from typing import Iterator, Tuple
+
+from repro.analysis.finding import ERROR, Finding
+from repro.analysis.source import ParsedModule
+
+
+class Rule:
+    name: str = ""
+    severity: str = ERROR
+    description: str = ""          # one-liner for --list-rules / the catalog
+    scope: Tuple[str, ...] = ()    # path fragments; () = every analyzed file
+    exempt: Tuple[str, ...] = ()   # path fragments carved back out of scope
+    example: str = ""              # minimal firing snippet (docs/--list-rules)
+
+    def applies_to(self, rel: str, *, respect_scope: bool = True) -> bool:
+        posix = rel.replace("\\", "/")
+        if any(frag in posix for frag in self.exempt):
+            return False
+        if not respect_scope or not self.scope:
+            return True
+        return any(frag in posix for frag in self.scope)
+
+    def collect(self, mod: ParsedModule) -> None:
+        """Pass 1 (optional): gather project-wide context."""
+
+    def check(self, mod: ParsedModule) -> Iterator[Finding]:
+        """Pass 2: yield findings for one module."""
+        raise NotImplementedError
+
+    def finding(self, mod: ParsedModule, node: ast.AST,
+                message: str) -> Finding:
+        return Finding(rule=self.name, path=mod.rel,
+                       line=getattr(node, "lineno", 0), message=message,
+                       snippet=mod.line(node), severity=self.severity)
+
+    def describe(self) -> dict:
+        return {"name": self.name, "severity": self.severity,
+                "description": self.description,
+                "scope": list(self.scope), "exempt": list(self.exempt)}
+
+
+def const_int_tuple(node: ast.AST) -> Tuple[int, ...]:
+    """Evaluate a literal int / tuple-of-ints AST node (the shapes
+    ``donate_argnums`` / ``static_argnums`` take); () when it is neither."""
+    if isinstance(node, ast.Constant) and isinstance(node.value, int):
+        return (node.value,)
+    if isinstance(node, (ast.Tuple, ast.List)):
+        out = []
+        for elt in node.elts:
+            if isinstance(elt, ast.Constant) and isinstance(elt.value, int):
+                out.append(elt.value)
+            else:
+                return ()
+        return tuple(out)
+    return ()
+
+
+def const_str_tuple(node: ast.AST) -> Tuple[str, ...]:
+    """Literal str / tuple-of-str (``static_argnames``); () otherwise."""
+    if isinstance(node, ast.Constant) and isinstance(node.value, str):
+        return (node.value,)
+    if isinstance(node, (ast.Tuple, ast.List)):
+        out = []
+        for elt in node.elts:
+            if isinstance(elt, ast.Constant) and isinstance(elt.value, str):
+                out.append(elt.value)
+            else:
+                return ()
+        return tuple(out)
+    return ()

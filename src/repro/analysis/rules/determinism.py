@@ -1,0 +1,101 @@
+"""Determinism rules: RNG and clock discipline.
+
+The golden-seed bit-exactness contract (tests/test_algorithms.py) and
+the pop-order-invariant scenario traces (repro.sim.base's counter-based
+streams) both assume no code path consults process-global mutable
+state: the global numpy/stdlib RNGs, or the host wall clock inside the
+simulation core.
+"""
+from __future__ import annotations
+
+import ast
+from typing import Iterator, Set
+
+from repro.analysis.finding import Finding
+from repro.analysis.registry import _register_builtin
+from repro.analysis.rules.base import Rule
+from repro.analysis.source import ParsedModule, call_name
+
+# explicit-generator constructors on np.random are the sanctioned path;
+# everything else on the module is the hidden global BitGenerator
+_NP_SANCTIONED = {"RandomState", "default_rng", "Generator", "SeedSequence",
+                  "PCG64", "Philox", "MT19937", "BitGenerator"}
+
+
+@_register_builtin
+class GlobalRng(Rule):
+    name = "global-rng"
+    description = ("module-level RNG (np.random.*, stdlib random) is "
+                   "process-global and order-dependent — use a seeded "
+                   "RandomState/default_rng or the counter-based streams "
+                   "in repro.sim.base")
+    # repro.sim.base IS the sanctioned stream implementation
+    exempt = ("sim/base.py",)
+    example = "noise = np.random.randn(n)   # global BitGenerator"
+
+    def check(self, mod: ParsedModule) -> Iterator[Finding]:
+        random_aliases: Set[str] = set()
+        from_random: Set[str] = set()
+        for node in mod.walk():
+            if isinstance(node, ast.Import):
+                for a in node.names:
+                    if a.name == "random":
+                        random_aliases.add(a.asname or a.name)
+            elif isinstance(node, ast.ImportFrom) and node.module == "random":
+                for a in node.names:
+                    from_random.add(a.asname or a.name)
+
+        for node in mod.walk():
+            if not isinstance(node, ast.Call):
+                continue
+            name = call_name(node)
+            if name is None:
+                continue
+            parts = name.split(".")
+            if (len(parts) == 3 and parts[0] in ("np", "numpy")
+                    and parts[1] == "random"
+                    and parts[2] not in _NP_SANCTIONED):
+                yield self.finding(
+                    mod, node,
+                    f"{name}() draws from the process-global numpy "
+                    f"BitGenerator — seed an explicit "
+                    f"np.random.RandomState/default_rng (or use "
+                    f"repro.sim.base's counter-based streams)")
+            elif len(parts) == 2 and parts[0] in random_aliases:
+                yield self.finding(
+                    mod, node,
+                    f"stdlib {name}() is process-global, unseeded state "
+                    f"— use a seeded numpy generator or "
+                    f"repro.sim.base's counter-based streams")
+            elif len(parts) == 1 and parts[0] in from_random:
+                yield self.finding(
+                    mod, node,
+                    f"{parts[0]}() (from random import ...) is the "
+                    f"process-global stdlib RNG — use a seeded numpy "
+                    f"generator or repro.sim.base's counter-based streams")
+
+
+@_register_builtin
+class WallClockInCore(Rule):
+    name = "wall-clock-in-core"
+    description = ("direct host-clock read inside core/obs — host timing "
+                   "goes through Observer.host_now/timed so the "
+                   "dual-timeline trace stays the one source of truth")
+    scope = ("repro/core/", "repro/obs/")
+    example = "t0 = time.time()   # inside a runtime"
+
+    _CLOCKS = {"time.time", "time.perf_counter", "time.monotonic",
+               "time.process_time", "time.time_ns", "time.perf_counter_ns",
+               "time.monotonic_ns", "datetime.now", "datetime.utcnow",
+               "datetime.datetime.now", "datetime.datetime.utcnow"}
+
+    def check(self, mod: ParsedModule) -> Iterator[Finding]:
+        for node in mod.walk():
+            if (isinstance(node, ast.Call)
+                    and call_name(node) in self._CLOCKS):
+                yield self.finding(
+                    mod, node,
+                    f"{call_name(node)}() reads the host clock directly — "
+                    f"route timing through Observer.host_now/timed "
+                    f"(docs/OBSERVABILITY.md) so a disabled observer "
+                    f"costs nothing and the trace stays authoritative")

@@ -1,0 +1,64 @@
+"""Hygiene rules: console and dispatch-pipeline discipline.
+
+``print`` in the simulation core bypasses the observability layer (and
+breaks machine-readable stdout contracts); a stray ``block_until_ready``
+outside benchmark code serializes the dispatch pipeline the batched
+engine works hard to keep full (docs/ASYNC_ENGINE.md).
+"""
+from __future__ import annotations
+
+import ast
+from typing import Iterator
+
+from repro.analysis.finding import WARNING, Finding
+from repro.analysis.registry import _register_builtin
+from repro.analysis.rules.base import Rule
+from repro.analysis.source import ParsedModule, call_name
+
+
+@_register_builtin
+class PrintInCore(Rule):
+    name = "print-in-core"
+    description = ("print() inside core/obs — verbose progress goes "
+                   "through repro.obs.console.progress, summaries through "
+                   "the exporters")
+    scope = ("repro/core/", "repro/obs/")
+    example = "print(f\"round {r} acc={acc}\")   # inside a runtime"
+
+    def check(self, mod: ParsedModule) -> Iterator[Finding]:
+        for node in mod.walk():
+            if (isinstance(node, ast.Call)
+                    and isinstance(node.func, ast.Name)
+                    and node.func.id == "print"):
+                yield self.finding(
+                    mod, node,
+                    "print() bypasses the observability layer — verbose "
+                    "progress is repro.obs.console.progress, structured "
+                    "output is an exporter (docs/OBSERVABILITY.md)")
+
+
+@_register_builtin
+class NakedBlockUntilReady(Rule):
+    name = "naked-block-until-ready"
+    severity = WARNING
+    description = ("block_until_ready outside benchmark code stalls the "
+                   "dispatch pipeline — let values resolve at their use "
+                   "site; timing belongs in benchmarks/")
+    exempt = ("benchmarks/",)
+    example = "jax.block_until_ready(params)   # outside benchmarks/"
+
+    def check(self, mod: ParsedModule) -> Iterator[Finding]:
+        for node in mod.walk():
+            if not isinstance(node, ast.Call):
+                continue
+            name = call_name(node)
+            hit = (name == "jax.block_until_ready"
+                   or (isinstance(node.func, ast.Attribute)
+                       and node.func.attr == "block_until_ready"))
+            if hit:
+                yield self.finding(
+                    mod, node,
+                    "block_until_ready() forces a device sync — the "
+                    "batched engine's pipelining assumes values resolve "
+                    "lazily at their use site; keep explicit syncs in "
+                    "benchmarks/ (timing) only")

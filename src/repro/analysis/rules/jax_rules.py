@@ -1,0 +1,287 @@
+"""JAX-aware rules: staged-computation hazards the test suite can't see.
+
+Three hazard classes, all rooted in how ``jax.jit`` stages Python:
+
+* a jit *built* inside a hot function re-traces (and may re-compile) on
+  every call — the repo's zero-recompile-rerun contract
+  (docs/OBSERVABILITY.md) dies silently;
+* host-side control flow on a traced value raises at trace time at
+  best, or silently specializes at worst;
+* a donated buffer is *gone* after the call — reading it again returns
+  garbage (or raises) only on some backends.
+"""
+from __future__ import annotations
+
+import ast
+from typing import Dict, Iterator, Optional, Set, Tuple
+
+from repro.analysis.finding import Finding
+from repro.analysis.registry import _register_builtin
+from repro.analysis.rules.base import (Rule, const_int_tuple,
+                                       const_str_tuple)
+from repro.analysis.source import ParsedModule, call_name, dotted_name
+
+_JIT_NAMES = {"jax.jit", "jit"}
+_STAGING_NAMES = {"jax.jit", "jax.vmap", "jax.pmap"}
+_PARTIAL_NAMES = {"partial", "functools.partial"}
+_MEMO_NAMES = {"lru_cache", "cache", "functools.lru_cache",
+               "functools.cache"}
+
+
+def parse_jit_decorator(dec: ast.AST) -> Optional[dict]:
+    """Recognize the three jit-decorator shapes and pull the static /
+    donated argument declarations out of their keywords:
+
+        @jax.jit
+        @jax.jit(static_argnames=("n",))
+        @partial(jax.jit, donate_argnums=(0, 1))
+
+    Returns None when ``dec`` is not a jit decorator."""
+    kw = []
+    if dotted_name(dec) in _JIT_NAMES:
+        pass
+    elif isinstance(dec, ast.Call) and call_name(dec) in _JIT_NAMES:
+        kw = dec.keywords
+    elif (isinstance(dec, ast.Call) and call_name(dec) in _PARTIAL_NAMES
+          and dec.args and dotted_name(dec.args[0]) in _JIT_NAMES):
+        kw = dec.keywords
+    else:
+        return None
+    out = {"static_argnums": (), "static_argnames": (), "donate_argnums": ()}
+    for k in kw:
+        if k.arg in ("static_argnums", "donate_argnums"):
+            out[k.arg] = const_int_tuple(k.value)
+        elif k.arg == "static_argnames":
+            out["static_argnames"] = const_str_tuple(k.value)
+    return out
+
+
+def _is_memoized(fn: ast.AST) -> bool:
+    """Decorated with functools.lru_cache/cache (bare or called form)."""
+    for dec in fn.decorator_list:
+        target = dec.func if isinstance(dec, ast.Call) else dec
+        if dotted_name(target) in _MEMO_NAMES:
+            return True
+    return False
+
+
+@_register_builtin
+class JitInHotPath(Rule):
+    name = "jit-in-hot-path"
+    description = ("jax.jit/vmap/pmap built inside a runtime function or "
+                   "loop — a fresh wrapper re-traces every call; hoist to "
+                   "module level or memoize the builder (lru_cache)")
+    scope = ("core/runtimes",)
+    example = "def step(f, x):\n    return jax.jit(f)(x)   # new trace/call"
+
+    def check(self, mod: ParsedModule) -> Iterator[Finding]:
+        for node in mod.walk():
+            if not (isinstance(node, ast.Call)
+                    and call_name(node) in _STAGING_NAMES):
+                continue
+            # jax.jit(jax.vmap(f)) is ONE build site: report the
+            # outermost staging call only
+            if any(isinstance(a, ast.Call)
+                   and call_name(a) in _STAGING_NAMES
+                   for a in mod.ancestors(node)):
+                continue
+            encl = mod.enclosing_functions(node)
+            if encl and any(_is_memoized(fn) for fn in encl):
+                continue    # built once per cache key: the sanctioned shape
+            if not encl and not mod.in_loop(node):
+                continue    # module-level single build
+            where = (f"inside {encl[0].name}()" if encl
+                     else "inside a module-level loop")
+            yield self.finding(
+                mod, node,
+                f"{call_name(node)} built {where}: a fresh wrapper "
+                f"re-traces on every call — hoist to module level or "
+                f"memoize the builder with functools.lru_cache")
+
+
+@_register_builtin
+class TracerLeak(Rule):
+    name = "tracer-leak"
+    description = ("float()/int()/bool() or host branching on a traced "
+                   "argument of a jitted function — fails at trace time "
+                   "or silently specializes")
+    example = ("@jax.jit\ndef f(x):\n    if x > 0:   # x is a tracer\n"
+               "        return x")
+
+    def check(self, mod: ParsedModule) -> Iterator[Finding]:
+        for fn in mod.walk():
+            if not isinstance(fn, (ast.FunctionDef, ast.AsyncFunctionDef)):
+                continue
+            spec = None
+            for dec in fn.decorator_list:
+                spec = parse_jit_decorator(dec)
+                if spec is not None:
+                    break
+            if spec is None:
+                continue
+            yield from self._check_jitted(mod, fn, spec)
+
+    def _traced_params(self, fn, spec) -> Set[str]:
+        params = [a.arg for a in fn.args.posonlyargs + fn.args.args]
+        static = set(spec["static_argnames"])
+        static |= {params[i] for i in spec["static_argnums"]
+                   if 0 <= i < len(params)}
+        traced = {p for p in params if p not in static}
+        traced |= {a.arg for a in fn.args.kwonlyargs
+                   if a.arg not in static}
+        return traced
+
+    def _check_jitted(self, mod, fn, spec) -> Iterator[Finding]:
+        traced = self._traced_params(fn, spec)
+        # one alias hop: ``y = x`` taints y too
+        for node in ast.walk(fn):
+            if (isinstance(node, ast.Assign) and len(node.targets) == 1
+                    and isinstance(node.targets[0], ast.Name)
+                    and isinstance(node.value, ast.Name)
+                    and node.value.id in traced):
+                traced.add(node.targets[0].id)
+
+        def traced_operand(expr) -> Optional[str]:
+            if isinstance(expr, ast.Name) and expr.id in traced:
+                return expr.id
+            return None
+
+        for node in ast.walk(fn):
+            if isinstance(node, ast.Call) and len(node.args) == 1:
+                cast = call_name(node)
+                leaked = traced_operand(node.args[0])
+                if cast in ("float", "int", "bool") and leaked:
+                    yield self.finding(
+                        mod, node,
+                        f"{cast}({leaked}) pulls a traced value to the "
+                        f"host inside jitted {fn.name}() — keep it a "
+                        f"jnp array, or mark the argument static")
+            elif isinstance(node, (ast.If, ast.While)):
+                leaked = self._leaky_test(node.test, traced_operand)
+                if leaked:
+                    kind = "if" if isinstance(node, ast.If) else "while"
+                    yield self.finding(
+                        mod, node,
+                        f"`{kind} {leaked} ...` branches on traced value "
+                        f"{leaked!r} inside jitted {fn.name}() — use "
+                        f"jnp.where/lax.cond, or mark it static")
+
+    @staticmethod
+    def _leaky_test(test, traced_operand) -> Optional[str]:
+        """A test that forces a traced value to a host bool: a bare
+        traced name, ``not name``, or a value comparison touching one.
+        ``is``/``is not`` stay allowed (None-structure checks resolve at
+        trace time), as do attribute reads (``x.ndim``, ``x.shape`` are
+        static on tracers)."""
+        leaked = traced_operand(test)
+        if leaked:
+            return leaked
+        if (isinstance(test, ast.UnaryOp) and isinstance(test.op, ast.Not)):
+            return traced_operand(test.operand)
+        if isinstance(test, ast.Compare):
+            if all(isinstance(op, (ast.Is, ast.IsNot)) for op in test.ops):
+                return None
+            for side in [test.left] + list(test.comparators):
+                leaked = traced_operand(side)
+                if leaked:
+                    return leaked
+        return None
+
+
+@_register_builtin
+class DonationReuse(Rule):
+    name = "donation-reuse"
+    description = ("a buffer passed through a donate_argnums position is "
+                   "read again afterwards — donated memory is invalid "
+                   "after the call")
+    example = ("new = update(state, x)   # update donates argnum 0\n"
+               "loss(state)              # state's buffer is gone")
+
+    def __init__(self):
+        # collect pass: donated-jit name -> donated positions, keyed on
+        # the bare (last-segment) name so `ops.commit_win(...)` resolves
+        # to the `commit_win` def even through a namespace handle
+        self._donated: Dict[str, Tuple[int, ...]] = {}
+
+    def collect(self, mod: ParsedModule) -> None:
+        for node in mod.walk():
+            if isinstance(node, (ast.FunctionDef, ast.AsyncFunctionDef)):
+                for dec in node.decorator_list:
+                    spec = parse_jit_decorator(dec)
+                    if spec and spec["donate_argnums"]:
+                        self._donated[node.name] = spec["donate_argnums"]
+            elif (isinstance(node, ast.Assign) and len(node.targets) == 1
+                  and isinstance(node.targets[0], ast.Name)
+                  and isinstance(node.value, ast.Call)
+                  and call_name(node.value) in _JIT_NAMES):
+                for k in node.value.keywords:
+                    if k.arg == "donate_argnums":
+                        nums = const_int_tuple(k.value)
+                        if nums:
+                            self._donated[node.targets[0].id] = nums
+
+    @staticmethod
+    def _assigned_names(stmt: ast.stmt) -> Set[str]:
+        out: Set[str] = set()
+        targets = []
+        if isinstance(stmt, ast.Assign):
+            targets = stmt.targets
+        elif isinstance(stmt, (ast.AugAssign, ast.AnnAssign)):
+            targets = [stmt.target]
+        for t in targets:
+            for n in ast.walk(t):
+                if isinstance(n, ast.Name):
+                    out.add(n.id)
+        return out
+
+    def check(self, mod: ParsedModule) -> Iterator[Finding]:
+        for node in mod.walk():
+            if not isinstance(node, ast.Call):
+                continue
+            fname = None
+            if isinstance(node.func, ast.Name):
+                fname = node.func.id
+            elif isinstance(node.func, ast.Attribute):
+                fname = node.func.attr
+            if fname not in self._donated:
+                continue
+            stmt = mod.enclosing_statement(node)
+            rebound = self._assigned_names(stmt)
+            encl = mod.enclosing_functions(node)
+            scope_root = encl[0] if encl else mod.tree
+            end = getattr(stmt, "end_lineno", stmt.lineno)
+            for pos in self._donated[fname]:
+                if pos >= len(node.args):
+                    continue
+                arg = node.args[pos]
+                if not isinstance(arg, ast.Name) or arg.id in rebound:
+                    continue    # immediately rebound: the sanctioned shape
+                use = self._first_use_after(scope_root, arg.id, end)
+                if use is not None:
+                    yield self.finding(
+                        mod, use,
+                        f"{arg.id!r} was donated to {fname}() on line "
+                        f"{stmt.lineno} (donate_argnums={pos}) and read "
+                        f"again here — its buffer is invalid after the "
+                        f"call; rebind the result or drop the donation")
+
+    @staticmethod
+    def _first_use_after(scope_root, name: str, after_line: int):
+        """Earliest Load of ``name`` past ``after_line`` — unless a Store
+        rebinds it first.  Line-ordered approximation: good enough for
+        straight-line code, conservative about loop back-edges."""
+        first_load = first_store = None
+        for n in ast.walk(scope_root):
+            if (isinstance(n, ast.Name) and n.id == name
+                    and n.lineno > after_line):
+                if isinstance(n.ctx, ast.Load):
+                    if first_load is None or n.lineno < first_load.lineno:
+                        first_load = n
+                else:
+                    if first_store is None or n.lineno < first_store.lineno:
+                        first_store = n
+        if first_load is None:
+            return None
+        if first_store is not None and first_store.lineno < first_load.lineno:
+            return None
+        return first_load

@@ -1,0 +1,96 @@
+"""Parsed source modules — one AST walk's worth of shared context.
+
+``ParsedModule`` wraps a file's AST with the structures every rule
+needs but none should rebuild: the raw source lines, a child→parent
+map (stdlib ``ast`` has no parent links), and small query helpers
+(enclosing functions, loop membership, dotted-name resolution).  The
+engine parses each file exactly once and hands the same instance to
+every rule.
+"""
+from __future__ import annotations
+
+import ast
+from typing import Iterator, List, Optional
+
+
+def dotted_name(node: ast.AST) -> Optional[str]:
+    """``jax.jit`` / ``np.random.rand`` as a string, or None when the
+    expression is not a plain Name/Attribute chain (e.g. a call result:
+    ``np.random.RandomState(0).choice`` resolves to None)."""
+    parts: List[str] = []
+    while isinstance(node, ast.Attribute):
+        parts.append(node.attr)
+        node = node.value
+    if isinstance(node, ast.Name):
+        parts.append(node.id)
+        return ".".join(reversed(parts))
+    return None
+
+
+def call_name(node: ast.Call) -> Optional[str]:
+    return dotted_name(node.func)
+
+
+class ParsedModule:
+    """One parsed source file plus the shared lookup structures."""
+
+    def __init__(self, path: str, rel: str, source: str):
+        self.path = path          # absolute path on disk
+        self.rel = rel            # posix path relative to the analysis root
+        self.source = source
+        self.lines = source.splitlines()
+        self.tree = ast.parse(source, filename=path)
+        self._parents = {}
+        for parent in ast.walk(self.tree):
+            for child in ast.iter_child_nodes(parent):
+                self._parents[child] = parent
+
+    # ------------------------------------------------------------ queries ---
+    def walk(self) -> Iterator[ast.AST]:
+        return ast.walk(self.tree)
+
+    def parent(self, node: ast.AST) -> Optional[ast.AST]:
+        return self._parents.get(node)
+
+    def ancestors(self, node: ast.AST) -> Iterator[ast.AST]:
+        cur = self._parents.get(node)
+        while cur is not None:
+            yield cur
+            cur = self._parents.get(cur)
+
+    def enclosing_functions(self, node: ast.AST) -> List[ast.AST]:
+        """Enclosing def/async-def nodes, innermost first.  A decorator
+        expression is attributed to the *surrounding* scope, not to the
+        function it decorates (``@jax.jit`` on a module-level def is
+        module-level code)."""
+        out = []
+        prev = node
+        for anc in self.ancestors(node):
+            if isinstance(anc, (ast.FunctionDef, ast.AsyncFunctionDef)):
+                if prev in anc.decorator_list:
+                    prev = anc
+                    continue    # we got here via the decorator expression
+                out.append(anc)
+            prev = anc
+        return out
+
+    def enclosing_statement(self, node: ast.AST) -> ast.stmt:
+        """The innermost statement containing ``node`` (the node itself
+        when it already is one)."""
+        cur = node
+        while not isinstance(cur, ast.stmt):
+            nxt = self._parents.get(cur)
+            if nxt is None:
+                break
+            cur = nxt
+        return cur
+
+    def in_loop(self, node: ast.AST) -> bool:
+        return any(isinstance(a, (ast.For, ast.AsyncFor, ast.While))
+                   for a in self.ancestors(node))
+
+    def line(self, node: ast.AST) -> str:
+        lineno = getattr(node, "lineno", 0)
+        if 1 <= lineno <= len(self.lines):
+            return self.lines[lineno - 1].strip()
+        return ""

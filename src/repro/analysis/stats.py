@@ -1,0 +1,68 @@
+"""``--stats``: suite-shape facts the analyzer can state mechanically.
+
+The one that bit in practice: without the optional ``hypothesis`` extra
+the ``@given`` property tests skip through ``tests/_hypothesis_shim.py``
+— and pytest folds them into the generic skip count, so "8 skipped"
+hides whether property coverage ran at all.  The analyzer counts the
+``@given`` tests at the source level and reports them distinctly,
+with the install state that decides their fate.
+"""
+from __future__ import annotations
+
+import ast
+import importlib.util
+import os
+from typing import Dict
+
+SCHEMA = "analysis-stats/v1"
+
+
+def _given_tests(tree: ast.AST) -> int:
+    """Functions decorated with ``@given(...)`` (the shim's shape and
+    hypothesis's real one are the same at the source level)."""
+    n = 0
+    for node in ast.walk(tree):
+        if not isinstance(node, (ast.FunctionDef, ast.AsyncFunctionDef)):
+            continue
+        for dec in node.decorator_list:
+            target = dec.func if isinstance(dec, ast.Call) else dec
+            name = (target.id if isinstance(target, ast.Name)
+                    else target.attr if isinstance(target, ast.Attribute)
+                    else None)
+            if name == "given":
+                n += 1
+                break
+    return n
+
+
+def collect_stats(tests_dir: str, root: str) -> dict:
+    hypothesis_installed = (
+        importlib.util.find_spec("hypothesis") is not None)
+    by_file: Dict[str, int] = {}
+    total = 0
+    if os.path.isdir(tests_dir):
+        for fname in sorted(os.listdir(tests_dir)):
+            if not fname.endswith(".py"):
+                continue
+            path = os.path.join(tests_dir, fname)
+            try:
+                with open(path, "r", encoding="utf-8") as f:
+                    tree = ast.parse(f.read(), filename=path)
+            except SyntaxError:
+                continue
+            n = _given_tests(tree)
+            if n:
+                rel = os.path.relpath(path, root).replace(os.sep, "/")
+                by_file[rel] = n
+                total += n
+    return {
+        "schema": SCHEMA,
+        "property_tests": {
+            "total": total,
+            "by_file": by_file,
+            "hypothesis_installed": hypothesis_installed,
+            # distinct from pytest's generic skips: these are property
+            # tests that never ran because the optional extra is absent
+            "shim_skipped": 0 if hypothesis_installed else total,
+        },
+    }

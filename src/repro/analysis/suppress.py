@@ -1,0 +1,48 @@
+"""Inline suppressions: ``# flcheck: ignore[rule-id]``.
+
+A suppression comment on the offending line silences the named rules
+for that line; a comment-only line silences them for the line below.
+``# flcheck: ignore`` (no bracket) silences every rule — use sparingly;
+naming the rule keeps the suppression auditable.
+
+    t0 = time.perf_counter()   # flcheck: ignore[wall-clock-in-core]
+
+    # flcheck: ignore[print-in-core, wall-clock-in-core]
+    print(f"lap {lap}: {time.perf_counter() - t0:.3f}s")
+"""
+from __future__ import annotations
+
+import re
+from typing import Dict, FrozenSet, List, Optional
+
+_PATTERN = re.compile(
+    r"#[^\n]*?\bflcheck:\s*ignore(?:\[(?P<rules>[\w\-, ]+)\])?",
+    re.IGNORECASE)
+
+# value None = every rule suppressed on that line
+SuppressionMap = Dict[int, Optional[FrozenSet[str]]]
+
+
+def parse_suppressions(lines: List[str]) -> SuppressionMap:
+    """1-based line -> suppressed rule names (None = all rules)."""
+    out: SuppressionMap = {}
+    for i, raw in enumerate(lines, start=1):
+        m = _PATTERN.search(raw)
+        if not m:
+            continue
+        target = i + 1 if raw.lstrip().startswith("#") else i
+        names = m.group("rules")
+        ruleset = (None if names is None else
+                   frozenset(n.strip() for n in names.split(",") if n.strip()))
+        if ruleset is None or out.get(target, frozenset()) is None:
+            out[target] = None
+        else:
+            out[target] = out.get(target, frozenset()) | ruleset
+    return out
+
+
+def is_suppressed(sup: SuppressionMap, rule: str, line: int) -> bool:
+    if line not in sup:
+        return False
+    ruleset = sup[line]
+    return ruleset is None or rule in ruleset

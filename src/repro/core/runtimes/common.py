@@ -331,10 +331,16 @@ def _round_helpers(run_cfg, client_eval_fn):
     round record) actually reads the input."""
     sq_diff = _value_fn(run_cfg)
     N = run_cfg.num_clients
+    # intentionally per-run (not memoized): the round/sync runtimes call
+    # this once per run and the closures capture run-specific N/sq_diff;
+    # caching would pin the eval fn's device arrays past the run
+    # flcheck: ignore[jit-in-hot-path]
     batch_eval = jax.jit(jax.vmap(client_eval_fn))
+    # flcheck: ignore[jit-in-hot-path]
     values_fn = jax.jit(
         lambda gp, gc, accs: value_lib.communication_values_stacked(
             gp, gc, accs, N, sq_diff_fn=sq_diff))
+    # flcheck: ignore[jit-in-hot-path]
     grad_norms_fn = jax.jit(jax.vmap(tree_sq_norm))
     return batch_eval, values_fn, grad_norms_fn
 
@@ -361,9 +367,15 @@ def _event_helpers_cached(num_clients, client_eval_fn, sq_diff):
 
 
 def _build_event_helpers(num_clients, client_eval_fn, sq_diff):
+    # memoized by the caller (_event_helpers_cached wraps this in
+    # lru_cache; the direct call is the documented unhashable-eval
+    # fallback), so the zero-recompile-rerun contract holds
+    # flcheck: ignore[jit-in-hot-path]
     batch_eval = jax.jit(jax.vmap(client_eval_fn))
+    # flcheck: ignore[jit-in-hot-path]
     values_fn = jax.jit(jax.vmap(
         lambda pg, gc, a: value_lib.communication_value(
             pg, gc, a, num_clients, sq_diff_fn=sq_diff)))
+    # flcheck: ignore[jit-in-hot-path]
     norms_fn = jax.jit(jax.vmap(tree_sq_norm))
     return batch_eval, values_fn, norms_fn

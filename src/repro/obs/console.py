@@ -1,9 +1,10 @@
 """Console output for the runtimes.
 
 ``progress`` is the ONE sanctioned console print inside
-``repro.core.runtimes`` — the source lint (tests/test_algorithms.py)
-forbids ad-hoc ``print(`` / ``time.time(`` / ``time.perf_counter(``
-there so that every instrumentation path flows through ``repro.obs``
+``repro.core.runtimes`` — the ``print-in-core`` / ``wall-clock-in-core``
+rules (``repro.analysis``, docs/STATIC_ANALYSIS.md) forbid ad-hoc
+``print(`` / ``time.time(`` / ``time.perf_counter(`` there so that
+every instrumentation path flows through ``repro.obs``
 (docs/OBSERVABILITY.md).
 """
 from __future__ import annotations
@@ -13,4 +14,5 @@ import sys
 
 def progress(msg: str) -> None:
     """A verbose-mode progress line (``verbose=True`` runs)."""
+    # the sanctioned sink itself: flcheck: ignore[print-in-core]
     print(msg, file=sys.stdout, flush=True)

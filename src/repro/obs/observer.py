@@ -209,5 +209,7 @@ class Observer:
             result.metrics = snap
             result.trace_path = trace_path
         if self.cfg.summary:
+            # the opt-in end-of-run summary sink (cfg.summary=True):
+            # flcheck: ignore[print-in-core]
             print(console_summary(self, result))
         return snap

@@ -1,0 +1,7 @@
+"""Negative fixture: behavior differences live on the protocol."""
+
+
+def dispatch(policy, window, values, norms, delta_sq):
+    if policy.needs_values:             # declared inputs, not name checks
+        return policy.gate_stacked(values, norms, delta_sq)
+    return policy.round_mask(window)

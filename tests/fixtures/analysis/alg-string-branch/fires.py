@@ -1,0 +1,9 @@
+"""Positive fixture: runtime behavior forked on the algorithm name."""
+
+
+def dispatch(run_cfg, window):
+    if run_cfg.algorithm == "vafl":     # four-way surgery returns
+        return window * 2
+    if run_cfg.alg != "afl":
+        return window
+    return None

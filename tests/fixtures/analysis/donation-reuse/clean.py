@@ -1,0 +1,15 @@
+"""Negative fixture: donated names immediately rebound by the call."""
+from functools import partial
+
+import jax
+
+
+@partial(jax.jit, donate_argnums=(0,))
+def update(state, grad):
+    return state - grad
+
+
+def run(state, grads):
+    for g in grads:
+        state = update(state, g)    # rebind: the sanctioned donation shape
+    return state

@@ -1,0 +1,14 @@
+"""Positive fixture: a donated buffer read again after the call."""
+from functools import partial
+
+import jax
+
+
+@partial(jax.jit, donate_argnums=(0,))
+def update(state, grad):
+    return state - grad
+
+
+def run(state, grads):
+    new = update(state, grads)
+    return state + new          # state's buffer was donated to update()

@@ -1,0 +1,9 @@
+"""Negative fixture: seeded, explicit generators only."""
+import numpy as np
+
+
+def noisy(n, seed):
+    rng = np.random.RandomState(seed)               # seeded legacy generator
+    gen = np.random.default_rng(seed + 1)           # seeded new-style
+    pick = np.random.RandomState(seed + 2).choice(n)
+    return rng.randn(n)[pick] + gen.normal()

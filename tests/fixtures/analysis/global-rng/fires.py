@@ -1,0 +1,10 @@
+"""Positive fixture: process-global RNG state, three flavors."""
+import random
+
+import numpy as np
+
+
+def noisy(n):
+    np.random.seed(0)                   # mutates the global BitGenerator
+    sample = np.random.randn(n)         # draws from it
+    return sample[random.randint(0, n - 1)]     # stdlib global RNG

@@ -1,0 +1,16 @@
+"""Negative fixture: module-level and memoized builds are sanctioned."""
+from functools import lru_cache, partial
+
+import jax
+
+update = jax.jit(lambda p, g: p - g)        # module-level single build
+
+
+@partial(jax.jit, donate_argnums=(0,))      # decorator on a module def
+def commit(state, delta):
+    return state + delta
+
+
+@lru_cache(maxsize=4)
+def build(n):
+    return jax.jit(jax.vmap(lambda x: x * n))   # built once per cache key

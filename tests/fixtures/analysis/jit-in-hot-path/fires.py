@@ -1,0 +1,11 @@
+"""Positive fixture: jit/vmap built inside a function and inside a loop."""
+import jax
+
+
+def step(f, x):
+    return jax.jit(f)(x)        # fresh wrapper per call: re-traces
+
+
+TABLE = []
+for _scale in (1, 2):
+    TABLE.append(jax.vmap(lambda v: v * _scale))   # built in a loop

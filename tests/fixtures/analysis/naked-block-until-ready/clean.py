@@ -1,0 +1,5 @@
+"""Negative fixture: values resolve lazily at their use site."""
+
+
+def commit(tree, x):
+    return tree, float(x)       # the use site is the sync point

@@ -1,0 +1,7 @@
+"""Positive fixture: explicit device syncs outside benchmark code."""
+import jax
+
+
+def commit(tree, x):
+    jax.block_until_ready(tree)         # stalls the dispatch pipeline
+    return x.block_until_ready()        # method form

@@ -1,0 +1,6 @@
+"""Negative fixture: console output through the sanctioned sink."""
+from repro.obs import console
+
+
+def report(round_idx, acc):
+    console.progress(f"round {round_idx}: acc={acc:.4f}")

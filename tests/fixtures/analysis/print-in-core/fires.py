@@ -1,0 +1,5 @@
+"""Positive fixture: ad-hoc console output."""
+
+
+def report(round_idx, acc):
+    print(f"round {round_idx}: acc={acc:.4f}")

@@ -1,0 +1,9 @@
+"""Negative fixture: everything resolves through the string registries."""
+from repro.algorithms import get_algorithm
+from repro.sim.registry import ScenarioConfig, build_model
+
+
+def make(alg_name, n):
+    alg = get_algorithm(alg_name)
+    fleet = build_model("compute", "uniform_fleet", n)
+    return alg, fleet, ScenarioConfig(compute="paper_testbed")

@@ -1,0 +1,4 @@
+"""Positive fixture: builtin modules imported around their registries."""
+import repro.algorithms.fedasync                    # noqa: F401
+from repro.algorithms.builtin import VAFLPolicy     # noqa: F401
+from repro.sim import compute                       # noqa: F401

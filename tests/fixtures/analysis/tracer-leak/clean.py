@@ -1,0 +1,21 @@
+"""Negative fixture: static args, structure checks, and shape reads."""
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+
+
+@partial(jax.jit, static_argnames=("n",))
+def repeat(x, n):
+    if n > 2:                   # static argument: resolved at trace time
+        return x * n
+    return x
+
+
+@jax.jit
+def masked(x, w=None):
+    if w is not None:           # pytree structure: static under jit
+        x = x * w
+    if x.ndim == 2:             # shapes are static on tracers
+        return x.sum(axis=-1)
+    return jnp.where(x > 0, x, 0.0)     # traced branch done the right way

@@ -1,0 +1,15 @@
+"""Positive fixture: host control flow / casts on traced arguments."""
+import jax
+
+
+@jax.jit
+def gate(value, threshold):
+    if value > threshold:       # traced comparison forced to a host bool
+        return value
+    return value * 0.5
+
+
+@jax.jit
+def to_host(x):
+    y = x                       # alias hop keeps the taint
+    return float(y)             # host pull inside the jit

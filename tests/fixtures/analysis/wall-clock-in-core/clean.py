@@ -1,0 +1,7 @@
+"""Negative fixture: host timing through the observer's clock."""
+
+
+def lap(fn, obs):
+    t0 = obs.host_now()
+    fn()
+    return obs.host_now() - t0

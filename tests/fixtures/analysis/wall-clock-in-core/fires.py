@@ -1,0 +1,8 @@
+"""Positive fixture: direct host-clock reads."""
+import time
+
+
+def lap(fn):
+    t0 = time.time()
+    fn()
+    return time.perf_counter() - t0

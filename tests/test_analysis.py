@@ -1,0 +1,479 @@
+"""repro.analysis: the rule framework, and the tree it polices.
+
+Three layers of coverage:
+
+* **framework units** — registry contract (every rule has a firing and
+  a clean fixture under tests/fixtures/analysis/), suppression and
+  baseline round-trips, reporters, CLI exit codes, --stats accounting;
+* **rule semantics** — per-rule positives/negatives via the fixtures;
+* **the tier-1 gate** — the full rule set over the shipped tree
+  (src/repro + benchmarks + examples) must report ZERO unsuppressed
+  findings against the checked-in baseline.  This is the mechanical
+  form of the repo's JAX-discipline contracts (docs/STATIC_ANALYSIS.md).
+"""
+import json
+import pathlib
+import subprocess
+import sys
+import textwrap
+
+import pytest
+
+from repro.analysis import (AnalysisConfig, Finding, Rule, available_rules,
+                            baseline_doc, collect_stats, console_report,
+                            get_rule, get_rule_class, json_report,
+                            register_rule, run_analysis, write_baseline)
+from repro.analysis import registry as reg
+from repro.analysis.cli import main as cli_main
+from repro.analysis.suppress import is_suppressed, parse_suppressions
+
+ROOT = pathlib.Path(__file__).resolve().parents[1]
+FIXTURES = ROOT / "tests" / "fixtures" / "analysis"
+ANALYZED_PATHS = (str(ROOT / "src" / "repro"), str(ROOT / "benchmarks"),
+                  str(ROOT / "examples"))
+BASELINE = ROOT / ".analysis-baseline.json"
+
+
+def _analyze(paths, rules=(), **kw):
+    return run_analysis(AnalysisConfig(paths=tuple(str(p) for p in paths),
+                                       rules=rules, **kw))
+
+
+# ------------------------------------------------------------- registry ---
+
+class TestRegistry:
+    def test_at_least_eight_rules(self):
+        assert len(available_rules()) >= 8
+
+    def test_get_rule_returns_fresh_instances(self):
+        a, b = get_rule("donation-reuse"), get_rule("donation-reuse")
+        assert a is not b       # collect-phase state must not leak
+
+    def test_unknown_rule_lists_registered(self):
+        with pytest.raises(ValueError, match="tracer-leak"):
+            get_rule("tracer-lek")
+
+    def test_every_rule_self_describes(self):
+        for name in available_rules():
+            rule = get_rule(name)
+            assert rule.name == name
+            assert rule.description
+            assert rule.example, f"{name} has no catalog example"
+            assert rule.severity in ("error", "warning")
+
+    def test_third_party_registration_and_duplicate_guard(self):
+        class MyRule(Rule):
+            name = "my-team-rule"
+            description = "x"
+
+            def check(self, mod):
+                return iter(())
+
+        try:
+            register_rule(MyRule)
+            assert "my-team-rule" in available_rules()
+            assert get_rule_class("my-team-rule") is MyRule
+            with pytest.raises(ValueError, match="already registered"):
+                register_rule(MyRule)
+            register_rule(MyRule, overwrite=True)   # explicit wins
+        finally:
+            reg._REGISTRY.pop("my-team-rule", None)
+
+    def test_preregistration_beats_builtin(self):
+        prev = reg._REGISTRY.get("global-rng")
+        prev_owned = "global-rng" in reg._BUILTIN_OWNED
+
+        class Override(Rule):
+            name = "global-rng"
+            description = "override"
+
+            def check(self, mod):
+                return iter(())
+
+        try:
+            reg._REGISTRY["global-rng"] = Override
+            reg._BUILTIN_OWNED.discard("global-rng")
+            reg._builtins_loaded = False
+            assert get_rule_class("global-rng") is Override
+        finally:
+            reg._REGISTRY["global-rng"] = prev
+            if prev_owned:
+                reg._BUILTIN_OWNED.add("global-rng")
+            reg._builtins_loaded = True
+
+
+# ----------------------------------------------- per-rule fixture contract ---
+
+@pytest.mark.parametrize("rule_name", available_rules())
+class TestRuleFixtures:
+    """Every registered rule demonstrably fires on its positive fixture
+    and stays silent on its clean one — the contract that keeps the
+    catalog honest as rules are added."""
+
+    def test_fires_on_positive_fixture(self, rule_name):
+        fixture = FIXTURES / rule_name / "fires.py"
+        assert fixture.exists(), f"missing positive fixture for {rule_name}"
+        rep = _analyze([fixture], rules=(rule_name,), respect_scope=False)
+        assert rep.findings, f"{rule_name} did not fire on {fixture}"
+        assert all(f.rule == rule_name for f in rep.findings)
+        for f in rep.findings:
+            assert f.line > 0 and f.snippet and f.message
+
+    def test_silent_on_clean_fixture(self, rule_name):
+        fixture = FIXTURES / rule_name / "clean.py"
+        assert fixture.exists(), f"missing clean fixture for {rule_name}"
+        rep = _analyze([fixture], rules=(rule_name,), respect_scope=False)
+        assert not rep.findings, [f.to_dict() for f in rep.findings]
+
+    def test_rule_documented(self, rule_name):
+        doc = (ROOT / "docs" / "STATIC_ANALYSIS.md").read_text()
+        assert rule_name in doc, f"{rule_name} missing from the catalog"
+
+
+# ------------------------------------------------------------ rule details ---
+
+class TestRuleSemantics:
+    def test_scope_respected_and_overridable(self, tmp_path):
+        f = tmp_path / "somewhere.py"
+        f.write_text("def report(a):\n    print(a)\n")
+        scoped = _analyze([f], rules=("print-in-core",))
+        assert not scoped.findings      # outside core/: rule doesn't apply
+        everywhere = _analyze([f], rules=("print-in-core",),
+                              respect_scope=False)
+        assert len(everywhere.findings) == 1
+
+    def test_seeded_generators_do_not_fire_global_rng(self, tmp_path):
+        f = tmp_path / "gen.py"
+        f.write_text("import numpy as np\n"
+                     "r = np.random.RandomState(0)\n"
+                     "g = np.random.default_rng(1)\n"
+                     "x = np.random.RandomState(2).choice(5)\n")
+        rep = _analyze([f], rules=("global-rng",), respect_scope=False)
+        assert not rep.findings
+
+    def test_donation_rebind_in_same_statement_is_clean(self, tmp_path):
+        f = tmp_path / "don.py"
+        f.write_text(textwrap.dedent("""\
+            import jax
+            from functools import partial
+
+            @partial(jax.jit, donate_argnums=(0, 1))
+            def commit(cp, pg, idx):
+                return cp, pg
+
+            def step(cp, pg, idx):
+                cp, pg = commit(cp, pg, idx)
+                return cp, pg
+        """))
+        rep = _analyze([f], rules=("donation-reuse",), respect_scope=False)
+        assert not rep.findings
+
+    def test_donation_through_namespace_attribute(self, tmp_path):
+        f = tmp_path / "ns.py"
+        f.write_text(textwrap.dedent("""\
+            import jax
+            from functools import partial
+
+            @partial(jax.jit, donate_argnums=(0,))
+            def scatter(state, rows):
+                return state
+
+            def step(ops, state, rows):
+                out = ops.scatter(state, rows)
+                return state, out
+        """))
+        rep = _analyze([f], rules=("donation-reuse",), respect_scope=False)
+        assert len(rep.findings) == 1
+        assert "'state'" in rep.findings[0].message
+
+    def test_jit_assigned_with_donation_collected(self, tmp_path):
+        f = tmp_path / "asg.py"
+        f.write_text(textwrap.dedent("""\
+            import jax
+
+            apply = jax.jit(lambda s, g: s, donate_argnums=(0,))
+
+            def run(state, g):
+                new = apply(state, g)
+                return state.mean() + new
+        """))
+        rep = _analyze([f], rules=("donation-reuse",), respect_scope=False)
+        assert len(rep.findings) == 1
+
+    def test_tracer_leak_ignores_is_none_and_shape_checks(self, tmp_path):
+        f = tmp_path / "tr.py"
+        f.write_text(textwrap.dedent("""\
+            import jax
+
+            @jax.jit
+            def f(x, w=None):
+                if w is None:
+                    return x
+                if x.ndim == 2:
+                    return x + w
+                return x * w
+        """))
+        rep = _analyze([f], rules=("tracer-leak",), respect_scope=False)
+        assert not rep.findings
+
+    def test_syntax_error_becomes_finding(self, tmp_path):
+        f = tmp_path / "broken.py"
+        f.write_text("def f(:\n")
+        rep = _analyze([f], rules=("print-in-core",), respect_scope=False)
+        assert [x.rule for x in rep.findings] == ["syntax-error"]
+
+    def test_severity_override(self, tmp_path):
+        f = tmp_path / "p.py"
+        f.write_text("print('x')\n")
+        rep = _analyze([f], rules=("print-in-core",), respect_scope=False,
+                       severity_overrides={"print-in-core": "warning"})
+        assert rep.findings[0].severity == "warning"
+        assert not rep.open_errors()
+
+
+# -------------------------------------------------- suppression mechanics ---
+
+class TestSuppression:
+    def test_parse_same_line_and_next_line(self):
+        sup = parse_suppressions([
+            "x = 1   # flcheck: ignore[rule-a]",
+            "# flcheck: ignore[rule-b, rule-c]",
+            "y = 2",
+            "z = 3   # flcheck: ignore",
+        ])
+        assert is_suppressed(sup, "rule-a", 1)
+        assert not is_suppressed(sup, "rule-b", 1)
+        assert is_suppressed(sup, "rule-b", 3)
+        assert is_suppressed(sup, "rule-c", 3)
+        assert is_suppressed(sup, "anything", 4)    # bare ignore = all
+        assert not is_suppressed(sup, "rule-a", 2)
+
+    def test_suppressed_findings_are_restatused(self, tmp_path):
+        f = tmp_path / "sup.py"
+        f.write_text("def r(a):\n"
+                     "    print(a)   # flcheck: ignore[print-in-core]\n"
+                     "    print(a)\n")
+        rep = _analyze([f], rules=("print-in-core",), respect_scope=False)
+        assert len(rep.findings) == 1 and rep.findings[0].line == 3
+        assert len(rep.suppressed) == 1 and rep.suppressed[0].line == 2
+
+    def test_no_suppress_mode_reports_everything(self, tmp_path):
+        f = tmp_path / "sup.py"
+        f.write_text("print(1)   # flcheck: ignore[print-in-core]\n")
+        rep = _analyze([f], rules=("print-in-core",), respect_scope=False,
+                       respect_suppressions=False)
+        assert len(rep.findings) == 1 and not rep.suppressed
+
+    def test_wrong_rule_name_does_not_suppress(self, tmp_path):
+        f = tmp_path / "sup.py"
+        f.write_text("print(1)   # flcheck: ignore[wall-clock-in-core]\n")
+        rep = _analyze([f], rules=("print-in-core",), respect_scope=False)
+        assert len(rep.findings) == 1
+
+
+# ----------------------------------------------------- baseline round-trip ---
+
+class TestBaseline:
+    def _fires(self, tmp_path, body="print(1)\nprint(2)\n"):
+        f = tmp_path / "mod.py"
+        f.write_text(body)
+        return f
+
+    def test_round_trip_absorbs_exactly_the_residue(self, tmp_path):
+        f = self._fires(tmp_path)
+        rep = _analyze([f], rules=("print-in-core",), respect_scope=False,
+                       root=str(tmp_path))
+        assert len(rep.findings) == 2
+        bl = tmp_path / "bl.json"
+        write_baseline(rep.findings, str(bl))
+        rep2 = _analyze([f], rules=("print-in-core",), respect_scope=False,
+                        root=str(tmp_path), baseline=str(bl))
+        assert not rep2.findings
+        assert len(rep2.baselined) == 2
+
+    def test_new_findings_still_fire_past_the_baseline(self, tmp_path):
+        f = self._fires(tmp_path)
+        rep = _analyze([f], rules=("print-in-core",), respect_scope=False,
+                       root=str(tmp_path))
+        bl = tmp_path / "bl.json"
+        write_baseline(rep.findings, str(bl))
+        # a NEW distinct occurrence appears: must be reported open
+        f.write_text("print(1)\nprint(2)\nprint('new hazard')\n")
+        rep2 = _analyze([f], rules=("print-in-core",), respect_scope=False,
+                        root=str(tmp_path), baseline=str(bl))
+        assert len(rep2.findings) == 1
+        assert "new hazard" in rep2.findings[0].snippet
+        assert len(rep2.baselined) == 2
+
+    def test_baseline_is_line_insensitive(self, tmp_path):
+        f = self._fires(tmp_path)
+        rep = _analyze([f], rules=("print-in-core",), respect_scope=False,
+                       root=str(tmp_path))
+        bl = tmp_path / "bl.json"
+        write_baseline(rep.findings, str(bl))
+        f.write_text("# a new comment shifts every line\n\nprint(1)\n"
+                     "print(2)\n")
+        rep2 = _analyze([f], rules=("print-in-core",), respect_scope=False,
+                        root=str(tmp_path), baseline=str(bl))
+        assert not rep2.findings and len(rep2.baselined) == 2
+
+    def test_count_caps_duplicate_absorption(self, tmp_path):
+        # two IDENTICAL lines baselined once: the second stays open
+        f = self._fires(tmp_path, "print(1)\nprint(1)\n")
+        doc = baseline_doc([Finding(rule="print-in-core", path="mod.py",
+                                    line=1, message="m",
+                                    snippet="print(1)")])
+        bl = tmp_path / "bl.json"
+        bl.write_text(json.dumps(doc))
+        rep = _analyze([f], rules=("print-in-core",), respect_scope=False,
+                       root=str(tmp_path), baseline=str(bl))
+        assert len(rep.findings) == 1 and len(rep.baselined) == 1
+
+    def test_schema_guard(self, tmp_path):
+        bl = tmp_path / "bad.json"
+        bl.write_text('{"schema": "something/else", "entries": []}')
+        f = self._fires(tmp_path)
+        with pytest.raises(ValueError, match="analysis-baseline/v1"):
+            _analyze([f], rules=("print-in-core",), respect_scope=False,
+                     baseline=str(bl))
+
+
+# ------------------------------------------------------------- reporters ---
+
+class TestReporters:
+    def test_json_report_schema(self, tmp_path):
+        f = tmp_path / "mod.py"
+        f.write_text("print(1)\n")
+        rep = _analyze([f], rules=("print-in-core",), respect_scope=False)
+        doc = json_report(rep, stats={"schema": "analysis-stats/v1"})
+        assert doc["schema"] == "analysis-report/v1"
+        assert doc["summary"]["open"] == 1
+        assert doc["summary"]["by_rule"] == {"print-in-core": 1}
+        assert doc["rules"][0]["name"]
+        record = doc["findings"][0]
+        for key in ("rule", "path", "line", "severity", "message",
+                    "snippet", "status"):
+            assert key in record
+        assert record["status"] == "open"
+        assert doc["stats"]["schema"] == "analysis-stats/v1"
+        json.dumps(doc)     # round-trippable
+
+    def test_console_report_shape(self, tmp_path):
+        f = tmp_path / "mod.py"
+        f.write_text("print(1)\n")
+        rep = _analyze([f], rules=("print-in-core",), respect_scope=False)
+        text = console_report(rep)
+        assert "mod.py:1: error[print-in-core]" in text
+        assert "1 finding(s)" in text
+
+
+# ------------------------------------------------------------------- CLI ---
+
+class TestCli:
+    def test_list_rules(self, capsys):
+        assert cli_main(["--list-rules"]) == 0
+        out = capsys.readouterr().out
+        for name in available_rules():
+            assert name in out
+
+    def test_exit_codes(self, tmp_path, capsys):
+        f = tmp_path / "mod.py"
+        f.write_text("print(1)\n")
+        base = [str(f), "--everywhere", "--rules", "print-in-core",
+                "--baseline", "none"]
+        assert cli_main(base) == 1
+        assert cli_main(base + ["--fail-on", "never"]) == 0
+        f.write_text("x = 1\n")
+        assert cli_main(base) == 0
+        capsys.readouterr()
+
+    def test_json_output_file(self, tmp_path, capsys):
+        f = tmp_path / "mod.py"
+        f.write_text("x = 1\n")
+        out = tmp_path / "report.json"
+        code = cli_main([str(f), "--everywhere", "--format", "json",
+                         "--baseline", "none", "--output", str(out)])
+        capsys.readouterr()
+        assert code == 0
+        doc = json.loads(out.read_text())
+        assert doc["schema"] == "analysis-report/v1"
+        assert len(doc["rules"]) >= 8
+
+    def test_write_baseline_flow(self, tmp_path, capsys):
+        f = tmp_path / "mod.py"
+        f.write_text("print(1)\n")
+        bl = tmp_path / "bl.json"
+        assert cli_main([str(f), "--everywhere", "--rules", "print-in-core",
+                         "--baseline", str(bl), "--write-baseline"]) == 0
+        capsys.readouterr()
+        assert json.loads(bl.read_text())["schema"] == "analysis-baseline/v1"
+        assert cli_main([str(f), "--everywhere", "--rules", "print-in-core",
+                         "--baseline", str(bl)]) == 0
+        capsys.readouterr()
+
+    def test_module_entry_point_smoke(self):
+        p = subprocess.run(
+            [sys.executable, "-m", "repro.analysis", "--list-rules"],
+            cwd=ROOT, capture_output=True, text=True, timeout=120,
+            env={"PYTHONPATH": "src", "PATH": "/usr/bin:/bin"})
+        assert p.returncode == 0, p.stderr[-1000:]
+        assert "tracer-leak" in p.stdout
+
+
+# ------------------------------------------------------------------ stats ---
+
+class TestStats:
+    def test_property_tests_counted_distinctly(self):
+        stats = collect_stats(str(ROOT / "tests"), str(ROOT))
+        pt = stats["property_tests"]
+        # the suite carries @given property tests behind the hypothesis
+        # shim; they must be COUNTED here whether or not the optional
+        # extra is installed — never silently folded into skips
+        assert pt["total"] >= 1
+        assert pt["by_file"]
+        assert all(p.startswith("tests/") for p in pt["by_file"])
+        if pt["hypothesis_installed"]:
+            assert pt["shim_skipped"] == 0
+        else:
+            assert pt["shim_skipped"] == pt["total"]
+
+    def test_stats_on_empty_dir(self, tmp_path):
+        stats = collect_stats(str(tmp_path), str(tmp_path))
+        assert stats["property_tests"]["total"] == 0
+
+
+# -------------------------------------------------------- the tier-1 gate ---
+
+class TestShippedTreeIsClean:
+    """The acceptance gate: the full rule set over the shipped tree
+    reports zero unsuppressed findings (inline suppressions and the
+    checked-in baseline are the ONLY sanctioned residue)."""
+
+    def test_zero_unsuppressed_findings(self):
+        rep = _analyze(ANALYZED_PATHS, baseline=str(BASELINE),
+                       root=str(ROOT))
+        assert not rep.findings, "\n".join(
+            f"{f.location()}: [{f.rule}] {f.message}" for f in rep.findings)
+        assert rep.files_analyzed > 100
+
+    def test_baseline_entries_still_needed(self):
+        """A stale baseline entry (the code it grandfathers is gone)
+        must be pruned, not carried: every entry absorbs a live finding."""
+        from repro.analysis import load_baseline
+        counts = load_baseline(str(BASELINE))
+        rep = _analyze(ANALYZED_PATHS, baseline=str(BASELINE),
+                       root=str(ROOT))
+        absorbed = sum(1 for _ in rep.baselined)
+        assert absorbed == sum(counts.values()), (
+            "baseline carries entries that no longer match any finding — "
+            "regenerate with: python -m repro.analysis src/repro "
+            "benchmarks examples --write-baseline")
+
+    def test_migrated_lints_cover_the_original_surface(self):
+        """The two ad-hoc regex lints that used to live in
+        tests/test_algorithms.py are now registered rules; their original
+        surface (core/runtimes) must stay clean WITHOUT any baseline."""
+        rep = _analyze([ROOT / "src" / "repro" / "core"],
+                       rules=("alg-string-branch", "print-in-core",
+                              "wall-clock-in-core"))
+        assert not rep.findings, [f.to_dict() for f in rep.findings]

@@ -172,7 +172,7 @@ class TestEntryPoints:
         import json
         p = subprocess.run(
             [sys.executable, str(ROOT / "benchmarks" / "run.py"), "--smoke",
-             "--skip", "table3,fig4,fig5,compress,scenarios,obs"],
+             "--skip", "table3,fig4,fig5,compress,scenarios,obs,analysis"],
             cwd=tmp_path, timeout=420, capture_output=True, text=True)
         assert p.returncode == 0, p.stderr[-2000:]
         out = tmp_path / "BENCH_engine.json"
@@ -197,7 +197,7 @@ class TestEntryPoints:
         import json
         p = subprocess.run(
             [sys.executable, str(ROOT / "benchmarks" / "run.py"), "--smoke",
-             "--skip", "table3,fig4,fig5,compress,engine,obs"],
+             "--skip", "table3,fig4,fig5,compress,engine,obs,analysis"],
             cwd=tmp_path, timeout=420, capture_output=True, text=True)
         assert p.returncode == 0, p.stderr[-2000:]
         out = tmp_path / "BENCH_scenarios.json"
@@ -227,7 +227,7 @@ class TestEntryPoints:
         import json
         p = subprocess.run(
             [sys.executable, str(ROOT / "benchmarks" / "run.py"), "--smoke",
-             "--skip", "table3,fig4,fig5,compress,engine,scenarios"],
+             "--skip", "table3,fig4,fig5,compress,engine,scenarios,analysis"],
             cwd=tmp_path, timeout=420, capture_output=True, text=True)
         assert p.returncode == 0, p.stderr[-2000:]
         out = tmp_path / "BENCH_obs.json"
@@ -243,6 +243,35 @@ class TestEntryPoints:
             assert row["bit_exact_with_obs"] is True
             assert row["trace_events"] > 0
             assert np.isfinite(row["sec_obs_on"])
+
+    def test_bench_analysis_json_emitted(self, tmp_path):
+        """benchmarks/run.py --smoke must leave BENCH_analysis.json behind
+        (schema analysis-report/v1): the full static-analysis rule set over
+        the shipped tree, against the checked-in baseline — and it must
+        report ZERO unsuppressed findings.  Also asserts the shim-skipped
+        property tests are reported distinctly under stats."""
+        import json
+        p = subprocess.run(
+            [sys.executable, str(ROOT / "benchmarks" / "run.py"), "--smoke",
+             "--skip", "table3,fig4,fig5,compress,engine,scenarios,obs"],
+            cwd=tmp_path, timeout=420, capture_output=True, text=True)
+        assert p.returncode == 0, p.stderr[-2000:]
+        out = tmp_path / "BENCH_analysis.json"
+        assert out.exists(), p.stdout[-2000:]
+        doc = json.loads(out.read_text())
+        assert doc["schema"] == "analysis-report/v1"
+        assert len(doc["rules"]) >= 8
+        assert doc["files_analyzed"] > 100
+        assert doc["summary"]["open"] == 0, doc["findings"]
+        assert doc["summary"]["open_errors"] == 0
+        # the hypothesis-shim interplay: @given tests are counted at the
+        # source level and reported distinctly, not folded into pytest's
+        # generic skip count
+        pt = doc["stats"]["property_tests"]
+        assert pt["total"] > 0
+        assert pt["by_file"]
+        if not pt["hypothesis_installed"]:
+            assert pt["shim_skipped"] == pt["total"]
 
     @pytest.mark.slow
     def test_benchmarks_smoke_all_sections(self):

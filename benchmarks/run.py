@@ -11,6 +11,8 @@ Sections:
   [scenarios] repro.sim scenario x algorithm x codec time-to-accuracy
   [obs]      repro.obs tracing/metrics overhead + trace-export checks
   [analysis] repro.analysis static gate over src/benchmarks/examples
+  [serving]  repro.serve live-service load generator (uploads/sec,
+             queue depth, commit latency under paper_testbed traffic)
   [kernels]  grad_diff_norm / linear_scan microbenchmarks
   [roofline] three-term roofline per (arch x shape) from dry-run artifacts
   [gated]    cross-pod gated-collective accounting (multi-pod artifacts)
@@ -148,6 +150,20 @@ def main() -> None:
         ag(out_json=os.path.join(
             "artifacts" if os.path.isdir("artifacts") else "",
             "BENCH_analysis.json"))
+        print()
+
+    if "serving" not in skip:
+        print("== [serving] live-service load generator (repro.serve) ==")
+        from benchmarks.serving_bench import run as sv
+        # always emits the machine-readable BENCH_serving.json (schema
+        # bench-serving/v1): sustained uploads/sec, queue depth and
+        # commit latency over a live inproc federation with concurrent
+        # workers, obs counters reconciled against CommStats — tier-1
+        # asserts it (tests/test_public_api.py)
+        sv(smoke=args.smoke or args.fast,
+           out_json=os.path.join(
+               "artifacts" if os.path.isdir("artifacts") else "",
+               "BENCH_serving.json"))
         print()
 
     if "kernels" not in skip:

@@ -1,0 +1,122 @@
+"""Serving load generator (repro.serve, docs/SERVING.md).
+
+Two laps over a live inproc federation, concurrent thread workers:
+
+* **throughput** — afl + identity, free-running workers: how many
+  upload->commit->download exchanges per second the server hot loop
+  sustains (every event ships a full model, so this is the heavy path).
+
+* **paced** — vafl + topk0.1_int8 under ``paper_testbed`` traffic
+  shaping: the protocol-faithful two-phase exchange (scalar report ->
+  decision -> compressed payload) with queue-depth and commit-latency
+  distributions from the obs metrics, reconciled against ``CommStats``.
+
+    PYTHONPATH=src python -m benchmarks.serving_bench \
+        [--smoke] [--json BENCH_serving.json]
+
+Emits the machine-readable ``BENCH_serving.json`` (schema
+``bench-serving/v1``) asserted by tier-1 (tests/test_public_api.py).
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import sys
+import time
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), ".."))
+
+
+def _lap(fed, *, algorithm, compressor, rounds, pace, label):
+    from repro.obs import ObsConfig
+    t0 = time.perf_counter()
+    res = fed.serve(rounds=rounds, pace=pace, algorithm=algorithm,
+                    compressor=compressor, obs=ObsConfig())
+    elapsed = time.perf_counter() - t0
+    m = res.metrics
+    c, h = m["counters"], m["histograms"]
+    qd = h.get("queue_depth", {})
+    cl = h.get("commit_latency_ms", {})
+    reconciled = (
+        c.get("uploads", 0) == res.comm.model_uploads
+        and c.get("scalar_reports", 0) == res.comm.scalar_reports
+        and c.get("broadcasts", 0) == res.comm.broadcasts
+        and c.get("upload_payload_bytes", 0)
+        == res.comm.upload_payload_bytes)
+    return {
+        "lap": label, "algorithm": algorithm, "compressor": compressor,
+        "transport": "inproc", "clients": fed.config.num_clients,
+        "rounds": rounds,
+        # every event ends in exactly one download broadcast, so the
+        # broadcast count IS the completed-event count
+        "completed_events": res.comm.broadcasts,
+        "uploads": res.comm.model_uploads,
+        "upload_payload_bytes": res.comm.upload_payload_bytes,
+        "elapsed_s": round(elapsed, 4),
+        "uploads_per_sec": round(res.comm.model_uploads / elapsed, 2),
+        "events_per_sec": round(res.comm.broadcasts / elapsed, 2),
+        "queue_depth_max": qd.get("max"),
+        "queue_depth_mean": (round(qd["mean"], 2)
+                             if qd.get("mean") is not None else None),
+        "commit_latency_ms_mean": (round(cl["mean"], 3)
+                                   if cl.get("mean") is not None else None),
+        "final_acc": res.records[-1].global_acc if res.records else None,
+        "trace_reconciled": reconciled,
+    }
+
+
+def run(*, smoke: bool = False, out_json=None):
+    from benchmarks.fl_common import BenchScale, build_problem
+    from repro.core import Federation
+    from repro.core.client import LocalSpec
+
+    clients = 8
+    rounds = 3 if smoke else 8
+    scale = BenchScale(samples_per_client=120 if smoke else 400,
+                       test_samples=200 if smoke else 500)
+    fed_data, triple, test = build_problem("mlp", scale, clients, True)
+    fed = Federation(model=triple, data=fed_data, test_data=test,
+                     local=LocalSpec(batch_size=32, local_rounds=1, lr=0.1),
+                     events_per_eval=clients, seed=scale.seed,
+                     target_acc=scale.target_acc)
+
+    rows = []
+    print(f"{'lap':>11s} {'alg':>6s} {'codec':>13s} {'events':>7s} "
+          f"{'uploads':>8s} {'up/s':>8s} {'ev/s':>8s} {'qmax':>5s} "
+          f"{'lat ms':>8s}")
+    for label, alg, comp, pace in (
+            ("throughput", "afl", "identity", None),
+            ("paced", "vafl", "topk0.1_int8", True)):
+        row = _lap(fed, algorithm=alg, compressor=comp, rounds=rounds,
+                   pace=pace, label=label)
+        rows.append(row)
+        print(f"{row['lap']:>11s} {row['algorithm']:>6s} "
+              f"{row['compressor']:>13s} {row['completed_events']:>7d} "
+              f"{row['uploads']:>8d} {row['uploads_per_sec']:>8.2f} "
+              f"{row['events_per_sec']:>8.2f} "
+              f"{str(row['queue_depth_max']):>5s} "
+              f"{str(row['commit_latency_ms_mean']):>8s}")
+
+    report = {"schema": "bench-serving/v1", "smoke": smoke,
+              "transport": "inproc", "clients": clients,
+              "trace_reconciled": all(r["trace_reconciled"] for r in rows),
+              "rows": rows}
+    if out_json:
+        with open(out_json, "w") as f:
+            json.dump(report, f, indent=2)
+        print(f"wrote {out_json}")
+    return report
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--smoke", action="store_true")
+    ap.add_argument("--json", default=None)
+    args = ap.parse_args()
+    run(smoke=args.smoke, out_json=args.json)
+
+
+if __name__ == "__main__":
+    main()

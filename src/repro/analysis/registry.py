@@ -21,6 +21,7 @@ _BUILTIN_MODULES = (
     "repro.analysis.rules.determinism",
     "repro.analysis.rules.hygiene",
     "repro.analysis.rules.architecture",
+    "repro.analysis.rules.serving",
 )
 _builtins_loaded = False
 

@@ -82,6 +82,10 @@ class WallClockInCore(Rule):
                    "goes through Observer.host_now/timed so the "
                    "dual-timeline trace stays the one source of truth")
     scope = ("repro/core/", "repro/obs/")
+    # the serve loop is sanctioned: its host clock IS the data (arrival
+    # stamps, commit latency, stall deadlines — docs/SERVING.md); the
+    # serve-blocking-in-hotloop rule polices its loops instead
+    exempt = ("repro/serve/",)
     example = "t0 = time.time()   # inside a runtime"
 
     _CLOCKS = {"time.time", "time.perf_counter", "time.monotonic",

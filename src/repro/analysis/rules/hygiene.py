@@ -23,6 +23,9 @@ class PrintInCore(Rule):
                    "through repro.obs.console.progress, summaries through "
                    "the exporters")
     scope = ("repro/core/", "repro/obs/")
+    # repro/serve is carved out explicitly (its verbose path also goes
+    # through obs.console.progress, but worker diagnostics may print)
+    exempt = ("repro/serve/",)
     example = "print(f\"round {r} acc={acc}\")   # inside a runtime"
 
     def check(self, mod: ParsedModule) -> Iterator[Finding]:

@@ -1,0 +1,93 @@
+"""Serving rules: blocking discipline in the live serve loop.
+
+The ``FLServer`` hot loop (repro.serve, docs/SERVING.md) must never
+block indefinitely on a transport receive: a killed client worker, an
+empty fleet or a slow network would wedge the server instead of
+tripping its stall timeout and draining gracefully.  The transport
+contract therefore requires every server-side receive to carry a
+timeout — this rule enforces it mechanically.
+"""
+from __future__ import annotations
+
+import ast
+from typing import Iterator
+
+from repro.analysis.finding import Finding
+from repro.analysis.registry import _register_builtin
+from repro.analysis.rules.base import Rule
+from repro.analysis.source import ParsedModule
+
+# the transport protocol's receive surface (repro.serve.transport)
+_RECV_METHODS = {"recv", "recv_upload", "drain_uploads"}
+
+
+def _has_timeout(call: ast.Call) -> bool:
+    return any(kw.arg == "timeout" for kw in call.keywords)
+
+
+def _nonblocking_get(call: ast.Call) -> bool:
+    """queue.Queue.get made non-blocking: block=False (kw or leading
+    positional) or an explicit timeout."""
+    if _has_timeout(call):
+        return True
+    for kw in call.keywords:
+        if kw.arg == "block" and isinstance(kw.value, ast.Constant) \
+                and kw.value.value is False:
+            return True
+    if call.args and isinstance(call.args[0], ast.Constant) \
+            and call.args[0].value is False:
+        return True
+    return False
+
+
+@_register_builtin
+class ServeBlockingInHotloop(Rule):
+    name = "serve-blocking-in-hotloop"
+    description = ("transport receive without a timeout inside a serve "
+                   "loop — an indefinite block wedges the server instead "
+                   "of tripping its stall timeout and draining")
+    scope = ("repro/serve/",)
+    example = "while True:\n    msg = transport.recv_upload()   # no timeout"
+
+    def check(self, mod: ParsedModule) -> Iterator[Finding]:
+        for loop in mod.walk():
+            if not isinstance(loop, (ast.While, ast.For)):
+                continue
+            for node in ast.walk(loop):
+                if not (isinstance(node, ast.Call)
+                        and isinstance(node.func, ast.Attribute)):
+                    continue
+                attr = node.func.attr
+                if attr == "recv" and node.args:
+                    # socket.recv(nbytes) — a byte-count positional the
+                    # transport protocol's recv(timeout=...) never has;
+                    # raw socket reads are bounded by settimeout and the
+                    # reader-thread pattern, not by this rule
+                    continue
+                if attr in _RECV_METHODS and not _has_timeout(node):
+                    yield self.finding(
+                        mod, node,
+                        f".{attr}() inside a loop with no timeout= — a "
+                        f"dead fleet blocks here forever; every "
+                        f"server-side receive must bound its wait "
+                        f"(docs/SERVING.md transport contract)")
+                elif (attr == "get" and not node.args
+                        and not node.keywords):
+                    # a bare .get() is queue.Queue's block-forever form
+                    # (dict.get always takes arguments, so this stays
+                    # precise); .get(timeout=...)/.get(False) are fine
+                    yield self.finding(
+                        mod, node,
+                        ".get() with no arguments blocks forever on an "
+                        "empty queue — pass timeout= or block=False "
+                        "inside serve loops")
+                elif attr == "get" and node.args \
+                        and not _nonblocking_get(node):
+                    first = node.args[0]
+                    if isinstance(first, ast.Constant) \
+                            and first.value is True:
+                        yield self.finding(
+                            mod, node,
+                            ".get(True) blocks forever on an empty queue "
+                            "— pass timeout= or block=False inside "
+                            "serve loops")

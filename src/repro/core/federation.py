@@ -168,3 +168,28 @@ class Federation:
         if mode == "round":
             return run_round_based(cfg, **kw)
         return run_event_driven(cfg, speed=speed, **kw)
+
+    def serve(self, rounds: Optional[int] = None, *, transport="inproc",
+              driver: str = "thread", pace=None, speed=None,
+              verbose: bool = False, **overrides):
+        """Run the federation as a live service (``repro.serve``,
+        docs/SERVING.md): real client workers push uploads through a
+        transport into a server hot loop driving the same algorithm
+        objects as ``run()``.  ``driver="sequential"`` is the
+        determinism bridge (bit-identical to ``run(mode="event")`` at
+        ``buffer_size=1``); ``transport`` is a registry name ("inproc",
+        "socket") or a ready ``Transport``."""
+        if "num_clients" in overrides:
+            raise ValueError("num_clients is fixed by the federation's "
+                             "data; it cannot be overridden per run")
+        if rounds is not None:
+            overrides["rounds"] = rounds
+        cfg = (dataclasses.replace(self.config, **overrides) if overrides
+               else self.config)
+        from repro.serve import serve_run
+        return serve_run(cfg, init_params_fn=self.init_params_fn,
+                         loss_fn=self.loss_fn, fed_data=self.data,
+                         evaluate_fn=self.evaluate_fn,
+                         client_eval_fn=self._client_eval_for(cfg),
+                         transport=transport, driver=driver, pace=pace,
+                         speed=speed, verbose=verbose)

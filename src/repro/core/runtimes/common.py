@@ -211,6 +211,25 @@ def _round_broadcast(run_cfg, bcodec, comm, global_params, n, t,
     return out
 
 
+def _flush_reconstructions(aggregator, global_params, recons, stales):
+    """Mix a buffer of reconstruction trees into the global model — the
+    FedBuff-K commit shared by the serve loop (``repro.serve.server``,
+    which ingests its windows from an external upload queue) and any
+    engine holding materialised reconstructions.  A singleton buffer is
+    the sequential per-arrival mix bit for bit (``buffered_mix`` K=1
+    path); larger buffers take the aggregator's ``flush_mix`` so a
+    plugin aggregator stays in charge of its own mixing."""
+    from repro.core.aggregation import buffered_coefs, buffered_mix
+    if len(recons) == 1:
+        return buffered_mix(global_params, recons, stales,
+                            aggregator.mix_rate, mix=aggregator.mix)
+    src = tree_stack(list(recons))
+    coef, rho_sbar = buffered_coefs(stales, aggregator.mix_rate)
+    return aggregator.flush_mix(global_params, src,
+                                np.arange(len(recons), dtype=np.int32),
+                                coef, rho_sbar)
+
+
 def _attach_sim_result(res, sched):
     """Copy the scheduler's per-client simulation ledger onto a
     ``RunResult`` (event-driven runtimes, both engines)."""

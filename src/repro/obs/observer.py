@@ -51,6 +51,11 @@ class Observer:
         self._m_local_updates = m.counter("local_updates")
         self._m_flushes = m.counter("flushes")
         self._m_flush_k = m.hist("flush_k")
+        # serve-loop hooks (repro.serve, docs/SERVING.md): depth of the
+        # live upload queue per drained window, and recv->commit latency
+        # per committed update (both host-side, single clock domain)
+        self._m_queue_depth = m.hist("queue_depth")
+        self._m_commit_latency = m.hist("commit_latency_ms")
 
     # ------------------------------------------------------ time access ---
 
@@ -139,6 +144,18 @@ class Observer:
         """Per-client Eq. 1 accuracy cache traffic (eval_cache > 0)."""
         self.metrics.counter("eval_cache_hits").inc(hits)
         self.metrics.counter("eval_cache_misses").inc(misses)
+
+    def queue_depth(self, depth):
+        """Upload-queue depth observed by the serve loop as it drains a
+        window (repro.serve) — metrics only; the per-window trace span
+        already carries the window size."""
+        self._m_queue_depth.observe(depth)
+
+    def commit_latency(self, seconds):
+        """One committed update's transport-arrival -> aggregation-commit
+        latency (host-monotonic, stamped and read server-side so the two
+        ends share a clock domain)."""
+        self._m_commit_latency.observe(seconds * 1e3)
 
     def failure(self, client, sim):
         """A mid-round failure: the attempt's work was discarded by the

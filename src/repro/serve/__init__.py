@@ -1,0 +1,36 @@
+"""``repro.serve`` — the federation as a live service (docs/SERVING.md).
+
+The closed-loop runtimes simulate asynchrony; this package *hosts* it:
+real client workers (threads or processes) push versioned, compressed
+uploads through a pluggable transport into a server hot loop that
+drives the SAME algorithm/aggregator/codec objects — and, through the
+determinism bridge (``driver="sequential"``, ``buffer_size=1``), yields
+bit-identical results to the simulation.
+
+    from repro.serve import serve_run
+    res = serve_run(cfg, init_params_fn=..., loss_fn=...,
+                    fed_data=data, evaluate_fn=...)
+
+Transports live behind a string registry (``get_transport`` /
+``register_transport``), mirroring ``repro.algorithms`` / ``repro.sim``.
+"""
+from repro.serve.client import (ClientCompute, ProcessClientWorker,
+                                ScenarioPacer, SequentialDriver,
+                                ThreadClientWorker)
+from repro.serve.messages import (WIRE_SCHEMA, BroadcastMsg, UploadMsg,
+                                  msg_from_wire, msg_to_wire)
+from repro.serve.multitenant import MultiTenantServer
+from repro.serve.run import launch_serving, serve_run
+from repro.serve.server import FLServer
+from repro.serve.transport import (ClientChannel, InprocTransport,
+                                   Transport, available_transports,
+                                   get_transport, register_transport)
+
+__all__ = [
+    "WIRE_SCHEMA", "UploadMsg", "BroadcastMsg", "msg_to_wire",
+    "msg_from_wire", "Transport", "ClientChannel", "InprocTransport",
+    "get_transport", "register_transport", "available_transports",
+    "FLServer", "ClientCompute", "ThreadClientWorker",
+    "ProcessClientWorker", "SequentialDriver", "ScenarioPacer",
+    "MultiTenantServer", "serve_run", "launch_serving",
+]

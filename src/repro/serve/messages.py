@@ -1,0 +1,148 @@
+"""The serve wire protocol (schema ``serve-wire/v1``).
+
+Two message families cross a transport:
+
+* ``UploadMsg`` — client -> server.  ``kind="report"`` carries the
+  policy's declared scalars (Eq. 1 value / gradient norm) so the SERVER
+  makes the ship/skip decision with exact policy state (VAFL's
+  above-mean gate is fleet-wide — no client can evaluate it alone);
+  ``kind="update"`` carries the model payload of an accepted upload
+  (a :class:`repro.compress.Payload` delta under a codec, the full
+  parameter tree under identity).
+
+* ``BroadcastMsg`` — server -> client.  ``kind="init"`` bootstraps a
+  client (initial model + the run flags it needs: which scalars to
+  compute, whether the exchange is two-phase); ``kind="decision"``
+  answers a report (two-phase algorithms only); ``kind="download"``
+  closes every event with the latest global model; ``kind="final"``
+  tells free-running clients to stop.
+
+The two-phase exchange mirrors the paper's protocol: a 4-byte scalar
+report precedes each decision, and the heavy model payload only ships
+when the server says so — which is exactly what ``CommStats`` has
+always accounted (reports cost 4 B; declined events cost no payload).
+Decision frames themselves are control-plane traffic and are NOT billed,
+matching the closed-loop runtimes where the decision is a function call.
+
+Everything in a message is either a scalar, a ``Payload`` (numpy planes
++ picklable treedef meta) or a parameter pytree — the socket transport
+pickles messages whole after converting tree leaves to numpy
+(:func:`tree_to_host` / 4-byte length-prefixed frames).
+"""
+from __future__ import annotations
+
+import pickle
+import struct
+from dataclasses import dataclass, field
+from typing import Any, Optional
+
+WIRE_SCHEMA = "serve-wire/v1"
+
+# UploadMsg kinds
+REPORT = "report"
+UPDATE = "update"
+# BroadcastMsg kinds
+INIT = "init"
+DECISION = "decision"
+DOWNLOAD = "download"
+FINAL = "final"
+
+
+@dataclass
+class UploadMsg:
+    """One client -> server message.
+
+    ``version`` is the global-model version the client last downloaded
+    (its training base — the server's staleness metadata and, under a
+    codec, the delta's reference).  ``seq`` is the client's own event
+    counter (per-client FIFO is asserted on it), ``sim_time`` the
+    client's clock (scenario-paced simulated seconds, or host seconds
+    for free-running workers).  ``recv_host`` is stamped by the
+    transport when the message lands server-side — the commit-latency
+    clock, deliberately single-domain."""
+    kind: str                      # REPORT | UPDATE
+    client: int
+    seq: int
+    version: int
+    sim_time: float = 0.0
+    value: Optional[float] = None  # Eq. 1 V (policies with needs_values)
+    norm: Optional[float] = None   # ||eff_grad||^2 (needs_norms)
+    codec: str = "identity"
+    payload: Any = None            # Payload (codec) | param tree (identity)
+    enc_seed: int = 0              # the payload's deterministic encode seed
+    recv_host: float = 0.0         # transport-stamped server arrival time
+
+
+@dataclass
+class BroadcastMsg:
+    """One server -> client message (init / decision / download / final)."""
+    kind: str
+    version: int = 0
+    tree: Any = None               # model pytree (init / download)
+    upload: bool = False           # DECISION: ship the payload?
+    meta: dict = field(default_factory=dict)   # INIT: run flags
+
+
+def tree_to_host(tree):
+    """Map a pytree's leaves to numpy so it pickles across processes
+    (jax.Array pickling is version-dependent; numpy is forever).  The
+    float bits are preserved exactly, so a socket hop never perturbs
+    golden-seed parity."""
+    import jax
+    import numpy as np
+    if tree is None:
+        return None
+    return jax.tree.map(lambda x: np.asarray(x), tree)
+
+
+def msg_to_wire(msg) -> bytes:
+    """Pickle one message into a 4-byte length-prefixed frame."""
+    if isinstance(msg, BroadcastMsg) and msg.tree is not None:
+        msg = BroadcastMsg(kind=msg.kind, version=msg.version,
+                           tree=tree_to_host(msg.tree), upload=msg.upload,
+                           meta=msg.meta)
+    elif isinstance(msg, UploadMsg) and msg.payload is not None:
+        from repro.compress.base import Payload
+        if not isinstance(msg.payload, Payload):   # identity: raw tree
+            msg = UploadMsg(**{**msg.__dict__,
+                               "payload": tree_to_host(msg.payload)})
+    body = pickle.dumps((WIRE_SCHEMA, msg), protocol=pickle.HIGHEST_PROTOCOL)
+    return struct.pack("!I", len(body)) + body
+
+
+def msg_from_wire(body: bytes):
+    """Decode one frame body (length prefix already consumed)."""
+    schema, msg = pickle.loads(body)
+    if schema != WIRE_SCHEMA:
+        raise ValueError(f"wire schema mismatch: got {schema!r}, "
+                         f"expected {WIRE_SCHEMA!r}")
+    return msg
+
+
+def read_frame(sock) -> Optional[bytes]:
+    """Read one length-prefixed frame from a socket; None on clean EOF
+    (peer closed between frames).  A half-read frame — the peer died
+    mid-send — raises ConnectionError, which the transport turns into
+    the discard/failure path."""
+    head = _read_exact(sock, 4)
+    if head is None:
+        return None
+    (n,) = struct.unpack("!I", head)
+    body = _read_exact(sock, n)
+    if body is None:
+        raise ConnectionError("peer closed mid-frame")
+    return body
+
+
+def _read_exact(sock, n: int) -> Optional[bytes]:
+    """Exactly n bytes, or None on EOF at a frame boundary; EOF inside
+    a frame raises ConnectionError."""
+    buf = b""
+    while len(buf) < n:
+        chunk = sock.recv(n - len(buf))
+        if not chunk:
+            if not buf:
+                return None
+            raise ConnectionError("peer closed mid-frame")
+        buf += chunk
+    return buf

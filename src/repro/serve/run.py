@@ -1,0 +1,122 @@
+"""``serve_run`` — one live serve run, batteries included.
+
+Mirrors ``run_event_driven``'s signature (config + the four callables)
+and returns the same ``RunResult``, so switching an experiment from
+simulation to service is a one-line change:
+
+    res = serve_run(cfg, init_params_fn=..., loss_fn=...,
+                    fed_data=data, evaluate_fn=...)
+
+Drivers:
+
+* ``driver="thread"`` (default) — one free-running thread per client,
+  real concurrency, arrival order is whatever the fleet produces.
+* ``driver="sequential"`` — the determinism bridge: one thread plays
+  every client in scheduler order; with ``buffer_size=1`` the result is
+  bit-identical to the closed-loop engines.
+
+``launch_serving`` returns the un-started pieces (server + workers) for
+callers composing their own lifecycles (multi-tenant, benchmarks).
+"""
+from __future__ import annotations
+
+from typing import Optional
+
+from repro.core.metrics import RunResult
+from repro.core.scheduler import SpeedModel
+from repro.serve.client import (ClientCompute, ScenarioPacer,
+                                SequentialDriver, ThreadClientWorker)
+from repro.serve.server import FLServer
+from repro.serve.transport import Transport, get_transport
+
+DRIVERS = ("thread", "sequential")
+
+
+def _resolve_transport(transport, num_clients: int, capacity: int):
+    if isinstance(transport, Transport):
+        return transport, False
+    return get_transport(transport)(num_clients, capacity), True
+
+
+def _resolve_pacer(pace, run_cfg):
+    """``pace``: None (free-run), True (the run's scenario compute fleet,
+    paper_testbed when none), a SpeedModel, or a ready ScenarioPacer."""
+    if pace is None or pace is False:
+        return None
+    if isinstance(pace, ScenarioPacer):
+        return pace
+    if pace is True:
+        from repro.core.runtimes.common import _scenario_models
+        compute, _, _ = _scenario_models(run_cfg, run_cfg.num_clients)
+        pace = compute or SpeedModel.paper_testbed(run_cfg.num_clients,
+                                                   run_cfg.seed)
+    return ScenarioPacer(pace)
+
+
+def launch_serving(run_cfg, *, init_params_fn, loss_fn, fed_data,
+                   evaluate_fn, client_eval_fn=None, transport="inproc",
+                   capacity: int = 0, pace=None, speed=None,
+                   rounds: Optional[int] = None,
+                   recv_timeout: float = 30.0, verbose: bool = False):
+    """Build (but do not start) one federation's serving pieces:
+    ``(server, workers, transport)``.  The caller owns the lifecycle:
+    ``server.start()``, start the workers, then ``server.run()`` or
+    compose ``server.step()`` into a larger loop (multi-tenant)."""
+    tr, _owned = _resolve_transport(transport, run_cfg.num_clients,
+                                    capacity)
+    server = FLServer(run_cfg, init_params_fn=init_params_fn,
+                      evaluate_fn=evaluate_fn, transport=tr, speed=speed,
+                      verbose=verbose)
+    compute = ClientCompute.for_run(
+        run_cfg, loss_fn=loss_fn, fed_data=fed_data,
+        client_eval_fn=client_eval_fn or evaluate_fn)
+    pacer = _resolve_pacer(pace, run_cfg)
+    workers = [ThreadClientWorker(compute, tr.client_channel(i), i,
+                                  pacer=pacer, rounds=rounds,
+                                  recv_timeout=recv_timeout)
+               for i in range(run_cfg.num_clients)]
+    return server, workers, tr
+
+
+def serve_run(run_cfg, *, init_params_fn, loss_fn, fed_data, evaluate_fn,
+              client_eval_fn=None, transport="inproc",
+              driver: str = "thread", capacity: int = 0, pace=None,
+              speed=None, stall_timeout: float = 60.0,
+              recv_timeout: float = 30.0,
+              verbose: bool = False) -> RunResult:
+    """Run one federation as a live service and return its RunResult."""
+    if driver not in DRIVERS:
+        raise ValueError(f"unknown driver {driver!r}; known: {DRIVERS}")
+    if driver == "sequential":
+        tr, owned = _resolve_transport(transport, run_cfg.num_clients,
+                                       capacity)
+        server = FLServer(run_cfg, init_params_fn=init_params_fn,
+                          evaluate_fn=evaluate_fn, transport=tr,
+                          speed=speed, account_bytes=False,
+                          verbose=verbose)
+        compute = ClientCompute.for_run(
+            run_cfg, loss_fn=loss_fn, fed_data=fed_data,
+            client_eval_fn=client_eval_fn or evaluate_fn)
+        try:
+            return SequentialDriver(server, compute).run()
+        finally:
+            if owned:
+                tr.close()
+    server, workers, tr = launch_serving(
+        run_cfg, init_params_fn=init_params_fn, loss_fn=loss_fn,
+        fed_data=fed_data, evaluate_fn=evaluate_fn,
+        client_eval_fn=client_eval_fn, transport=transport,
+        capacity=capacity, pace=pace, speed=speed,
+        recv_timeout=recv_timeout, verbose=verbose)
+    try:
+        server.start()
+        for w in workers:
+            w.start()
+        res = server.run(stall_timeout=stall_timeout)
+        for w in workers:
+            w.stop()
+        for w in workers:
+            w.join(timeout=5.0)
+        return res
+    finally:
+        tr.close()

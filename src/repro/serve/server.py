@@ -1,0 +1,353 @@
+"""``FLServer`` — the federation as a live service (docs/SERVING.md).
+
+The closed-loop runtimes pull completions from a simulated scheduler;
+the server's hot loop instead drains a transport's upload queue into
+windows and feeds each message through the SAME protocol objects
+(``UploadPolicy`` / ``Aggregator``), codec plumbing and accounting the
+runtimes use:
+
+* scalar **reports** run the policy's ship/skip decision with exact
+  fleet-wide state server-side (two-phase exchange: decision frames go
+  back unbilled, exactly like the closed loop's in-process decision);
+* accepted **updates** decode against the model the client actually
+  downloaded (per-client base cache), enter a FedBuff-style buffer of
+  ``buffer_size`` reconstructions and commit through the shared
+  ``_flush_reconstructions`` math — ``buffer_size=1`` is the sequential
+  per-arrival mix bit for bit;
+* every event closes with a **download** carrying the latest global
+  model; per-client version tracking feeds staleness weights s(tau).
+
+``EventScheduler`` is reused for bookkeeping only (per-client byte
+ledgers, and — under the single-threaded bridge driver — the exact
+simulated clock); nothing here waits on simulated time.  Blocking
+discipline: every transport receive carries a timeout (the
+``serve-blocking-in-hotloop`` analysis rule enforces this), a stalled
+fleet trips ``stall_timeout`` and the drain path commits whatever is
+buffered instead of wedging.
+"""
+from __future__ import annotations
+
+import time
+from contextlib import nullcontext
+from typing import Optional
+
+import jax
+import numpy as np
+
+from repro.common.pytree import tree_bytes
+from repro.core.metrics import CommStats, RoundRecord, RunResult
+from repro.core.runtimes.common import (_attach_sim_result,
+                                        _compressed_broadcast, _enc_seed,
+                                        _finish_obs, _flush_reconstructions,
+                                        _make_codecs, _obs_for_run,
+                                        _scenario_models, _tree_apply_delta,
+                                        _tree_delta, _BROADCAST)
+from repro.core.scheduler import EventScheduler, SpeedModel
+from repro.obs.console import progress
+from repro.serve import messages as wire
+from repro.serve.messages import BroadcastMsg, UploadMsg
+from repro.serve.transport import Transport
+
+# hot-loop poll granularity: long enough to sleep the loop when the
+# fleet is quiet, short enough that stop()/stall checks stay responsive
+_POLL = 0.05
+
+
+class FLServer:
+    """One federation behind a transport.  Lifecycle:
+
+        server = FLServer(cfg, init_params_fn=..., evaluate_fn=...,
+                          transport=transport)
+        server.start()                      # init broadcasts
+        result = server.run()               # hot loop until total_events
+        # or: server.step(timeout) from an external loop (multi-tenant),
+        #     then server.finalize()
+    """
+
+    def __init__(self, run_cfg, *, init_params_fn, evaluate_fn,
+                 transport: Transport, total_events: Optional[int] = None,
+                 sched: Optional[EventScheduler] = None,
+                 speed: Optional[SpeedModel] = None,
+                 account_bytes: bool = True, verbose: bool = False):
+        alg, policy, aggregator = run_cfg.make_algorithm()
+        if alg.event_mode != "async":
+            raise ValueError(
+                f"algorithm {run_cfg.algorithm!r} runs a sync barrier "
+                "(event_mode='sync-barrier') — the live serve loop has no "
+                "barrier; use an async algorithm (afl/vafl/eaflm/fedasync)")
+        self.cfg = run_cfg
+        self.policy, self.aggregator = policy, aggregator
+        N = run_cfg.num_clients
+        policy.begin_run(N)
+        aggregator.begin_run(N)
+        # the same init-key derivation as the closed-loop runtimes, so a
+        # serve run and a simulated run start from the same parameters
+        _, krng = jax.random.split(jax.random.key(run_cfg.seed))
+        self.global_params = init_params_fn(krng)
+        self.evaluate_fn = evaluate_fn
+        self.comm = CommStats(model_bytes=tree_bytes(self.global_params))
+        self.codec, self.bcodec, _ef = _make_codecs(run_cfg)  # ef is client-side
+        self.obs = _obs_for_run(run_cfg)
+        self.transport = transport
+        self.verbose = verbose
+
+        # scheduler: bookkeeping ledgers (and, when an external driver
+        # owns it, the exact simulated clock the result reports) — built
+        # exactly like the closed loop's, scenario models included, so
+        # the bridge driver's sched arithmetic matches events.py
+        if sched is None:
+            compute, net, avail = _scenario_models(run_cfg, N)
+            speed = speed or compute or SpeedModel.paper_testbed(
+                N, run_cfg.seed)
+            sched = EventScheduler(N, speed, network=net,
+                                   availability=avail, obs=self.obs)
+        self.sched = sched
+        self._account_bytes = account_bytes
+
+        # the two-phase exchange exists iff the policy can decline: it
+        # reports scalars or overrides the default always-ship decide()
+        from repro.algorithms.base import UploadPolicy as _Base
+        self.two_phase = bool(policy.reports
+                              or type(policy).decide is not _Base.decide)
+
+        self.model_version = np.zeros(N, int)
+        self.server_version = 0
+        self.prev_global = self.global_params
+        self.prev_prev_global = self.global_params
+        # the model each client last downloaded — the codec delta's
+        # decode base (lossy under a broadcast codec, exactly what the
+        # client trains from)
+        self.client_base = [self.global_params] * N
+        self._buffer: list = []          # reconstruction trees
+        self._buf_stale: list = []       # their staleness weights s(tau)
+        self._buf_recv: list = []        # their transport arrival stamps
+        self.K = max(1, run_cfg.buffer_size)
+        self.window = run_cfg.max_batch if run_cfg.max_batch > 0 else N
+        self.records: list = []
+        self.processed = 0               # completed events (downloads sent)
+        self.total_events = (run_cfg.rounds * N if total_events is None
+                             else total_events)
+        self._pending: dict = {}         # client -> sim_time of an accepted
+        #                                  report whose update hasn't landed
+        self._last_seq = np.full(N, -1, np.int64)   # per-client FIFO check
+        self._stopping = False
+        self._finalized = None
+
+    # ----------------------------------------------------------- lifecycle ---
+
+    def start(self) -> None:
+        """Send every client its init broadcast: the initial model plus
+        the run flags it needs.  Bootstrap traffic — not billed in
+        CommStats (the closed loop's clients start from the same init
+        implicitly)."""
+        meta = {"schema": wire.WIRE_SCHEMA,
+                "needs_values": self.policy.needs_values,
+                "needs_norms": self.policy.needs_norms,
+                "two_phase": self.two_phase,
+                "compressor": self.cfg.compressor,
+                "error_feedback": self.cfg.error_feedback,
+                "seed": self.cfg.seed,
+                "rounds": self.cfg.rounds}
+        for i in range(self.cfg.num_clients):
+            self.transport.send_broadcast(i, BroadcastMsg(
+                kind=wire.INIT, version=0, tree=self.global_params,
+                meta=meta))
+
+    def stop(self) -> None:
+        """Ask the hot loop to drain and return after the current window."""
+        self._stopping = True
+
+    def run(self, stall_timeout: float = 60.0) -> RunResult:
+        """The hot loop: drain upload windows until ``total_events``
+        events completed, ``stop()`` was called, or no message arrived
+        for ``stall_timeout`` seconds (dead fleet — drain and return
+        rather than wedge)."""
+        last_msg = time.monotonic()
+        while self.processed < self.total_events and not self._stopping:
+            if self.step(timeout=_POLL):
+                last_msg = time.monotonic()
+            elif time.monotonic() - last_msg > stall_timeout:
+                break
+        return self.finalize()
+
+    def step(self, timeout: float = 0.0) -> int:
+        """Drain and process ONE window (up to ``max_batch`` messages
+        already queued, waiting at most ``timeout`` for the first).
+        Returns the number of messages processed — 0 when the queue was
+        quiet, so external loops (multi-tenant) can round-robin without
+        blocking."""
+        window = self.transport.drain_uploads(self.window, timeout=timeout)
+        if not window:
+            return 0
+        if self.obs is not None:
+            self.obs.queue_depth(self.transport.queue_depth() + len(window))
+            h0 = self.obs.host_now()
+        for msg in window:
+            self._handle(msg)
+        if self.obs is not None:
+            self.obs.window(len(window), window[0].sim_time,
+                            window[-1].sim_time, h0)
+        return len(window)
+
+    # ------------------------------------------------------ event handling ---
+
+    def _handle(self, msg: UploadMsg) -> None:
+        i = int(msg.client)
+        if msg.seq <= self._last_seq[i]:
+            raise RuntimeError(
+                f"transport reordered client {i}: seq {msg.seq} after "
+                f"{self._last_seq[i]} — per-client FIFO is a transport "
+                "contract")
+        self._last_seq[i] = msg.seq
+        if msg.kind == wire.REPORT:
+            self._handle_report(i, msg)
+        elif msg.kind == wire.UPDATE:
+            self._handle_update(i, msg)
+        else:
+            raise ValueError(f"unknown upload kind {msg.kind!r}")
+
+    def _handle_report(self, i: int, msg: UploadMsg) -> None:
+        """Phase 1 of a two-phase event: the scalar report and the
+        server-side ship/skip decision (exact policy state — VAFL's gate
+        reads the whole fleet's reported values)."""
+        t = msg.sim_time
+        u0 = self.comm.uplink_bytes
+        thr = self.policy.window_threshold(self._server_delta)
+        if self.policy.reports:
+            self.comm.record_report(1)
+            if self.obs is not None:
+                self.obs.report(i, t)
+        upload = self.policy.decide(i, msg.value, msg.norm, thr)
+        if upload:
+            # decision frames are control-plane traffic (unbilled); the
+            # payload arrives as this client's next message.  The report's
+            # wire bytes carry over so the whole exchange lands in one
+            # ledger entry (deltas are within-message only — between a
+            # report and its update, OTHER clients move the counters)
+            self._pending[i] = (t, self.comm.uplink_bytes - u0)
+            self.transport.send_broadcast(
+                i, BroadcastMsg(kind=wire.DECISION, upload=True,
+                                version=self.server_version))
+        else:
+            self._finish_event(i, t, self.comm.uplink_bytes - u0)
+
+    def _handle_update(self, i: int, msg: UploadMsg) -> None:
+        """An accepted upload's payload: decode, buffer, commit every K."""
+        t = msg.sim_time
+        pend = self._pending.pop(i, None)
+        carry = pend[1] if pend is not None else 0   # the report's bytes
+        u0 = self.comm.uplink_bytes
+        p0 = self.comm.upload_payload_bytes
+        if self.codec.is_identity:
+            recon = msg.payload            # the full parameter tree
+            self.comm.record_upload(1)
+        else:
+            with (self.obs.timed("decode", client=i, codec=self.codec.name)
+                  if self.obs is not None else nullcontext()):
+                decoded = self.codec.decode(msg.payload)
+            recon = _tree_apply_delta(self.client_base[i], decoded)
+            self.comm.record_upload(1, nbytes=msg.payload.nbytes)
+        staleness = self.server_version - self.model_version[i]
+        if self.obs is not None:
+            self.obs.upload(i, t, staleness=int(staleness),
+                            nbytes=self.comm.upload_payload_bytes - p0,
+                            codec=self.codec.name)
+        self._buffer.append(recon)
+        self._buf_stale.append(self.aggregator.stale_weight(int(staleness)))
+        self._buf_recv.append(msg.recv_host)
+        if len(self._buffer) >= self.K:
+            self._flush(t)
+        self._finish_event(i, t, carry + self.comm.uplink_bytes - u0)
+
+    def _flush(self, sim_time: float) -> None:
+        """Commit the buffer: one staleness-weighted FedBuff mix through
+        the shared runtime math, then advance the server version."""
+        if self.obs is not None:
+            self.obs.flush(len(self._buffer), sim_time)
+        self.prev_prev_global = self.prev_global
+        self.prev_global = self.global_params
+        self.global_params = _flush_reconstructions(
+            self.aggregator, self.global_params, self._buffer,
+            self._buf_stale)
+        self.server_version += 1
+        if self.obs is not None:
+            now = time.monotonic()
+            for stamp in self._buf_recv:
+                if stamp:
+                    self.obs.commit_latency(now - stamp)
+        self._buffer.clear()
+        self._buf_stale.clear()
+        self._buf_recv.clear()
+
+    def _finish_event(self, i: int, t: float, up_bytes: int) -> None:
+        """Every event's tail: the download broadcast, version tracking,
+        byte ledgers, and the eval-boundary record."""
+        d0 = self.comm.downlink_bytes
+        if self.bcodec is None:
+            sent = self.global_params
+            self.comm.record_broadcast(1)
+        else:
+            sent = _compressed_broadcast(
+                self.bcodec, self.comm, self.global_params, 1,
+                _enc_seed(self.cfg, self.processed, i, _BROADCAST),
+                obs=self.obs)
+        if self.obs is not None:
+            self.obs.broadcast(i, t, nbytes=self.comm.downlink_bytes - d0,
+                               codec=None if self.bcodec is None
+                               else self.bcodec.name)
+        self.client_base[i] = sent
+        self.model_version[i] = self.server_version
+        self.transport.send_broadcast(i, BroadcastMsg(
+            kind=wire.DOWNLOAD, version=self.server_version, tree=sent))
+        if self._account_bytes:
+            self.sched.account_bytes(i, up_bytes,
+                                     self.comm.downlink_bytes - d0)
+        self.processed += 1
+        if self.processed % self.cfg.events_per_eval == 0:
+            h0 = self.obs.host_now() if self.obs is not None else 0.0
+            acc = float(self.evaluate_fn(self.global_params))
+            if self.obs is not None:
+                self.obs.eval_event(self.processed, t, h0)
+            self.records.append(RoundRecord(
+                round=self.processed, time=t, global_acc=acc,
+                uploads_so_far=self.comm.model_uploads))
+            if self.verbose:
+                progress(f"[{self.cfg.algorithm}/serve] ev "
+                         f"{self.processed:4d} t={t:8.1f} acc={acc:.4f} "
+                         f"uploads={self.comm.model_uploads}")
+
+    def _server_delta(self):
+        return _tree_delta(self.prev_global, self.prev_prev_global)
+
+    # ------------------------------------------------------------ shutdown ---
+
+    def finalize(self, drain_timeout: float = 1.0) -> RunResult:
+        """Graceful drain + shutdown: process everything still queued,
+        commit any partial buffer (no accepted update is ever lost),
+        discard wedged two-phase exchanges through the failure hook,
+        send final broadcasts, seal obs, build the ``RunResult``.
+        Idempotent — the first call's result is returned thereafter."""
+        if self._finalized is not None:
+            return self._finalized
+        deadline = time.monotonic() + drain_timeout
+        while self.processed < self.total_events:
+            n = self.step(timeout=0.01)
+            if n == 0 and time.monotonic() > deadline:
+                break
+        for i, (t, _carry) in sorted(self._pending.items()):
+            # a client accepted for upload never delivered its payload
+            # (killed worker): discard, count the failure, move on
+            if self.obs is not None:
+                self.obs.failure(i, t)
+        self._pending.clear()
+        if self._buffer:
+            self._flush(float(self.sched.now))
+        for i in range(self.cfg.num_clients):
+            self.transport.send_broadcast(
+                i, BroadcastMsg(kind=wire.FINAL,
+                                version=self.server_version))
+        res = RunResult(self.cfg.algorithm, self.records, self.comm,
+                        self.cfg.target_acc).finalize_target()
+        res = _finish_obs(_attach_sim_result(res, self.sched), self.obs)
+        self._finalized = res
+        return res

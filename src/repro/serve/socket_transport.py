@@ -1,0 +1,193 @@
+"""Interprocess transport: localhost TCP, length-prefixed pickle frames.
+
+The server listens on an ephemeral loopback port; each client process
+connects and sends a hello frame naming its client id, then streams
+``UploadMsg`` frames while an accept/reader thread per connection pushes
+them — parsed and arrival-stamped — into the same bounded internal
+queue the ``inproc`` transport uses, so the ``FLServer`` hot loop is
+transport-agnostic.  Broadcasts are written back on the same connection
+(one writer lock per socket).
+
+Failure semantics: a connection that dies mid-frame (killed worker)
+raises on the reader thread, which records the client as dead and
+enqueues nothing — the server's stall timeout + pending-exchange
+discard path (``obs.failure``) handles the rest.  Per-client FIFO holds
+because TCP preserves byte order per connection.
+
+Payload trees are converted to numpy before pickling
+(``messages.tree_to_host``) — float bits survive the hop exactly.
+"""
+from __future__ import annotations
+
+import pickle
+import queue
+import socket
+import threading
+import time
+from typing import Dict, List, Optional
+
+from repro.serve.messages import (WIRE_SCHEMA, UploadMsg, msg_from_wire,
+                                  msg_to_wire, read_frame)
+from repro.serve.transport import ClientChannel, Transport
+
+_HELLO = "hello"
+
+
+class _SocketChannel(ClientChannel):
+    """Client-process side: one connected socket, frames both ways."""
+
+    def __init__(self, host: str, port: int, client: int,
+                 connect_timeout: float = 30.0):
+        self.client = client
+        self._sock = socket.create_connection((host, port),
+                                              timeout=connect_timeout)
+        self._sock.settimeout(None)
+        self._lock = threading.Lock()
+        self._sock.sendall(msg_to_wire((_HELLO, client)))
+
+    def send(self, msg: UploadMsg, timeout: Optional[float] = None) -> bool:
+        # TCP's own flow control is the backpressure: sendall blocks when
+        # the server-side bounded queue stops draining the socket buffer
+        with self._lock:
+            self._sock.sendall(msg_to_wire(msg))
+        return True
+
+    def recv(self, timeout: Optional[float] = None):
+        self._sock.settimeout(timeout if timeout else 0.001)
+        try:
+            body = read_frame(self._sock)
+        except socket.timeout:
+            return None
+        finally:
+            self._sock.settimeout(None)
+        return None if body is None else msg_from_wire(body)
+
+    def close(self) -> None:
+        try:
+            self._sock.close()
+        except OSError:
+            pass
+
+
+class SocketTransport(Transport):
+    """Server side: listener + one reader thread per accepted client."""
+
+    name = "socket"
+
+    def __init__(self, num_clients: int, capacity: int = 0,
+                 host: str = "127.0.0.1"):
+        self.num_clients = num_clients
+        self._uploads: queue.Queue = queue.Queue(maxsize=capacity)
+        self._conns: Dict[int, socket.socket] = {}
+        self._send_locks: Dict[int, threading.Lock] = {}
+        # broadcasts addressed to a client that hasn't connected yet
+        # (e.g. the init broadcast racing a slow process spawn) wait in
+        # a per-client buffer and flush — in order, under the same send
+        # lock — the moment its hello lands
+        self._pending_bcast: Dict[int, List[bytes]] = {}
+        self._dead: set = set()
+        self._threads: List[threading.Thread] = []
+        self._closing = False
+        self._listener = socket.socket(socket.AF_INET, socket.SOCK_STREAM)
+        self._listener.setsockopt(socket.SOL_SOCKET, socket.SO_REUSEADDR, 1)
+        self._listener.bind((host, 0))
+        self._listener.listen(num_clients)
+        self.address = self._listener.getsockname()   # (host, port)
+        t = threading.Thread(target=self._accept_loop, daemon=True,
+                             name="serve-accept")
+        t.start()
+        self._threads.append(t)
+
+    # ------------------------------------------------- server internals ---
+
+    def _accept_loop(self) -> None:
+        while not self._closing:
+            try:
+                conn, _ = self._listener.accept()
+            except OSError:
+                return   # listener closed
+            t = threading.Thread(target=self._reader, args=(conn,),
+                                 daemon=True, name="serve-reader")
+            t.start()
+            self._threads.append(t)
+
+    def _reader(self, conn: socket.socket) -> None:
+        client = None
+        try:
+            hello = msg_from_wire(read_frame(conn))
+            if not (isinstance(hello, tuple) and hello[0] == _HELLO):
+                raise ConnectionError("expected hello frame")
+            client = int(hello[1])
+            with self._lock_for(client):
+                self._conns[client] = conn
+                for frame in self._pending_bcast.pop(client, []):
+                    conn.sendall(frame)
+            while True:
+                body = read_frame(conn)
+                if body is None:
+                    return                     # clean close
+                msg = msg_from_wire(body)
+                msg.recv_host = time.monotonic()
+                self._uploads.put(msg)         # bounded: blocks the reader
+        except (ConnectionError, OSError, pickle.UnpicklingError):
+            if client is not None:
+                self._dead.add(client)
+        finally:
+            try:
+                conn.close()
+            except OSError:
+                pass
+
+    # -------------------------------------------------------- Transport ---
+
+    def recv_upload(self, timeout: Optional[float] = None
+                    ) -> Optional[UploadMsg]:
+        try:
+            if timeout:
+                return self._uploads.get(timeout=timeout)
+            return self._uploads.get_nowait()
+        except queue.Empty:
+            return None
+
+    def queue_depth(self) -> int:
+        return self._uploads.qsize()
+
+    def dead_clients(self) -> set:
+        """Clients whose connection died mid-stream (discard path)."""
+        return set(self._dead)
+
+    def _lock_for(self, client: int) -> threading.Lock:
+        # dict.setdefault is GIL-atomic: concurrent first touches from
+        # the reader thread and the serve loop agree on one lock
+        return self._send_locks.setdefault(client, threading.Lock())
+
+    def send_broadcast(self, client: int, msg) -> None:
+        if client in self._dead:
+            return   # never wedge on (or buffer for) a dead client
+        frame = msg_to_wire(msg)
+        with self._lock_for(client):
+            conn = self._conns.get(client)
+            if conn is None:
+                # not connected yet: hold the frame for the hello flush
+                self._pending_bcast.setdefault(client, []).append(frame)
+                return
+            try:
+                conn.sendall(frame)
+            except OSError:
+                self._dead.add(client)
+
+    def client_channel(self, client: int) -> ClientChannel:
+        host, port = self.address
+        return _SocketChannel(host, port, client)
+
+    def close(self) -> None:
+        self._closing = True
+        try:
+            self._listener.close()
+        except OSError:
+            pass
+        for conn in list(self._conns.values()):
+            try:
+                conn.close()
+            except OSError:
+                pass

@@ -1,0 +1,24 @@
+"""Negative fixture: every receive in a loop bounds its wait."""
+
+
+def hot_loop(transport, channel, q, meta):
+    while True:
+        msg = transport.recv_upload(timeout=0.05)
+        if msg is None:
+            break
+        reply = channel.recv(timeout=1.0)
+        item = q.get(timeout=0.1)
+        nxt = q.get(False)                     # non-blocking form is fine
+        flag = meta.get("two_phase")           # dict.get: not a queue
+        yield msg, reply, item, nxt, flag
+
+
+def drain(transport):
+    for _ in range(10):
+        yield transport.drain_uploads(64, timeout=0.05)
+
+
+def outside_a_loop(transport):
+    # a single bounded-context receive outside any loop is the caller's
+    # business (e.g. a test waiting on one known message)
+    return transport.recv_upload()

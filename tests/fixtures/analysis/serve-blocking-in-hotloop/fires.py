@@ -1,0 +1,16 @@
+"""Positive fixture: unbounded transport receives inside serve loops."""
+
+
+def hot_loop(transport, channel, q):
+    while True:
+        msg = transport.recv_upload()          # blocks a dead fleet forever
+        if msg is None:
+            break
+        reply = channel.recv()                 # no timeout either
+        item = q.get()                         # queue.Queue block-forever form
+        yield msg, reply, item
+
+
+def drain(transport):
+    for _ in range(10):
+        yield transport.drain_uploads(64)      # first-message wait unbounded

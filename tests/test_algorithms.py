@@ -266,6 +266,50 @@ class TestRegistry:
         assert "afl" in server.ALGORITHMS
 
 
+# ------------------------------------------------- serve determinism bridge ---
+
+class TestServeBridge:
+    """The live-service determinism bridge (repro.serve,
+    docs/SERVING.md): an inproc serve run driven by the single-threaded
+    ``SequentialDriver`` at buffer K=1 replays the closed-loop event
+    engine's RNG chain, scheduler arithmetic and encode seeds — so its
+    ``RunResult`` is bit-identical to ``run_event_driven`` on the same
+    golden seed.  This extends the golden-parity chain above one layer
+    out: legacy monolith == protocol runtimes == the served federation."""
+
+    @pytest.mark.parametrize("alg", ["afl", "vafl", "eaflm", "fedasync"])
+    def test_sequential_serve_matches_closed_loop(self, setup, alg):
+        from repro.serve import serve_run
+        new = _go(setup, lambda cfg, **kw: serve_run(
+            cfg, driver="sequential", **kw), _cfg(FLRunConfig, alg))
+        old = _go(setup, run_event_driven, _cfg(FLRunConfig, alg))
+        _assert_bit_identical(new, old)
+
+    def test_compressed_serve_matches_closed_loop(self, setup):
+        """Codec payloads cross the wire (encode at the client, decode
+        at the server against the per-client base) and still land
+        bit-exact — the global-event-counter encode seeds survive the
+        client/server split."""
+        from repro.serve import serve_run
+        for kw in (dict(compressor="topk0.1_int8"),
+                   dict(compressor="int8", broadcast_compressor="int8")):
+            new = _go(setup, lambda cfg, **k: serve_run(
+                cfg, driver="sequential", **k),
+                _cfg(FLRunConfig, "vafl", **kw))
+            old = _go(setup, run_event_driven,
+                      _cfg(FLRunConfig, "vafl", **kw))
+            _assert_bit_identical(new, old)
+
+    def test_sync_barrier_algorithms_rejected(self, setup):
+        """fedavg's round barrier has no live-service analogue — the
+        server refuses it at construction, loudly."""
+        from repro.serve import serve_run
+        with pytest.raises(ValueError, match="sync barrier"):
+            _go(setup, lambda cfg, **kw: serve_run(
+                cfg, driver="sequential", **kw),
+                _cfg(FLRunConfig, "fedavg"))
+
+
 # ------------------------------------------------------- no string branches ---
 # Both source lints below started life here as ad-hoc regexes and are
 # now registered ``repro.analysis`` rules (docs/STATIC_ANALYSIS.md);

@@ -160,7 +160,7 @@ class TestEntryPoints:
         """table3/fig4/fig5 at smoke scale — the Federation-backed
         benchmark harness end to end (~10 s)."""
         p = _run(["-m", "benchmarks.run", "--smoke",
-                  "--skip", "engine,compress,scenarios"])
+                  "--skip", "engine,compress,scenarios,serving"])
         assert p.returncode == 0, p.stderr[-2000:]
         assert "[table3]" in p.stdout
         assert "communication_times" in p.stdout or "ccr" in p.stdout
@@ -172,7 +172,7 @@ class TestEntryPoints:
         import json
         p = subprocess.run(
             [sys.executable, str(ROOT / "benchmarks" / "run.py"), "--smoke",
-             "--skip", "table3,fig4,fig5,compress,scenarios,obs,analysis"],
+             "--skip", "table3,fig4,fig5,compress,scenarios,obs,analysis,serving"],
             cwd=tmp_path, timeout=420, capture_output=True, text=True)
         assert p.returncode == 0, p.stderr[-2000:]
         out = tmp_path / "BENCH_engine.json"
@@ -197,7 +197,7 @@ class TestEntryPoints:
         import json
         p = subprocess.run(
             [sys.executable, str(ROOT / "benchmarks" / "run.py"), "--smoke",
-             "--skip", "table3,fig4,fig5,compress,engine,obs,analysis"],
+             "--skip", "table3,fig4,fig5,compress,engine,obs,analysis,serving"],
             cwd=tmp_path, timeout=420, capture_output=True, text=True)
         assert p.returncode == 0, p.stderr[-2000:]
         out = tmp_path / "BENCH_scenarios.json"
@@ -227,7 +227,7 @@ class TestEntryPoints:
         import json
         p = subprocess.run(
             [sys.executable, str(ROOT / "benchmarks" / "run.py"), "--smoke",
-             "--skip", "table3,fig4,fig5,compress,engine,scenarios,analysis"],
+             "--skip", "table3,fig4,fig5,compress,engine,scenarios,analysis,serving"],
             cwd=tmp_path, timeout=420, capture_output=True, text=True)
         assert p.returncode == 0, p.stderr[-2000:]
         out = tmp_path / "BENCH_obs.json"
@@ -253,7 +253,7 @@ class TestEntryPoints:
         import json
         p = subprocess.run(
             [sys.executable, str(ROOT / "benchmarks" / "run.py"), "--smoke",
-             "--skip", "table3,fig4,fig5,compress,engine,scenarios,obs"],
+             "--skip", "table3,fig4,fig5,compress,engine,scenarios,obs,serving"],
             cwd=tmp_path, timeout=420, capture_output=True, text=True)
         assert p.returncode == 0, p.stderr[-2000:]
         out = tmp_path / "BENCH_analysis.json"
@@ -272,6 +272,38 @@ class TestEntryPoints:
         assert pt["by_file"]
         if not pt["hypothesis_installed"]:
             assert pt["shim_skipped"] == pt["total"]
+
+    def test_bench_serving_json_emitted(self, tmp_path):
+        """benchmarks/run.py --smoke must leave BENCH_serving.json behind
+        (schema bench-serving/v1): a live inproc federation with concurrent
+        thread workers sustaining a minimum upload rate, and the obs
+        counters reconciled against CommStats inside the bench itself."""
+        import json
+        p = subprocess.run(
+            [sys.executable, str(ROOT / "benchmarks" / "run.py"), "--smoke",
+             "--skip", "table3,fig4,fig5,compress,engine,scenarios,obs,analysis"],
+            cwd=tmp_path, timeout=420, capture_output=True, text=True)
+        assert p.returncode == 0, p.stderr[-2000:]
+        out = tmp_path / "BENCH_serving.json"
+        assert out.exists(), p.stdout[-2000:]
+        doc = json.loads(out.read_text())
+        assert doc["schema"] == "bench-serving/v1"
+        assert doc["rows"], "no serving rows emitted"
+        assert doc["trace_reconciled"] is True
+        labels = {r["lap"]: r for r in doc["rows"]}
+        assert {"throughput", "paced"} <= set(labels)
+        for row in doc["rows"]:
+            for key in ("lap", "algorithm", "compressor", "completed_events",
+                        "uploads", "elapsed_s", "uploads_per_sec",
+                        "events_per_sec", "queue_depth_max",
+                        "trace_reconciled"):
+                assert key in row, f"missing {key}"
+            assert row["completed_events"] > 0
+            assert row["trace_reconciled"] is True
+        # the free-running lap must sustain a minimum upload rate — the
+        # floor is deliberately loose (CI boxes vary) but a wedged hot
+        # loop or accidental per-event recompile lands far below it
+        assert labels["throughput"]["uploads_per_sec"] > 1.0
 
     @pytest.mark.slow
     def test_benchmarks_smoke_all_sections(self):

@@ -1,0 +1,196 @@
+"""Chaos soak + checkpoint-resume benchmark (docs/RESILIENCE.md).
+
+Three laps over a live inproc federation of concurrent thread workers:
+
+* **fault-free** — the control lap: afl + identity on the plain inproc
+  transport, no retries needed.
+
+* **chaos** — the same federation behind ``ChaosTransport`` injecting
+  drops, duplicates, reorders and client blackouts from a seeded
+  schedule, clients armed with ``RetryPolicy``, the server running
+  exchange + liveness deadlines.  The lap asserts the resilience
+  contract: every client commits exactly as many updates as in the
+  fault-free lap (at-least-once sending + seq dedup = exactly-once
+  processing), and reports the retry/duplicate/eviction economics.
+
+* **resume** — full-run checkpoint-resume: one run writes periodic
+  atomic checkpoints, a second run restores the last one and finishes
+  the budget, measuring restore latency and the residual event count.
+
+    PYTHONPATH=src python -m benchmarks.resilience_bench \
+        [--smoke] [--json BENCH_resilience.json]
+
+Emits the machine-readable ``BENCH_resilience.json`` (schema
+``bench-resilience/v1``) asserted by tier-1 (tests/test_public_api.py).
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import sys
+import tempfile
+import time
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), ".."))
+
+
+def _fleet(cfg, cb, transport, *, retry=None, exchange_timeout=None,
+           liveness_timeout=None):
+    """One lap: launch, run to completion, return (server, result,
+    workers, elapsed)."""
+    from repro.serve import launch_serving
+    server, workers, tr = launch_serving(
+        cfg, transport=transport, recv_timeout=10.0, retry=retry,
+        exchange_timeout=exchange_timeout, liveness_timeout=liveness_timeout,
+        **cb)
+    t0 = time.perf_counter()
+    try:
+        server.start()
+        for w in workers:
+            w.start()
+        res = server.run(stall_timeout=60.0)
+        for w in workers:
+            w.stop()
+        for w in workers:
+            w.join(timeout=10.0)
+    finally:
+        tr.close()
+    return server, res, workers, time.perf_counter() - t0
+
+
+def run(*, smoke: bool = False, out_json=None):
+    from benchmarks.fl_common import BenchScale, build_problem
+    from repro.core import FLRunConfig
+    from repro.core.client import (LocalSpec, make_evaluator,
+                                   make_weighted_classifier_loss)
+    from repro.resilience import ChaosTransport, FaultSpec, RetryPolicy
+    from repro.serve import serve_run
+
+    clients = 6
+    rounds = 3 if smoke else 8
+    scale = BenchScale(samples_per_client=120 if smoke else 400,
+                       test_samples=200 if smoke else 500)
+    fed_data, (fwd, init_fn, mcfg), (xte, yte) = build_problem(
+        "mlp", scale, clients, True)
+    cb = dict(init_params_fn=lambda k: init_fn(mcfg, k),
+              loss_fn=make_weighted_classifier_loss(fwd, mcfg),
+              fed_data=fed_data,
+              evaluate_fn=make_evaluator(fwd, mcfg, xte, yte, batch=200))
+
+    def cfg(**kw):
+        base = dict(algorithm="afl", num_clients=clients, rounds=rounds,
+                    local=LocalSpec(batch_size=32, local_rounds=1, lr=0.1),
+                    target_acc=0.99, events_per_eval=clients,
+                    seed=scale.seed)
+        base.update(kw)
+        return FLRunConfig(**base)
+
+    rows = []
+
+    # ---- lap 1: fault-free control -----------------------------------
+    s0, r0, _, el0 = _fleet(cfg(), cb, "inproc")
+    base_committed = [int(x) for x in s0.accepted_by_client]
+    rows.append({
+        "lap": "fault-free", "clients": clients,
+        "completed_events": s0.processed,
+        "committed_per_client": base_committed,
+        "elapsed_s": round(el0, 4),
+        "events_per_sec": round(s0.processed / el0, 2),
+    })
+
+    # ---- lap 2: chaos soak -------------------------------------------
+    faults = FaultSpec(drop=0.12, duplicate=0.08, reorder=0.08,
+                       corrupt=0.02, blackout=0.02, blackout_s=0.2,
+                       seed=scale.seed + 13)
+    chaos = ChaosTransport(clients, faults=faults)
+    retry = RetryPolicy(max_attempts=10, attempt_timeout_s=0.5,
+                        base_s=0.02, max_backoff_s=0.25,
+                        seed=scale.seed + 13)
+    s1, r1, workers, el1 = _fleet(cfg(), cb, chaos, retry=retry,
+                                  exchange_timeout=10.0,
+                                  liveness_timeout=30.0)
+    chaos_committed = [int(x) for x in s1.accepted_by_client]
+    retries = sum(w.stats["retries"] for w in workers)
+    multiset_ok = (chaos_committed == base_committed
+                   and s1.processed == s0.processed)
+    rows.append({
+        "lap": "chaos", "clients": clients,
+        "completed_events": s1.processed,
+        "committed_per_client": chaos_committed,
+        "multiset_matches_fault_free": multiset_ok,
+        "client_retries": retries,
+        "server_duplicates": s1.duplicates,
+        "evictions": s1.evictions,
+        "readmissions": s1.readmissions,
+        "exchange_expired": s1.exchange_expired,
+        "wire_errors": s1.wire_errors,
+        "faults": dict(chaos.stats),
+        "elapsed_s": round(el1, 4),
+        "events_per_sec": round(s1.processed / el1, 2),
+        "chaos_slowdown": round(el1 / el0, 2),
+    })
+
+    # ---- lap 3: checkpoint-resume ------------------------------------
+    with tempfile.TemporaryDirectory() as d:
+        path = os.path.join(d, "run.ckpt")
+        every = max(1, (rounds * clients) // 3)
+        t0 = time.perf_counter()
+        serve_run(cfg(checkpoint_path=path, checkpoint_every=every),
+                  driver="sequential", **cb)
+        first = time.perf_counter() - t0
+        ckpt_bytes = os.path.getsize(path)
+        t0 = time.perf_counter()
+        res = serve_run(cfg(checkpoint_path=path, resume=True),
+                        driver="sequential", **cb)
+        second = time.perf_counter() - t0
+        rows.append({
+            "lap": "resume", "clients": clients,
+            "checkpoint_every_events": every,
+            "checkpoint_bytes": ckpt_bytes,
+            "first_run_s": round(first, 4),
+            "resume_run_s": round(second, 4),
+            "resumed_records": len(res.records),
+            "final_acc": (res.records[-1].global_acc
+                          if res.records else None),
+        })
+
+    print(f"{'lap':>11s} {'events':>7s} {'ev/s':>8s}  detail")
+    for row in rows:
+        if row["lap"] == "chaos":
+            detail = (f"multiset_ok={row['multiset_matches_fault_free']} "
+                      f"retries={row['client_retries']} "
+                      f"dups={row['server_duplicates']} "
+                      f"faults={row['faults']}")
+        elif row["lap"] == "resume":
+            detail = (f"ckpt={row['checkpoint_bytes']}B "
+                      f"first={row['first_run_s']}s "
+                      f"resume={row['resume_run_s']}s")
+        else:
+            detail = f"committed={row['committed_per_client']}"
+        ev = row.get("completed_events", "-")
+        evs = row.get("events_per_sec", "-")
+        print(f"{row['lap']:>11s} {str(ev):>7s} {str(evs):>8s}  {detail}")
+
+    report = {"schema": "bench-resilience/v1", "smoke": smoke,
+              "clients": clients,
+              "multiset_matches_fault_free": multiset_ok,
+              "rows": rows}
+    if out_json:
+        with open(out_json, "w") as f:
+            json.dump(report, f, indent=2)
+        print(f"wrote {out_json}")
+    return report
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--smoke", action="store_true")
+    ap.add_argument("--json", default=None)
+    args = ap.parse_args()
+    run(smoke=args.smoke, out_json=args.json)
+
+
+if __name__ == "__main__":
+    main()

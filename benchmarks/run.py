@@ -13,6 +13,8 @@ Sections:
   [analysis] repro.analysis static gate over src/benchmarks/examples
   [serving]  repro.serve live-service load generator (uploads/sec,
              queue depth, commit latency under paper_testbed traffic)
+  [resilience] repro.resilience chaos soak + checkpoint-resume (seeded
+             fault injection, retry/dedup reconciliation, restore time)
   [kernels]  grad_diff_norm / linear_scan microbenchmarks
   [roofline] three-term roofline per (arch x shape) from dry-run artifacts
   [gated]    cross-pod gated-collective accounting (multi-pod artifacts)
@@ -164,6 +166,21 @@ def main() -> None:
            out_json=os.path.join(
                "artifacts" if os.path.isdir("artifacts") else "",
                "BENCH_serving.json"))
+        print()
+
+    if "resilience" not in skip:
+        print("== [resilience] chaos soak + checkpoint-resume "
+              "(repro.resilience) ==")
+        from benchmarks.resilience_bench import run as rb
+        # always emits the machine-readable BENCH_resilience.json (schema
+        # bench-resilience/v1): the chaos lap's committed-update multiset
+        # reconciled against the fault-free control (at-least-once retry
+        # + seq dedup = exactly-once commit) plus checkpoint write/restore
+        # economics — tier-1 asserts it (tests/test_public_api.py)
+        rb(smoke=args.smoke or args.fast,
+           out_json=os.path.join(
+               "artifacts" if os.path.isdir("artifacts") else "",
+               "BENCH_resilience.json"))
         print()
 
     if "kernels" not in skip:

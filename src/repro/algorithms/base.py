@@ -99,6 +99,16 @@ class UploadPolicy:
     def begin_run(self, num_clients: int) -> None:
         """Reset per-run state (called once by every runtime)."""
 
+    def state(self):
+        """Checkpointable per-run state (run-state checkpoints,
+        ``repro.checkpoint.save_run_state``); None for stateless
+        policies.  Stateful policies override both this and
+        ``set_state`` — the default pair round-trips nothing."""
+        return None
+
+    def set_state(self, state) -> None:
+        """Restore ``state()``'s value after ``begin_run`` on resume."""
+
     def window_threshold(self, server_delta_fn: Callable) -> float:
         """Server-side threshold, evaluated once per window / mix point
         (EAFLM's Eq. 3 RHS).  ``server_delta_fn()`` lazily materialises

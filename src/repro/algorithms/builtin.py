@@ -38,6 +38,13 @@ class VAFLPolicy(UploadPolicy):
     def begin_run(self, num_clients: int) -> None:
         self._known_V = np.full(num_clients, np.inf)
 
+    def state(self):
+        # the fleet-wide gate state: every client's latest reported V
+        return {"known_V": self._known_V.copy()}
+
+    def set_state(self, state) -> None:
+        self._known_V = np.asarray(state["known_V"], float).copy()
+
     def decide(self, i: int, value: Optional[float], norm: Optional[float],
                threshold: float) -> bool:
         self._known_V[i] = value

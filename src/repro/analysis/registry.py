@@ -22,6 +22,7 @@ _BUILTIN_MODULES = (
     "repro.analysis.rules.hygiene",
     "repro.analysis.rules.architecture",
     "repro.analysis.rules.serving",
+    "repro.analysis.rules.resilience",
 )
 _builtins_loaded = False
 

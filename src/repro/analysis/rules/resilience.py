@@ -1,0 +1,76 @@
+"""Resilience rules: failure visibility in the serving stack.
+
+The resilience layer's whole contract (docs/RESILIENCE.md) is that
+failures are *structured events*: a corrupt frame becomes a WireError
+counted through obs, a dead socket becomes a dead-client reason the
+liveness tracker consumes, a wedged exchange becomes an eviction.  A
+broad ``except`` that swallows the exception and does nothing re-opens
+the exact hole this PR closed — the silent reader-thread death, where a
+client vanished and the server never learned why.  This rule forbids
+that shape mechanically inside ``repro/serve`` and ``repro/resilience``.
+"""
+from __future__ import annotations
+
+import ast
+from typing import Iterator
+
+from repro.analysis.finding import Finding
+from repro.analysis.registry import _register_builtin
+from repro.analysis.rules.base import Rule
+from repro.analysis.source import ParsedModule
+
+# handler types broad enough to catch programming errors, not just the
+# narrow I/O failures a transport legitimately absorbs
+_BROAD = {"Exception", "BaseException"}
+
+
+def _is_broad(handler: ast.ExceptHandler) -> bool:
+    t = handler.type
+    if t is None:                      # bare except:
+        return True
+    if isinstance(t, ast.Name):
+        return t.id in _BROAD
+    if isinstance(t, ast.Attribute):   # builtins.Exception style
+        return t.attr in _BROAD
+    if isinstance(t, ast.Tuple):
+        return any(_is_broad(ast.ExceptHandler(type=e)) for e in t.elts)
+    return False
+
+
+def _handles(handler: ast.ExceptHandler) -> bool:
+    """A handler body that raises, or performs ANY call — reporting to
+    obs, marking a client dead, logging — counts as surfacing the
+    failure.  Only the trivially-silent shapes fire: pass / continue /
+    break / a constant return / a bare assignment of constants."""
+    for node in ast.walk(handler):
+        if isinstance(node, (ast.Raise, ast.Call)):
+            return True
+    return False
+
+
+@_register_builtin
+class SilentExceptInServe(Rule):
+    name = "silent-except-in-serve"
+    description = ("broad except that swallows the failure silently in "
+                   "the serving/resilience stack — failures must surface "
+                   "as structured events (raise, obs counter, dead-client "
+                   "reason), never vanish")
+    scope = ("repro/serve/", "repro/resilience/")
+    example = ("try:\n    msg = msg_from_wire(body)\n"
+               "except Exception:\n    pass   # reader thread dies silently")
+
+    def check(self, mod: ParsedModule) -> Iterator[Finding]:
+        for node in mod.walk():
+            if not isinstance(node, ast.Try):
+                continue
+            for handler in node.handlers:
+                if _is_broad(handler) and not _handles(handler):
+                    what = ("bare except:" if handler.type is None
+                            else f"except {ast.unparse(handler.type)}:")
+                    yield self.finding(
+                        mod, handler,
+                        f"{what} swallows the failure with no raise and "
+                        "no call — a client can die here and the server "
+                        "never learns why; surface it (re-raise, "
+                        "obs.wire_error/failure, _mark_dead) "
+                        "(docs/RESILIENCE.md)")

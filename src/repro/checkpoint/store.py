@@ -1,19 +1,41 @@
-"""Checkpointing: npz-based pytree save/restore with step metadata.
+"""Checkpointing: npz-based pytree save/restore with step metadata,
+plus full-run state checkpoints (``fl-run-ckpt/v1``).
 
 Pytrees are flattened to path-keyed arrays ("groups/0/attn/wq" style) so
 checkpoints are stable across library versions and partially loadable.
 FL server state (global params + per-client grads + counters) checkpoints
 through the same path.
+
+Run-state checkpoints (``save_run_state`` / ``load_run_state``,
+docs/RESILIENCE.md) are different: ONE atomic file bundling everything
+a runtime needs to continue bit-identically — model, per-client state,
+policy/aggregator buffers, CommStats, obs counters, RNG key data and
+the scheduler snapshot.  The bundle pickles (state entries include
+None, ragged per-client lists and nested dicts — npz can't hold them)
+with every array leaf as numpy; a config fingerprint is stored
+alongside and validated on load so a checkpoint from a different run
+shape fails loudly (:class:`CheckpointMismatchError`) instead of
+resuming garbage.  Writes go to a temp file in the same directory then
+``os.replace`` — a crash mid-write never corrupts the previous
+checkpoint.
 """
 from __future__ import annotations
 
 import json
 import os
+import pickle
 import re
 from typing import Any, Dict, Optional
 
 import jax
 import numpy as np
+
+RUN_CKPT_SCHEMA = "fl-run-ckpt/v1"
+
+
+class CheckpointMismatchError(ValueError):
+    """The checkpoint on disk was written by a different run shape
+    (schema, config or model spec) — resuming it would be garbage."""
 
 
 def _flatten(tree) -> Dict[str, np.ndarray]:
@@ -107,3 +129,99 @@ def restore(ckpt_dir: str, like, step: Optional[int] = None):
     if step is None:
         raise FileNotFoundError(f"no checkpoints in {ckpt_dir}")
     return load_pytree(os.path.join(ckpt_dir, f"step_{step:08d}"), like), step
+
+
+# ------------------------------------------------ run-state checkpoints ---
+
+def tree_to_host(tree):
+    """Leaves to numpy (picklable, version-stable); None passes through."""
+    if tree is None:
+        return None
+    return jax.tree.map(lambda x: np.asarray(x), tree)
+
+
+def tree_to_device(tree):
+    """Host tree back onto the default device; None passes through.
+    numpy round-trips dtypes exactly, so restored leaves are bit-equal."""
+    if tree is None:
+        return None
+    import jax.numpy as jnp
+    return jax.tree.map(jnp.asarray, tree)
+
+
+def model_spec(params) -> list:
+    """The model's shape signature: (path, shape, dtype) per leaf —
+    part of the run fingerprint so a checkpoint can't restore into a
+    differently-shaped model."""
+    return [(key, tuple(np.shape(leaf)), str(np.asarray(leaf).dtype))
+            for key, leaf in sorted(_flatten(params).items())]
+
+
+def run_fingerprint(run_cfg, runtime: str, params) -> dict:
+    """Everything that must match between the writing and the resuming
+    run for bit-equal continuation.  ``rounds`` is deliberately ABSENT —
+    extending a run past its original budget is a supported resume."""
+    return {
+        "schema": RUN_CKPT_SCHEMA,
+        "runtime": runtime,
+        "algorithm": run_cfg.algorithm,
+        "num_clients": run_cfg.num_clients,
+        "seed": run_cfg.seed,
+        "compressor": run_cfg.compressor,
+        "broadcast_compressor": run_cfg.broadcast_compressor,
+        "error_feedback": run_cfg.error_feedback,
+        "participation": run_cfg.participation,
+        "mix_rate": run_cfg.mix_rate,
+        "staleness_kind": run_cfg.staleness_kind,
+        "events_per_eval": run_cfg.events_per_eval,
+        "buffer_size": run_cfg.buffer_size,
+        "max_batch": run_cfg.max_batch,
+        "eval_cache": run_cfg.eval_cache,
+        "eval_subsample": run_cfg.eval_subsample,
+        "local": (run_cfg.local.batch_size, run_cfg.local.local_rounds,
+                  run_cfg.local.lr),
+        "model": model_spec(params),
+    }
+
+
+def save_run_state(path: str, state: dict, fingerprint: dict) -> str:
+    """Atomically persist one run-state bundle: pickle to a temp file in
+    the target's directory, fsync, then ``os.replace`` — a kill at any
+    byte leaves either the old checkpoint or the new one, never a torn
+    file.  Returns the path written."""
+    d = os.path.dirname(path) or "."
+    os.makedirs(d, exist_ok=True)
+    bundle = {"schema": RUN_CKPT_SCHEMA, "fingerprint": fingerprint,
+              "state": state}
+    tmp = os.path.join(d, f".{os.path.basename(path)}.tmp")
+    with open(tmp, "wb") as f:
+        pickle.dump(bundle, f, protocol=pickle.HIGHEST_PROTOCOL)
+        f.flush()
+        os.fsync(f.fileno())
+    os.replace(tmp, path)
+    return path
+
+
+def load_run_state(path: str, fingerprint: dict) -> dict:
+    """Load a run-state bundle, validating schema and fingerprint.  A
+    mismatch raises :class:`CheckpointMismatchError` naming every
+    differing field — a checkpoint from a different config/model shape
+    fails loudly instead of resuming garbage."""
+    with open(path, "rb") as f:
+        bundle = pickle.load(f)
+    if not isinstance(bundle, dict) or bundle.get("schema") != RUN_CKPT_SCHEMA:
+        raise CheckpointMismatchError(
+            f"{path} is not a {RUN_CKPT_SCHEMA} checkpoint "
+            f"(schema={bundle.get('schema') if isinstance(bundle, dict) else None!r})")
+    saved = bundle["fingerprint"]
+    diffs = []
+    for key in sorted(set(saved) | set(fingerprint)):
+        a, b = saved.get(key), fingerprint.get(key)
+        if a != b:
+            diffs.append(f"  {key}: checkpoint={a!r} vs run={b!r}")
+    if diffs:
+        raise CheckpointMismatchError(
+            f"checkpoint {path} was written by a different run — "
+            "refusing to resume:\n" + "\n".join(diffs))
+    return bundle["state"]
+

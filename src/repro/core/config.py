@@ -96,6 +96,16 @@ class FLRunConfig:
     # runtime.  None — the default — is today's simulation exactly:
     # paper-testbed speeds, free network, always-on clients.
     scenario: Optional[object] = None
+    # full-run checkpoint-resume (repro.checkpoint, docs/RESILIENCE.md):
+    # checkpoint_path names ONE file written atomically (temp + rename)
+    # every checkpoint_every events (sequential/batched/serve) or rounds
+    # (rounds/sync).  resume=True restores it when present — the run
+    # continues bit-identically — and fails loudly
+    # (CheckpointMismatchError) when the file came from a different
+    # config or model shape.  checkpoint_every=0 disables writing.
+    checkpoint_path: Optional[str] = None
+    checkpoint_every: int = 0
+    resume: bool = False
     # observability (repro.obs, docs/OBSERVABILITY.md): None (the
     # default) is off with zero overhead; True enables in-memory
     # dual-timeline tracing + metrics with defaults; an
@@ -124,6 +134,13 @@ class FLRunConfig:
         if self.eval_subsample < 0 or self.eval_cache < 0:
             raise ValueError("eval_subsample and eval_cache must be >= 0 "
                              f"(got {self.eval_subsample}, {self.eval_cache})")
+        if self.checkpoint_every < 0:
+            raise ValueError(
+                f"checkpoint_every must be >= 0 (got {self.checkpoint_every})")
+        if self.checkpoint_every > 0 and not self.checkpoint_path:
+            raise ValueError("checkpoint_every > 0 needs a checkpoint_path")
+        if self.resume and not self.checkpoint_path:
+            raise ValueError("resume=True needs a checkpoint_path")
 
     def make_algorithm(self):
         """Resolve this config's algorithm to per-run protocol objects:

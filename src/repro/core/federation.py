@@ -171,6 +171,8 @@ class Federation:
 
     def serve(self, rounds: Optional[int] = None, *, transport="inproc",
               driver: str = "thread", pace=None, speed=None,
+              retry=None, exchange_timeout: Optional[float] = None,
+              liveness_timeout: Optional[float] = None,
               verbose: bool = False, **overrides):
         """Run the federation as a live service (``repro.serve``,
         docs/SERVING.md): real client workers push uploads through a
@@ -178,7 +180,9 @@ class Federation:
         objects as ``run()``.  ``driver="sequential"`` is the
         determinism bridge (bit-identical to ``run(mode="event")`` at
         ``buffer_size=1``); ``transport`` is a registry name ("inproc",
-        "socket") or a ready ``Transport``."""
+        "socket", "chaos") or a ready ``Transport``.  ``retry`` /
+        ``exchange_timeout`` / ``liveness_timeout`` are the resilience
+        knobs (docs/RESILIENCE.md), forwarded to ``serve_run``."""
         if "num_clients" in overrides:
             raise ValueError("num_clients is fixed by the federation's "
                              "data; it cannot be overridden per run")
@@ -192,4 +196,6 @@ class Federation:
                          evaluate_fn=self.evaluate_fn,
                          client_eval_fn=self._client_eval_for(cfg),
                          transport=transport, driver=driver, pace=pace,
-                         speed=speed, verbose=verbose)
+                         speed=speed, retry=retry,
+                         exchange_timeout=exchange_timeout,
+                         liveness_timeout=liveness_timeout, verbose=verbose)

@@ -45,9 +45,14 @@ error feedback stay per-client.
 """
 from __future__ import annotations
 
+import dataclasses
+import os
+
 import jax
 import jax.numpy as jnp
 import numpy as np
+
+import repro.checkpoint.store as ck
 
 from repro.algorithms.base import Aggregator
 from repro.common.pytree import (stacked_index, tree_bytes, tree_gather,
@@ -217,8 +222,106 @@ def _run_event_batched(run_cfg, policy, aggregator, init_params_fn, loss_fn,
     last_eval = (None, None)           # (server_version, acc device scalar)
     ev = 0
     pre_d = None                       # next window's pre-dispatched data
-    times, idx_np = (sched.pop_window(min(W, total_events))
-                     if total_events else (np.empty(0), np.empty(0, int)))
+    nxt = None
+
+    # full-run checkpoint-resume (docs/RESILIENCE.md).  The pipeline is
+    # one window deep, so a checkpoint taken at the end of a loop body
+    # must bundle the already-popped NEXT window alongside the scheduler
+    # snapshot; buffered updates are materialized to host trees (their
+    # stacked-window sources don't outlive the iteration) and restored
+    # as size-1 stacks — exactly how codec reconstructions enter the
+    # buffer, so the flush math is unchanged.
+    ckpt_path, ckpt_every = run_cfg.checkpoint_path, run_cfg.checkpoint_every
+    fingerprint = (ck.run_fingerprint(run_cfg, "batched", global_params)
+                   if ckpt_path else None)
+
+    def _save_ckpt():
+        h0 = obs.host_now() if obs is not None else 0.0
+        state = {
+            "event": ev,
+            "rng": np.asarray(jax.random.key_data(rng)),
+            "global_params": ck.tree_to_host(global_params),
+            "prev_global": ck.tree_to_host(prev_global),
+            "prev_prev_global": ck.tree_to_host(prev_prev_global),
+            "client_params": ck.tree_to_host(client_params),
+            "prev_grads": ck.tree_to_host(prev_grads),
+            "model_version": model_version.copy(),
+            "server_version": server_version,
+            "comm": dict(comm.__dict__),
+            # deferred eval scalars resolve into COPIES — the live
+            # records keep overlapping the next window's compute
+            "records": [dataclasses.replace(r, global_acc=float(r.global_acc))
+                        for r in records],
+            "last_eval": (None if last_eval[0] is None
+                          else (int(last_eval[0]), float(last_eval[1]))),
+            "buffer": [ck.tree_to_host(stacked_index(ref, row))
+                       for ref, row in buffer],
+            "buf_stale": list(buf_stale),
+            "policy": policy.state(),
+            "ef": {c: ck.tree_to_host(t) for c, t in ef.residuals.items()},
+            "acc_cache": (None if acc_cache is None else
+                          {"acc": acc_cache.acc.copy(),
+                           "age": acc_cache.age.copy()}),
+            "nxt": (None if nxt is None else
+                    (np.asarray(nxt[0], np.float64),
+                     np.asarray(nxt[1], np.int64))),
+            "sched": sched.snapshot(),
+            "obs_metrics": obs.metrics.snapshot() if obs is not None else None,
+        }
+        ck.save_run_state(ckpt_path, state, fingerprint)
+        if obs is not None:
+            obs.checkpoint(ev, h0)
+
+    if run_cfg.resume and ckpt_path and os.path.exists(ckpt_path):
+        st = ck.load_run_state(ckpt_path, fingerprint)
+        ev = int(st["event"])
+        rng = jax.random.wrap_key_data(jnp.asarray(st["rng"]))
+        global_params = ck.tree_to_device(st["global_params"])
+        prev_global = ck.tree_to_device(st["prev_global"])
+        prev_prev_global = ck.tree_to_device(st["prev_prev_global"])
+        client_params = ck.tree_to_device(st["client_params"])
+        prev_grads = ck.tree_to_device(st["prev_grads"])
+        if sharding is not None:
+            client_params = tree_shard(client_params, sharding)
+            prev_grads = tree_shard(prev_grads, sharding)
+        model_version = np.asarray(st["model_version"], int).copy()
+        server_version = int(st["server_version"])
+        comm.__dict__.update(st["comm"])
+        records = list(st["records"])
+        if st["last_eval"] is not None:
+            last_eval = (int(st["last_eval"][0]), st["last_eval"][1])
+        buffer = [(jax.tree.map(lambda x: x[None], ck.tree_to_device(t)), 0)
+                  for t in st["buffer"]]
+        buf_stale = list(st["buf_stale"])
+        if st["policy"] is not None:
+            policy.set_state(st["policy"])
+        ef.residuals = {int(c): ck.tree_to_device(t)
+                        for c, t in st["ef"].items()}
+        if acc_cache is not None and st["acc_cache"] is not None:
+            acc_cache.acc = np.asarray(st["acc_cache"]["acc"],
+                                       np.float32).copy()
+            acc_cache.age = np.asarray(st["acc_cache"]["age"],
+                                       np.int64).copy()
+        sched.restore(st["sched"])
+        if st["nxt"] is not None:
+            times = np.asarray(st["nxt"][0], np.float64)
+            idx_np = np.asarray(st["nxt"][1], np.int64)
+        elif ev < total_events:
+            # the writer's event budget ended at this checkpoint, so it
+            # never popped a next window; a resume that EXTENDS the run
+            # (rounds is outside the fingerprint) pops it now — the
+            # restored scheduler is exactly the state the longer run
+            # popped from mid-body
+            times, idx_np = sched.pop_window(min(W, total_events - ev))
+        else:
+            times, idx_np = np.empty(0), np.empty(0, int)
+        if obs is not None:
+            if st.get("obs_metrics"):
+                obs.metrics.restore(st["obs_metrics"])
+            obs.checkpoint(ev, obs.host_now(), restored=True)
+    else:
+        times, idx_np = (sched.pop_window(min(W, total_events))
+                         if total_events else (np.empty(0), np.empty(0, int)))
     if obs is not None:                # opt-in device profiler (hot loop)
         obs.profile_start()
     while len(idx_np):
@@ -488,6 +591,8 @@ def _run_event_batched(run_cfg, policy, aggregator, init_params_fn, loss_fn,
                 progress(f"[{run_cfg.algorithm}/batched] ev {ev:5d} "
                          f"t={t_now:8.1f} acc={float(acc):.4f} "
                          f"uploads={comm.model_uploads}")
+        if ckpt_every and ev // ckpt_every > prev_ev // ckpt_every:
+            _save_ckpt()
 
         if nxt is None:
             break

@@ -13,11 +13,14 @@ and each accepted upload enters the global model through the
 """
 from __future__ import annotations
 
+import os
 from typing import Optional
 
 import jax
 import jax.numpy as jnp
 import numpy as np
+
+import repro.checkpoint.store as ck
 
 from repro.common.pytree import tree_bytes
 from repro.core.metrics import CommStats, RoundRecord, RunResult
@@ -98,7 +101,62 @@ def run_event_driven(run_cfg, *, init_params_fn, loss_fn, fed_data,
     batch_eval, values_fn, norms_fn = _event_helpers(
         run_cfg, client_eval_fn, sq_diff)
 
-    for ev in range(total_events):
+    # full-run checkpoint-resume (docs/RESILIENCE.md): one atomic file
+    # holding everything the loop body touches, written every
+    # checkpoint_every events; resume=True restores it when present and
+    # the run continues bit-identically from the saved event.
+    ckpt_path, ckpt_every = run_cfg.checkpoint_path, run_cfg.checkpoint_every
+    fingerprint = (ck.run_fingerprint(run_cfg, "events", global_params)
+                   if ckpt_path else None)
+
+    def _save_ckpt(next_ev):
+        h0 = obs.host_now() if obs is not None else 0.0
+        state = {
+            "event": next_ev,
+            "rng": np.asarray(jax.random.key_data(rng)),
+            "global_params": ck.tree_to_host(global_params),
+            "prev_global": ck.tree_to_host(prev_global),
+            "prev_prev_global": ck.tree_to_host(prev_prev_global),
+            "client_params": [ck.tree_to_host(t) for t in client_params],
+            "prev_grads": [ck.tree_to_host(t) for t in prev_grads],
+            "model_version": model_version.copy(),
+            "server_version": server_version,
+            "comm": dict(comm.__dict__),
+            "records": list(records),
+            "policy": policy.state(),
+            "ef": {c: ck.tree_to_host(t) for c, t in ef.residuals.items()},
+            "sched": sched.snapshot(),
+            "obs_metrics": obs.metrics.snapshot() if obs is not None else None,
+        }
+        ck.save_run_state(ckpt_path, state, fingerprint)
+        if obs is not None:
+            obs.checkpoint(next_ev, h0)
+
+    start_ev = 0
+    if run_cfg.resume and ckpt_path and os.path.exists(ckpt_path):
+        st = ck.load_run_state(ckpt_path, fingerprint)
+        start_ev = int(st["event"])
+        rng = jax.random.wrap_key_data(jnp.asarray(st["rng"]))
+        global_params = ck.tree_to_device(st["global_params"])
+        prev_global = ck.tree_to_device(st["prev_global"])
+        prev_prev_global = ck.tree_to_device(st["prev_prev_global"])
+        client_params = [ck.tree_to_device(t) for t in st["client_params"]]
+        prev_grads = [ck.tree_to_device(t) for t in st["prev_grads"]]
+        model_version = np.asarray(st["model_version"], int).copy()
+        server_version = int(st["server_version"])
+        comm.__dict__.update(st["comm"])
+        records = list(st["records"])
+        if st["policy"] is not None:
+            policy.set_state(st["policy"])
+        ef.residuals = {int(c): ck.tree_to_device(t)
+                        for c, t in st["ef"].items()}
+        sched.restore(st["sched"])
+        if obs is not None:
+            if st.get("obs_metrics"):
+                obs.metrics.restore(st["obs_metrics"])
+            obs.checkpoint(start_ev, obs.host_now(), restored=True)
+
+    for ev in range(start_ev, total_events):
         t_now, i = sched.pop()
         u0, d0 = comm.uplink_bytes, comm.downlink_bytes
         rng, urng = jax.random.split(rng)
@@ -185,6 +243,8 @@ def run_event_driven(run_cfg, *, init_params_fn, loss_fn, fed_data,
                 progress(f"[{run_cfg.algorithm}/event] ev {ev+1:4d} "
                          f"t={t_now:8.1f} acc={acc:.4f} "
                          f"uploads={comm.model_uploads}")
+        if ckpt_every and (ev + 1) % ckpt_every == 0:
+            _save_ckpt(ev + 1)
 
     res = RunResult(run_cfg.algorithm, records, comm,
                     run_cfg.target_acc).finalize_target()

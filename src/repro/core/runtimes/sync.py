@@ -13,9 +13,13 @@ fraction as the round-based runtime.
 """
 from __future__ import annotations
 
+import os
+
 import jax
 import jax.numpy as jnp
 import numpy as np
+
+import repro.checkpoint.store as ck
 
 from repro.algorithms.base import RoundContext
 from repro.common.pytree import tree_bytes
@@ -62,7 +66,69 @@ def _run_sync_barrier(run_cfg, policy, aggregator, init_params_fn, loss_fn,
     net = net if _active(net) else None
     avail = avail if _active(avail) else None
     part_rng = np.random.RandomState(run_cfg.seed + 101)
-    for t in range(1, run_cfg.rounds + 1):
+
+    # full-run checkpoint-resume (docs/RESILIENCE.md), round-grained like
+    # the round-based runtime — same bundle shape, plus the speed model's
+    # state (the barrier samples it every round).
+    ckpt_path, ckpt_every = run_cfg.checkpoint_path, run_cfg.checkpoint_every
+    fingerprint = (ck.run_fingerprint(run_cfg, "sync", global_params)
+                   if ckpt_path else None)
+    _models = (("speed", speed), ("network", net), ("availability", avail))
+
+    def _save_ckpt(t_done):
+        h0 = obs.host_now() if obs is not None else 0.0
+        state = {
+            "round": t_done,
+            "rng": np.asarray(jax.random.key_data(rng)),
+            "global_params": ck.tree_to_host(global_params),
+            "prev_global": ck.tree_to_host(prev_global),
+            "prev_prev_global": ck.tree_to_host(prev_prev_global),
+            "client_base": ck.tree_to_host(client_base),
+            "prev_grads": ck.tree_to_host(prev_grads),
+            "comm": dict(comm.__dict__),
+            "records": list(records),
+            "policy": policy.state(),
+            "ef": {c: ck.tree_to_host(x) for c, x in ef.residuals.items()},
+            "part_rng": part_rng.get_state(),
+            "models": {name: m.state() for name, m in _models
+                       if m is not None and hasattr(m, "state")},
+            "clock": (now, busy.copy(), up_bytes.copy(), down_bytes.copy(),
+                      failed.copy()),
+            "obs_metrics": obs.metrics.snapshot() if obs is not None else None,
+        }
+        ck.save_run_state(ckpt_path, state, fingerprint)
+        if obs is not None:
+            obs.checkpoint(t_done, h0)
+
+    start_t = 0
+    if run_cfg.resume and ckpt_path and os.path.exists(ckpt_path):
+        st = ck.load_run_state(ckpt_path, fingerprint)
+        start_t = int(st["round"])
+        rng = jax.random.wrap_key_data(jnp.asarray(st["rng"]))
+        global_params = ck.tree_to_device(st["global_params"])
+        prev_global = ck.tree_to_device(st["prev_global"])
+        prev_prev_global = ck.tree_to_device(st["prev_prev_global"])
+        client_base = ck.tree_to_device(st["client_base"])
+        prev_grads = ck.tree_to_device(st["prev_grads"])
+        comm.__dict__.update(st["comm"])
+        records = list(st["records"])
+        if st["policy"] is not None:
+            policy.set_state(st["policy"])
+        ef.residuals = {int(c): ck.tree_to_device(x)
+                        for c, x in st["ef"].items()}
+        part_rng.set_state(st["part_rng"])
+        for name, m in _models:
+            if name in st["models"] and m is not None:
+                m.set_state(st["models"][name])
+        now, busy, up_bytes, down_bytes, failed = st["clock"]
+        busy, up_bytes, down_bytes, failed = (
+            busy.copy(), up_bytes.copy(), down_bytes.copy(), failed.copy())
+        if obs is not None:
+            if st.get("obs_metrics"):
+                obs.metrics.restore(st["obs_metrics"])
+            obs.checkpoint(start_t, obs.host_now(), restored=True)
+
+    for t in range(start_t + 1, run_cfg.rounds + 1):
         rng, urng = jax.random.split(rng)
         # the round's participating set S (same sampling as round-based)
         part = _participation_mask(part_rng, run_cfg.participation, N)
@@ -133,6 +199,8 @@ def _run_sync_barrier(run_cfg, policy, aggregator, init_params_fn, loss_fn,
             if verbose:
                 progress(f"[{run_cfg.algorithm}] round {t:3d} t={now:8.1f} "
                          f"acc={acc:.4f}")
+        if ckpt_every and t % ckpt_every == 0:
+            _save_ckpt(t)
     res = RunResult(run_cfg.algorithm, records, comm,
                     run_cfg.target_acc).finalize_target()
     idle = np.clip(1.0 - busy / max(now, 1e-9), 0.0, 1.0)

@@ -86,6 +86,24 @@ class MetricsRegistry:
     def hist(self, name) -> Histogram:
         return self._get(name, Histogram)
 
+    def restore(self, snapshot: dict) -> None:
+        """Repopulate the registry from a ``snapshot()`` dict — the
+        checkpoint-resume path, so a resumed run's final counters equal
+        the uninterrupted run's.  Snapshot histograms carry count / sum
+        / min / max / buckets, which is the Histogram's ENTIRE state,
+        so the round trip is lossless."""
+        for name, v in snapshot.get("counters", {}).items():
+            self.counter(name).value = v
+        for name, v in snapshot.get("gauges", {}).items():
+            self.gauge(name).set(v)
+        for name, h in snapshot.get("histograms", {}).items():
+            m = self.hist(name)
+            m.count = h["count"]
+            m.total = h["sum"]
+            m.min = math.inf if h["min"] is None else h["min"]
+            m.max = -math.inf if h["max"] is None else h["max"]
+            m.buckets = {int(k): v for k, v in h["buckets"].items()}
+
     def snapshot(self) -> dict:
         """JSON-ready snapshot: {"counters": {...}, "gauges": {...},
         "histograms": {name: {count,sum,mean,min,max,buckets}}}."""

@@ -157,12 +157,56 @@ class Observer:
         ends share a clock domain)."""
         self._m_commit_latency.observe(seconds * 1e3)
 
-    def failure(self, client, sim):
-        """A mid-round failure: the attempt's work was discarded by the
-        availability model before reaching the server."""
+    def failure(self, client, sim, *, kind=None):
+        """A mid-round failure: the attempt's work was discarded before
+        committing (availability model, dead client, expired exchange).
+        ``kind`` sub-categorises serve-side failures (``"exchange-
+        timeout"``, ``"evicted"``) into their own counters alongside
+        the shared total."""
         self.metrics.counter("failures").inc()
+        if kind:
+            self.metrics.counter(f"failures_{kind}").inc()
         if self.tracer:
-            self.tracer.event("failure", sim, client)
+            self.tracer.event("failure", sim, client,
+                              **({"kind": kind} if kind else {}))
+
+    # ------------------------------------------- resilience hooks ---
+    # (repro.resilience, docs/RESILIENCE.md): retry/dedup, liveness and
+    # checkpoint traffic.  Metrics-first like every other hook.
+
+    def duplicate(self, client, sim):
+        """A deduplicated upload: ``seq <= last_seq`` — a retry or a
+        chaos duplicate; the server replayed its cached reply."""
+        self.metrics.counter("duplicate_uploads").inc()
+        if self.tracer:
+            self.tracer.event("duplicate", sim, client)
+
+    def evict(self, client, sim, *, reason="liveness"):
+        """A client evicted (liveness deadline or transport death)."""
+        self.metrics.counter("evictions").inc()
+        if self.tracer:
+            self.tracer.event("evict", sim, client, reason=reason)
+
+    def readmit(self, client, sim, *, fresh=False):
+        """An evicted client re-admitted (``fresh`` = it was restarted
+        or reconnected and got a fresh decode base)."""
+        self.metrics.counter("readmissions").inc()
+        if fresh:
+            self.metrics.counter("readmissions_fresh").inc()
+        if self.tracer:
+            self.tracer.event("readmit", sim, client, fresh=fresh)
+
+    def wire_error(self, n=1):
+        """Corrupt frames discarded by the wire-format checks."""
+        self.metrics.counter("wire_errors").inc(n)
+
+    def checkpoint(self, step, host_start, *, restored=False):
+        """One run-state checkpoint written (or, ``restored``, loaded)."""
+        self.metrics.counter("resumes" if restored
+                             else "checkpoints").inc()
+        if self.tracer:
+            self.tracer.span("resume" if restored else "checkpoint",
+                             None, None, host_start, step=step)
 
     @contextmanager
     def timed(self, name, *, sim=None, client=None, **tags):

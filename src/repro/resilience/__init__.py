@@ -1,0 +1,29 @@
+"""``repro.resilience`` — surviving crashes, chaos, and preemption
+(docs/RESILIENCE.md).
+
+Three layers:
+
+* **Fault injection** — :class:`ChaosTransport` (builtin transport
+  ``"chaos"``) wraps any inner transport and applies a seeded,
+  counter-based :class:`FaultSpec` schedule: drop / duplicate /
+  reorder / delay / corrupt frames, connection resets, mid-exchange
+  client blackouts.  Every failure mode reproduces from its seed.
+
+* **Retry + idempotency** — :class:`RetryPolicy` drives client-side
+  re-sends (exponential backoff, seeded jitter, same ``seq``); the
+  ``FLServer`` dedups by ``(client, seq)`` and replays its cached
+  reply, evicts silent/flapping clients on liveness deadlines,
+  re-admits them on their next message, and bounds two-phase exchanges
+  with per-exchange timeouts.
+
+* **Checkpoint-resume** — ``repro.checkpoint.save_run_state`` /
+  ``load_run_state`` bundle the whole run (model, per-client state,
+  policy, CommStats, obs counters, RNG, scheduler snapshot) into one
+  atomic file; ``FLRunConfig(checkpoint_path=..., checkpoint_every=k,
+  resume=True)`` wires it through all four runtimes and the server,
+  with bit-equal continuation.
+"""
+from repro.resilience.chaos import ChaosTransport
+from repro.resilience.faults import FaultPlan, FaultSpec, RetryPolicy
+
+__all__ = ["ChaosTransport", "FaultPlan", "FaultSpec", "RetryPolicy"]

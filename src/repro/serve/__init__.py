@@ -17,7 +17,8 @@ Transports live behind a string registry (``get_transport`` /
 from repro.serve.client import (ClientCompute, ProcessClientWorker,
                                 ScenarioPacer, SequentialDriver,
                                 ThreadClientWorker)
-from repro.serve.messages import (WIRE_SCHEMA, BroadcastMsg, UploadMsg,
+from repro.serve.messages import (MAGIC, MAX_FRAME_BYTES, WIRE_SCHEMA,
+                                  BroadcastMsg, UploadMsg, WireError,
                                   msg_from_wire, msg_to_wire)
 from repro.serve.multitenant import MultiTenantServer
 from repro.serve.run import launch_serving, serve_run
@@ -27,7 +28,8 @@ from repro.serve.transport import (ClientChannel, InprocTransport,
                                    get_transport, register_transport)
 
 __all__ = [
-    "WIRE_SCHEMA", "UploadMsg", "BroadcastMsg", "msg_to_wire",
+    "WIRE_SCHEMA", "MAGIC", "MAX_FRAME_BYTES", "WireError", "UploadMsg",
+    "BroadcastMsg", "msg_to_wire",
     "msg_from_wire", "Transport", "ClientChannel", "InprocTransport",
     "get_transport", "register_transport", "available_transports",
     "FLServer", "ClientCompute", "ThreadClientWorker",

@@ -145,25 +145,72 @@ class ScenarioPacer:
 
 # ------------------------------------------------------- worker loop ---
 
-def _recv_ctrl(channel, timeout: float, stop=None):
+def _recv_ctrl(channel, timeout: float, stop=None, skip_init: bool = False):
     """Wait for the server's next broadcast, polling so a stop flag (or
-    a dead server) can break the wait; None on deadline."""
+    a dead server) can break the wait; None on deadline.  ``skip_init``
+    drops stray mid-run INIT frames (a server that re-admitted this
+    client as fresh) instead of returning them as an exchange reply."""
     deadline = time.monotonic() + timeout
     while time.monotonic() < deadline:
         if stop is not None and stop.is_set():
             return None
         msg = channel.recv(timeout=0.05)
         if msg is not None:
+            if skip_init and msg.kind == wire.INIT:
+                continue
             return msg
+    return None
+
+
+def _exchange(channel, msg, *, recv_timeout: float, stop=None,
+              retry=None, stats=None):
+    """One stop-and-wait exchange: send ``msg``, wait for its reply.
+
+    Without a :class:`~repro.resilience.RetryPolicy` this is a single
+    send + wait (the pre-resilience behavior).  With one, the SAME
+    frame (same ``seq``) is re-sent with exponential backoff + seeded
+    jitter whenever the per-attempt reply wait times out — the server
+    dedups by ``(client, seq)`` and replays its cached reply, so
+    at-least-once sending composes into exactly-once processing.
+    Replies are matched on ``ack_seq``: a stale reply from an earlier
+    attempt of a PREVIOUS exchange (the original arrived late, after
+    its retry was already answered) is discarded, not misread as this
+    exchange's answer.  Returns the reply, or None on exhaustion."""
+    attempts = 1 if retry is None else retry.max_attempts
+    wait = recv_timeout if retry is None else retry.attempt_timeout_s
+    for attempt in range(1, attempts + 1):
+        if stop is not None and stop.is_set():
+            return None
+        if attempt > 1:
+            if stats is not None:
+                stats["retries"] = stats.get("retries", 0) + 1
+            time.sleep(retry.backoff(attempt - 1, msg.client, msg.seq))
+        if not channel.send(msg, timeout=recv_timeout):
+            continue                   # backpressure deadline: retry
+        deadline = time.monotonic() + wait
+        while True:
+            left = deadline - time.monotonic()
+            if left <= 0:
+                break
+            reply = _recv_ctrl(channel, left, stop, skip_init=True)
+            if reply is None:
+                break
+            if (reply.kind in (wire.DECISION, wire.DOWNLOAD)
+                    and reply.ack_seq >= 0 and reply.ack_seq != msg.seq):
+                continue               # stale reply: keep waiting
+            return reply
     return None
 
 
 def _client_loop(compute: ClientCompute, channel, client: int, *,
                  data_index: Optional[int] = None, pacer=None,
                  rounds: Optional[int] = None, recv_timeout: float = 30.0,
-                 stop=None) -> int:
+                 stop=None, retry=None, stats=None) -> int:
     """The free-running client body shared by thread and process
-    workers; returns the number of completed rounds."""
+    workers; returns the number of completed rounds.  ``retry`` (a
+    ``repro.resilience.RetryPolicy``) makes every exchange survive
+    lost frames and lost replies; ``stats`` (a dict) accumulates the
+    retry count for end-of-run reconciliation."""
     init = _recv_ctrl(channel, recv_timeout, stop)
     if init is None or init.kind != wire.INIT:
         return 0
@@ -178,7 +225,8 @@ def _client_loop(compute: ClientCompute, channel, client: int, *,
     # driver replicates the closed-loop global chain instead)
     rng = jax.random.fold_in(jax.random.key(meta["seed"]), client)
     prev_grad = None
-    version = 0
+    version = int(init.version)   # 0 on a fresh run; the restored
+    #                               server version after a resume
     seq = 0
     t0 = time.monotonic()
     total = rounds if rounds is not None else int(meta["rounds"])
@@ -195,13 +243,12 @@ def _client_loop(compute: ClientCompute, channel, client: int, *,
             norm = compute.norm(eff_s)
         reply = None
         if meta["two_phase"]:
-            if not channel.send(UploadMsg(
-                    kind=wire.REPORT, client=client, seq=seq,
-                    version=version, sim_time=sim_t, value=value,
-                    norm=norm), timeout=recv_timeout):
-                break                      # backpressure deadline: bail
+            reply = _exchange(channel, UploadMsg(
+                kind=wire.REPORT, client=client, seq=seq,
+                version=version, sim_time=sim_t, value=value, norm=norm),
+                recv_timeout=recv_timeout, stop=stop, retry=retry,
+                stats=stats)
             seq += 1
-            reply = _recv_ctrl(channel, recv_timeout, stop)
             if reply is None or reply.kind == wire.FINAL:
                 break
         if reply is None or reply.kind == wire.DECISION:
@@ -216,14 +263,13 @@ def _client_loop(compute: ClientCompute, channel, client: int, *,
                 payload, _ = compress_update(
                     codec, ef, client, _tree_delta(newp, params),
                     seed=enc_seed)
-            if not channel.send(UploadMsg(
-                    kind=wire.UPDATE, client=client, seq=seq,
-                    version=version, sim_time=sim_t, codec=codec.name,
-                    payload=payload, enc_seed=enc_seed),
-                    timeout=recv_timeout):
-                break
+            reply = _exchange(channel, UploadMsg(
+                kind=wire.UPDATE, client=client, seq=seq,
+                version=version, sim_time=sim_t, codec=codec.name,
+                payload=payload, enc_seed=enc_seed),
+                recv_timeout=recv_timeout, stop=stop, retry=retry,
+                stats=stats)
             seq += 1
-            reply = _recv_ctrl(channel, recv_timeout, stop)
         if reply is None or reply.kind == wire.FINAL:
             break
         if reply.kind != wire.DOWNLOAD:
@@ -242,12 +288,14 @@ class ThreadClientWorker(threading.Thread):
 
     def __init__(self, compute: ClientCompute, channel, client: int, *,
                  pacer=None, rounds: Optional[int] = None,
-                 recv_timeout: float = 30.0):
+                 recv_timeout: float = 30.0, retry=None):
         super().__init__(daemon=True, name=f"serve-client-{client}")
         self.client = client
         self.completed = 0
+        self.stats = {"retries": 0}   # reconciled by the chaos soak
         self._kw = dict(pacer=pacer, rounds=rounds,
-                        recv_timeout=recv_timeout)
+                        recv_timeout=recv_timeout, retry=retry,
+                        stats=self.stats)
         self._compute, self._channel = compute, channel
         # NOT "_stop": threading.Thread owns that name internally
         self._stop_evt = threading.Event()
@@ -299,20 +347,59 @@ class SequentialDriver:
         N = cfg.num_clients
         transport = server.transport
         channels = [transport.client_channel(i) for i in range(N)]
-        server.start()
-        inits = [self._pump_recv(ch) for ch in channels]
-        meta = inits[0].meta
-        params = [init.tree for init in inits]
-        codec = get_codec(meta["compressor"])
-        ef = ErrorFeedback(enabled=meta["error_feedback"])
+        start_ev = server.processed
+        if start_ev:
+            # a resumed server (restore_checkpoint(fresh_clients=False)):
+            # the driver reconstructs every client's live state from the
+            # server's checkpointed view — params from the per-client
+            # decode base (exactly the tree each client last downloaded),
+            # versions and seq watermarks from the server's records —
+            # instead of the init broadcast, then replays the global RNG
+            # chain up to the checkpoint.  Continuation is bit-equal to
+            # the uninterrupted run (tests/test_resilience.py).
+            if server.policy.needs_values:
+                raise ValueError(
+                    "bit-equal bridge resume needs a policy without "
+                    "needs_values — per-client prev-grad state lives "
+                    "client-side and is not in the server checkpoint")
+            codec = get_codec(cfg.compressor)
+            if not codec.is_identity and cfg.error_feedback:
+                raise ValueError(
+                    "bit-equal bridge resume with a codec needs "
+                    "error_feedback=False — EF residuals live "
+                    "client-side and are not in the server checkpoint")
+            meta = {"needs_values": server.policy.needs_values,
+                    "needs_norms": server.policy.needs_norms,
+                    "two_phase": server.two_phase,
+                    "compressor": cfg.compressor,
+                    "error_feedback": cfg.error_feedback}
+            ef = ErrorFeedback(enabled=cfg.error_feedback)
+            params = [server.client_base[i] for i in range(N)]
+            versions = [int(v) for v in server.model_version]
+            seqs = [int(s) + 1 for s in server._last_seq]
+        else:
+            server.start()
+            inits = [self._pump_recv(ch) for ch in channels]
+            meta = inits[0].meta
+            params = [init.tree for init in inits]
+            codec = get_codec(meta["compressor"])
+            ef = ErrorFeedback(enabled=meta["error_feedback"])
+            versions = [0] * N
+            seqs = [0] * N
         prev_grads = [None] * N
-        versions = [0] * N
-        seqs = [0] * N
         sched = server.sched
+        # the driver owns checkpoint cadence: the server's own save fires
+        # inside _finish_event, BEFORE this loop bills the event's bytes
+        # into the scheduler — a snapshot taken there is missing the last
+        # reschedule and would not resume bit-equal.  Defer every save to
+        # after sched.schedule() below.
+        ckpt_every, server._ckpt_every = server._ckpt_every, 0
         # the closed loop's exact RNG chain: key(seed) split once for
         # init (the server used the same derivation), then once per event
         rng, _krng = jax.random.split(jax.random.key(cfg.seed))
-        for ev in range(server.total_events):
+        for _ in range(start_ev):
+            rng, _ = jax.random.split(rng)
+        for ev in range(start_ev, server.total_events):
             t_now, i = sched.pop()
             u0, d0 = server.comm.uplink_bytes, server.comm.downlink_bytes
             rng, urng = jax.random.split(rng)
@@ -357,6 +444,8 @@ class SequentialDriver:
             # exact closed-loop call (byte-aware network models included)
             sched.schedule(i, upload_bytes=server.comm.uplink_bytes - u0,
                            download_bytes=server.comm.downlink_bytes - d0)
+            if ckpt_every and server.processed % ckpt_every == 0:
+                server.save_checkpoint()
         return server.finalize()
 
 

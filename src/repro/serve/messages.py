@@ -27,7 +27,15 @@ matching the closed-loop runtimes where the decision is a function call.
 Everything in a message is either a scalar, a ``Payload`` (numpy planes
 + picklable treedef meta) or a parameter pytree — the socket transport
 pickles messages whole after converting tree leaves to numpy
-(:func:`tree_to_host` / 4-byte length-prefixed frames).
+(:func:`tree_to_host`).
+
+Frame format: 4 magic bytes (``MAGIC`` — format version, cheap
+corruption tripwire) + 4-byte big-endian length + pickled body, with
+the length bounded by ``MAX_FRAME_BYTES``.  A frame that fails the
+magic or size check raises :class:`WireError` (a ``ConnectionError``
+subclass) so transports route it through their structured dead-client
+path instead of a blind ``pickle.UnpicklingError`` killing a reader
+thread (docs/RESILIENCE.md).
 """
 from __future__ import annotations
 
@@ -37,6 +45,25 @@ from dataclasses import dataclass, field
 from typing import Any, Optional
 
 WIRE_SCHEMA = "serve-wire/v1"
+
+# frame-format magic: four bytes every frame starts with.  Bumping the
+# frame layout bumps this; a stream that desyncs (corruption, a
+# truncated frame followed by more bytes) trips it immediately.
+MAGIC = b"RFL1"
+
+# hard bound on one frame's body.  Generous — a full float32 model tree
+# for this repo's zoo is well under it — but it turns a corrupted
+# length prefix (reading 3 GB because four bytes flipped) into a
+# structured WireError instead of an allocation stampede.
+MAX_FRAME_BYTES = 1 << 28      # 256 MiB
+
+
+class WireError(ConnectionError):
+    """A frame failed the wire-format checks (bad magic, oversized
+    length, undecodable body).  Subclasses ``ConnectionError`` because
+    the stream is unusable past the bad frame — transports treat the
+    peer as dead (reason ``"wire-error"``) and surface it to the
+    server's liveness tracker."""
 
 # UploadMsg kinds
 REPORT = "report"
@@ -75,12 +102,19 @@ class UploadMsg:
 
 @dataclass
 class BroadcastMsg:
-    """One server -> client message (init / decision / download / final)."""
+    """One server -> client message (init / decision / download / final).
+
+    ``ack_seq`` echoes the upload ``seq`` a decision/download answers,
+    so a retrying client can discard a stale extra reply (its original
+    reply arriving after the retry already got the replay) instead of
+    consuming it as the NEXT exchange's answer; -1 on unsolicited
+    frames (init / final)."""
     kind: str
     version: int = 0
     tree: Any = None               # model pytree (init / download)
     upload: bool = False           # DECISION: ship the payload?
     meta: dict = field(default_factory=dict)   # INIT: run flags
+    ack_seq: int = -1              # the upload seq this frame answers
 
 
 def tree_to_host(tree):
@@ -100,19 +134,29 @@ def msg_to_wire(msg) -> bytes:
     if isinstance(msg, BroadcastMsg) and msg.tree is not None:
         msg = BroadcastMsg(kind=msg.kind, version=msg.version,
                            tree=tree_to_host(msg.tree), upload=msg.upload,
-                           meta=msg.meta)
+                           meta=msg.meta, ack_seq=msg.ack_seq)
     elif isinstance(msg, UploadMsg) and msg.payload is not None:
         from repro.compress.base import Payload
         if not isinstance(msg.payload, Payload):   # identity: raw tree
             msg = UploadMsg(**{**msg.__dict__,
                                "payload": tree_to_host(msg.payload)})
     body = pickle.dumps((WIRE_SCHEMA, msg), protocol=pickle.HIGHEST_PROTOCOL)
-    return struct.pack("!I", len(body)) + body
+    if len(body) > MAX_FRAME_BYTES:
+        raise WireError(f"frame body of {len(body)} bytes exceeds "
+                        f"MAX_FRAME_BYTES ({MAX_FRAME_BYTES})")
+    return MAGIC + struct.pack("!I", len(body)) + body
 
 
 def msg_from_wire(body: bytes):
-    """Decode one frame body (length prefix already consumed)."""
-    schema, msg = pickle.loads(body)
+    """Decode one frame body (magic + length prefix already consumed).
+    An undecodable body — corruption that kept a plausible header —
+    raises WireError; a well-formed body from an incompatible peer
+    raises ValueError (schema mismatch)."""
+    try:
+        schema, msg = pickle.loads(body)
+    except Exception as e:                    # noqa: BLE001 — any pickle
+        # failure here means corrupt bytes; fold into the wire path
+        raise WireError(f"undecodable frame body: {e}") from e
     if schema != WIRE_SCHEMA:
         raise ValueError(f"wire schema mismatch: got {schema!r}, "
                          f"expected {WIRE_SCHEMA!r}")
@@ -120,14 +164,22 @@ def msg_from_wire(body: bytes):
 
 
 def read_frame(sock) -> Optional[bytes]:
-    """Read one length-prefixed frame from a socket; None on clean EOF
-    (peer closed between frames).  A half-read frame — the peer died
-    mid-send — raises ConnectionError, which the transport turns into
-    the discard/failure path."""
-    head = _read_exact(sock, 4)
+    """Read one framed body from a socket; None on clean EOF (peer
+    closed between frames).  A half-read frame — the peer died
+    mid-send — raises ConnectionError; bad magic or an oversized length
+    raises WireError.  Either way the transport turns it into the
+    structured dead-client path."""
+    head = _read_exact(sock, len(MAGIC) + 4)
     if head is None:
         return None
-    (n,) = struct.unpack("!I", head)
+    if head[:len(MAGIC)] != MAGIC:
+        raise WireError(f"bad frame magic {head[:len(MAGIC)]!r} "
+                        f"(expected {MAGIC!r}) — corrupt or desynced "
+                        "stream")
+    (n,) = struct.unpack("!I", head[len(MAGIC):])
+    if n > MAX_FRAME_BYTES:
+        raise WireError(f"frame length {n} exceeds MAX_FRAME_BYTES "
+                        f"({MAX_FRAME_BYTES}) — corrupt length prefix")
     body = _read_exact(sock, n)
     if body is None:
         raise ConnectionError("peer closed mid-frame")

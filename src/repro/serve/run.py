@@ -57,15 +57,25 @@ def launch_serving(run_cfg, *, init_params_fn, loss_fn, fed_data,
                    evaluate_fn, client_eval_fn=None, transport="inproc",
                    capacity: int = 0, pace=None, speed=None,
                    rounds: Optional[int] = None,
-                   recv_timeout: float = 30.0, verbose: bool = False):
+                   recv_timeout: float = 30.0, retry=None,
+                   exchange_timeout: Optional[float] = None,
+                   liveness_timeout: Optional[float] = None,
+                   verbose: bool = False):
     """Build (but do not start) one federation's serving pieces:
     ``(server, workers, transport)``.  The caller owns the lifecycle:
     ``server.start()``, start the workers, then ``server.run()`` or
-    compose ``server.step()`` into a larger loop (multi-tenant)."""
+    compose ``server.step()`` into a larger loop (multi-tenant).
+
+    Resilience knobs (docs/RESILIENCE.md): ``retry`` — a
+    ``repro.resilience.RetryPolicy`` for every client's exchanges;
+    ``exchange_timeout`` / ``liveness_timeout`` — the server's
+    per-exchange and dead-client deadlines (seconds; None = off)."""
     tr, _owned = _resolve_transport(transport, run_cfg.num_clients,
                                     capacity)
     server = FLServer(run_cfg, init_params_fn=init_params_fn,
                       evaluate_fn=evaluate_fn, transport=tr, speed=speed,
+                      exchange_timeout=exchange_timeout,
+                      liveness_timeout=liveness_timeout,
                       verbose=verbose)
     compute = ClientCompute.for_run(
         run_cfg, loss_fn=loss_fn, fed_data=fed_data,
@@ -73,7 +83,7 @@ def launch_serving(run_cfg, *, init_params_fn, loss_fn, fed_data,
     pacer = _resolve_pacer(pace, run_cfg)
     workers = [ThreadClientWorker(compute, tr.client_channel(i), i,
                                   pacer=pacer, rounds=rounds,
-                                  recv_timeout=recv_timeout)
+                                  recv_timeout=recv_timeout, retry=retry)
                for i in range(run_cfg.num_clients)]
     return server, workers, tr
 
@@ -82,7 +92,9 @@ def serve_run(run_cfg, *, init_params_fn, loss_fn, fed_data, evaluate_fn,
               client_eval_fn=None, transport="inproc",
               driver: str = "thread", capacity: int = 0, pace=None,
               speed=None, stall_timeout: float = 60.0,
-              recv_timeout: float = 30.0,
+              recv_timeout: float = 30.0, retry=None,
+              exchange_timeout: Optional[float] = None,
+              liveness_timeout: Optional[float] = None,
               verbose: bool = False) -> RunResult:
     """Run one federation as a live service and return its RunResult."""
     if driver not in DRIVERS:
@@ -90,9 +102,13 @@ def serve_run(run_cfg, *, init_params_fn, loss_fn, fed_data, evaluate_fn,
     if driver == "sequential":
         tr, owned = _resolve_transport(transport, run_cfg.num_clients,
                                        capacity)
+        # resume_fresh_clients=False: the bridge driver reconstructs each
+        # client's exact state (base tree, version, seq) from the restored
+        # server, so a cfg.resume run continues bit-identically.
         server = FLServer(run_cfg, init_params_fn=init_params_fn,
                           evaluate_fn=evaluate_fn, transport=tr,
                           speed=speed, account_bytes=False,
+                          resume_fresh_clients=False,
                           verbose=verbose)
         compute = ClientCompute.for_run(
             run_cfg, loss_fn=loss_fn, fed_data=fed_data,
@@ -107,7 +123,9 @@ def serve_run(run_cfg, *, init_params_fn, loss_fn, fed_data, evaluate_fn,
         fed_data=fed_data, evaluate_fn=evaluate_fn,
         client_eval_fn=client_eval_fn, transport=transport,
         capacity=capacity, pace=pace, speed=speed,
-        recv_timeout=recv_timeout, verbose=verbose)
+        recv_timeout=recv_timeout, retry=retry,
+        exchange_timeout=exchange_timeout,
+        liveness_timeout=liveness_timeout, verbose=verbose)
     try:
         server.start()
         for w in workers:

@@ -24,9 +24,23 @@ discipline: every transport receive carries a timeout (the
 ``serve-blocking-in-hotloop`` analysis rule enforces this), a stalled
 fleet trips ``stall_timeout`` and the drain path commits whatever is
 buffered instead of wedging.
+
+Resilience (docs/RESILIENCE.md): uploads are deduplicated by
+``(client, seq)`` — a replayed seq (client retry, chaos duplicate)
+re-sends the cached reply instead of reprocessing, so at-least-once
+clients compose into exactly-once processing; accepted two-phase
+reports carry a per-exchange deadline (``exchange_timeout``) so a
+wedged exchange is discarded without waiting for the global stall;
+clients silent past ``liveness_timeout`` (or reported dead by the
+transport) are evicted, and re-admitted on their next message — with a
+fresh decode base when they restarted (seq regressed to 0) or
+reconnected.  ``checkpoint_path``/``checkpoint_every`` on the config
+write one atomic full-run checkpoint (``repro.checkpoint``), and
+``resume=True`` continues from it.
 """
 from __future__ import annotations
 
+import os
 import time
 from contextlib import nullcontext
 from typing import Optional
@@ -68,7 +82,10 @@ class FLServer:
                  transport: Transport, total_events: Optional[int] = None,
                  sched: Optional[EventScheduler] = None,
                  speed: Optional[SpeedModel] = None,
-                 account_bytes: bool = True, verbose: bool = False):
+                 account_bytes: bool = True, verbose: bool = False,
+                 exchange_timeout: Optional[float] = None,
+                 liveness_timeout: Optional[float] = None,
+                 resume_fresh_clients: bool = True):
         alg, policy, aggregator = run_cfg.make_algorithm()
         if alg.event_mode != "async":
             raise ValueError(
@@ -127,20 +144,46 @@ class FLServer:
         self.processed = 0               # completed events (downloads sent)
         self.total_events = (run_cfg.rounds * N if total_events is None
                              else total_events)
-        self._pending: dict = {}         # client -> sim_time of an accepted
-        #                                  report whose update hasn't landed
-        self._last_seq = np.full(N, -1, np.int64)   # per-client FIFO check
+        self._pending: dict = {}         # client -> (sim_time, carried
+        #                                  bytes, host deadline) of an
+        #                                  accepted report whose update
+        #                                  hasn't landed
+        self._last_seq = np.full(N, -1, np.int64)   # dedup watermark
         self._stopping = False
         self._finalized = None
 
+        # resilience state (docs/RESILIENCE.md): reply cache for dedup
+        # replay, liveness bookkeeping, and the counters the chaos soak
+        # reconciles against client-side retry counts
+        self.exchange_timeout = exchange_timeout
+        self.liveness_timeout = liveness_timeout
+        self._last_reply: dict = {}       # client -> last reply sent
+        self._evicted: set = set()
+        self._last_heard = np.full(N, time.monotonic())
+        self.accepted_by_client = np.zeros(N, np.int64)  # committed updates
+        self.duplicates = 0
+        self.evictions = 0
+        self.readmissions = 0
+        self.exchange_expired = 0
+        self.wire_errors = 0
+        self.restarts = 0
+
+        # full-run checkpointing: cfg-driven, one atomic file; resume
+        # restores it when present.  resume_fresh_clients=True (the live
+        # fleet restart) rebases every client on the restored global;
+        # the bridge driver passes False and reconstructs client state
+        # from the checkpoint instead (bit-equal continuation).
+        self._ckpt_path = run_cfg.checkpoint_path
+        self._ckpt_every = run_cfg.checkpoint_every
+        if (run_cfg.resume and self._ckpt_path
+                and os.path.exists(self._ckpt_path)):
+            self.restore_checkpoint(self._ckpt_path,
+                                    fresh_clients=resume_fresh_clients)
+
     # ----------------------------------------------------------- lifecycle ---
 
-    def start(self) -> None:
-        """Send every client its init broadcast: the initial model plus
-        the run flags it needs.  Bootstrap traffic — not billed in
-        CommStats (the closed loop's clients start from the same init
-        implicitly)."""
-        meta = {"schema": wire.WIRE_SCHEMA,
+    def _init_meta(self) -> dict:
+        return {"schema": wire.WIRE_SCHEMA,
                 "needs_values": self.policy.needs_values,
                 "needs_norms": self.policy.needs_norms,
                 "two_phase": self.two_phase,
@@ -148,10 +191,19 @@ class FLServer:
                 "error_feedback": self.cfg.error_feedback,
                 "seed": self.cfg.seed,
                 "rounds": self.cfg.rounds}
+
+    def start(self) -> None:
+        """Send every client its init broadcast: the initial model plus
+        the run flags it needs.  Bootstrap traffic — not billed in
+        CommStats (the closed loop's clients start from the same init
+        implicitly).  After a resume this broadcasts the RESTORED
+        global, so a restarted fleet bootstraps from where the run left
+        off."""
+        meta = self._init_meta()
         for i in range(self.cfg.num_clients):
             self.transport.send_broadcast(i, BroadcastMsg(
-                kind=wire.INIT, version=0, tree=self.global_params,
-                meta=meta))
+                kind=wire.INIT, version=self.server_version,
+                tree=self.global_params, meta=meta))
 
     def stop(self) -> None:
         """Ask the hot loop to drain and return after the current window."""
@@ -176,6 +228,7 @@ class FLServer:
         Returns the number of messages processed — 0 when the queue was
         quiet, so external loops (multi-tenant) can round-robin without
         blocking."""
+        self._police()
         window = self.transport.drain_uploads(self.window, timeout=timeout)
         if not window:
             return 0
@@ -189,15 +242,107 @@ class FLServer:
                             window[-1].sim_time, h0)
         return len(window)
 
+    # --------------------------------------------------------- liveness ---
+
+    def _police(self, now: Optional[float] = None) -> None:
+        """Per-step housekeeping: expire wedged two-phase exchanges,
+        consume the transport's dead/reconnect surfaces, and evict
+        clients silent past the liveness deadline.  Every path is
+        idempotent — flapping clients cycle evict/readmit cleanly."""
+        now = time.monotonic() if now is None else now
+        if self.exchange_timeout is not None and self._pending:
+            for i in [i for i, (_, _, dl) in self._pending.items()
+                      if dl is not None and now >= dl]:
+                t, _, _ = self._pending.pop(i)
+                self.exchange_expired += 1
+                if self.obs is not None:
+                    self.obs.failure(i, t, kind="exchange-timeout")
+        tr = self.transport
+        if hasattr(tr, "poll_wire_errors"):
+            n = tr.poll_wire_errors()
+            if n:
+                self.wire_errors += n
+                if self.obs is not None:
+                    self.obs.wire_error(n)
+        if hasattr(tr, "dead_clients"):
+            reasons = (tr.dead_reasons()
+                       if hasattr(tr, "dead_reasons") else {})
+            for i in tr.dead_clients():
+                if i not in self._evicted:
+                    reason = reasons.get(i, "transport-dead")
+                    if reason == "wire-error":
+                        self.wire_errors += 1
+                        if self.obs is not None:
+                            self.obs.wire_error()
+                    self._evict(i, reason=reason)
+        if hasattr(tr, "poll_reconnects"):
+            for i in tr.poll_reconnects():
+                self._readmit(i, fresh=True)
+        if self.liveness_timeout is not None:
+            for i in np.nonzero(
+                    now - self._last_heard > self.liveness_timeout)[0]:
+                i = int(i)
+                if i not in self._evicted:
+                    self._evict(i, reason="liveness")
+
+    def _evict(self, i: int, *, reason: str) -> None:
+        """Mark a client dead: discard its wedged exchange (the failure
+        path) and stop expecting traffic until it re-admits."""
+        self._evicted.add(i)
+        self.evictions += 1
+        pend = self._pending.pop(i, None)
+        if self.obs is not None:
+            self.obs.evict(i, self.sched.now, reason=reason)
+            if pend is not None:
+                self.obs.failure(i, pend[0], kind="evicted")
+
+    def _readmit(self, i: int, *, fresh: bool) -> None:
+        """Welcome an evicted client back.  ``fresh`` (a restarted or
+        reconnected client) rebases it on the current global model:
+        fresh decode base, current version, seq watermark reset, reply
+        cache dropped, and a new init broadcast so the fresh process
+        can bootstrap."""
+        self._evicted.discard(i)
+        self.readmissions += 1
+        self._last_heard[i] = time.monotonic()
+        if fresh:
+            self.client_base[i] = self.global_params
+            self.model_version[i] = self.server_version
+            self._last_seq[i] = -1
+            self._last_reply.pop(i, None)
+            self._pending.pop(i, None)
+            self.transport.send_broadcast(i, BroadcastMsg(
+                kind=wire.INIT, version=self.server_version,
+                tree=self.global_params, meta=self._init_meta()))
+        if self.obs is not None:
+            self.obs.readmit(i, self.sched.now, fresh=fresh)
+
     # ------------------------------------------------------ event handling ---
 
     def _handle(self, msg: UploadMsg) -> None:
         i = int(msg.client)
+        self._last_heard[i] = time.monotonic()
         if msg.seq <= self._last_seq[i]:
-            raise RuntimeError(
-                f"transport reordered client {i}: seq {msg.seq} after "
-                f"{self._last_seq[i]} — per-client FIFO is a transport "
-                "contract")
+            if i in self._evicted and msg.seq == 0:
+                # a restarted client (fresh process, seq reset) rather
+                # than a duplicate: rebase it and process the message
+                self.restarts += 1
+                self._readmit(i, fresh=True)
+            else:
+                # a client retry or a chaos duplicate: idempotent dedup —
+                # count it and replay the cached reply so a client whose
+                # reply was lost makes progress without reprocessing
+                self.duplicates += 1
+                if i in self._evicted:
+                    self._readmit(i, fresh=False)
+                if self.obs is not None:
+                    self.obs.duplicate(i, msg.sim_time)
+                last = self._last_reply.get(i)
+                if last is not None:
+                    self.transport.send_broadcast(i, last)
+                return
+        elif i in self._evicted:
+            self._readmit(i, fresh=False)
         self._last_seq[i] = msg.seq
         if msg.kind == wire.REPORT:
             self._handle_report(i, msg)
@@ -223,13 +368,20 @@ class FLServer:
             # payload arrives as this client's next message.  The report's
             # wire bytes carry over so the whole exchange lands in one
             # ledger entry (deltas are within-message only — between a
-            # report and its update, OTHER clients move the counters)
-            self._pending[i] = (t, self.comm.uplink_bytes - u0)
-            self.transport.send_broadcast(
-                i, BroadcastMsg(kind=wire.DECISION, upload=True,
-                                version=self.server_version))
+            # report and its update, OTHER clients move the counters).
+            # The exchange gets its own host deadline (exchange_timeout)
+            # so a wedged client doesn't hold a pending slot forever.
+            deadline = (None if self.exchange_timeout is None
+                        else time.monotonic() + self.exchange_timeout)
+            self._pending[i] = (t, self.comm.uplink_bytes - u0, deadline)
+            reply = BroadcastMsg(kind=wire.DECISION, upload=True,
+                                 version=self.server_version,
+                                 ack_seq=msg.seq)
+            self._last_reply[i] = reply
+            self.transport.send_broadcast(i, reply)
         else:
-            self._finish_event(i, t, self.comm.uplink_bytes - u0)
+            self._finish_event(i, t, self.comm.uplink_bytes - u0,
+                               ack_seq=msg.seq)
 
     def _handle_update(self, i: int, msg: UploadMsg) -> None:
         """An accepted upload's payload: decode, buffer, commit every K."""
@@ -255,9 +407,11 @@ class FLServer:
         self._buffer.append(recon)
         self._buf_stale.append(self.aggregator.stale_weight(int(staleness)))
         self._buf_recv.append(msg.recv_host)
+        self.accepted_by_client[i] += 1
         if len(self._buffer) >= self.K:
             self._flush(t)
-        self._finish_event(i, t, carry + self.comm.uplink_bytes - u0)
+        self._finish_event(i, t, carry + self.comm.uplink_bytes - u0,
+                           ack_seq=msg.seq)
 
     def _flush(self, sim_time: float) -> None:
         """Commit the buffer: one staleness-weighted FedBuff mix through
@@ -279,9 +433,12 @@ class FLServer:
         self._buf_stale.clear()
         self._buf_recv.clear()
 
-    def _finish_event(self, i: int, t: float, up_bytes: int) -> None:
+    def _finish_event(self, i: int, t: float, up_bytes: int,
+                      ack_seq: int = -1) -> None:
         """Every event's tail: the download broadcast, version tracking,
-        byte ledgers, and the eval-boundary record."""
+        byte ledgers, and the eval-boundary record.  ``ack_seq`` echoes
+        the upload seq this download answers (reply matching on a
+        retrying client)."""
         d0 = self.comm.downlink_bytes
         if self.bcodec is None:
             sent = self.global_params
@@ -297,8 +454,11 @@ class FLServer:
                                else self.bcodec.name)
         self.client_base[i] = sent
         self.model_version[i] = self.server_version
-        self.transport.send_broadcast(i, BroadcastMsg(
-            kind=wire.DOWNLOAD, version=self.server_version, tree=sent))
+        reply = BroadcastMsg(kind=wire.DOWNLOAD,
+                             version=self.server_version, tree=sent,
+                             ack_seq=ack_seq)
+        self._last_reply[i] = reply
+        self.transport.send_broadcast(i, reply)
         if self._account_bytes:
             self.sched.account_bytes(i, up_bytes,
                                      self.comm.downlink_bytes - d0)
@@ -315,9 +475,113 @@ class FLServer:
                 progress(f"[{self.cfg.algorithm}/serve] ev "
                          f"{self.processed:4d} t={t:8.1f} acc={acc:.4f} "
                          f"uploads={self.comm.model_uploads}")
+        # checkpoint AFTER the eval-boundary record: an event that both
+        # records and checkpoints must bundle its record, or a resume
+        # from this file would silently skip it
+        if self._ckpt_every and self.processed % self._ckpt_every == 0:
+            self.save_checkpoint()
 
     def _server_delta(self):
         return _tree_delta(self.prev_global, self.prev_prev_global)
+
+    # ---------------------------------------------------- checkpointing ---
+
+    def save_checkpoint(self, path: Optional[str] = None) -> str:
+        """Write one atomic full-run checkpoint: everything the serve
+        loop needs to continue — model lineage, per-client bases and
+        versions, dedup watermarks, the FedBuff buffer, CommStats,
+        records, policy state, the scheduler snapshot, resilience
+        counters and obs metrics."""
+        from repro import checkpoint as ck
+        path = path or self._ckpt_path
+        if not path:
+            raise ValueError("no checkpoint_path configured")
+        h0 = self.obs.host_now() if self.obs is not None else 0.0
+        state = {
+            "processed": self.processed,
+            "server_version": self.server_version,
+            "model_version": self.model_version.copy(),
+            "last_seq": self._last_seq.copy(),
+            "global_params": ck.tree_to_host(self.global_params),
+            "prev_global": ck.tree_to_host(self.prev_global),
+            "prev_prev_global": ck.tree_to_host(self.prev_prev_global),
+            "client_base": [ck.tree_to_host(t) for t in self.client_base],
+            "buffer": [ck.tree_to_host(t) for t in self._buffer],
+            "buf_stale": list(self._buf_stale),
+            "comm": dict(self.comm.__dict__),
+            "records": list(self.records),
+            "policy": self.policy.state(),
+            "sched": self.sched.snapshot(),
+            "accepted_by_client": self.accepted_by_client.copy(),
+            "counters": {"duplicates": self.duplicates,
+                         "evictions": self.evictions,
+                         "readmissions": self.readmissions,
+                         "exchange_expired": self.exchange_expired,
+                         "wire_errors": self.wire_errors,
+                         "restarts": self.restarts},
+            "obs": (self.obs.metrics.snapshot()
+                    if self.obs is not None else None),
+        }
+        fp = ck.run_fingerprint(self.cfg, "serve", self.global_params)
+        ck.save_run_state(path, state, fp)
+        if self.obs is not None:
+            self.obs.checkpoint(self.processed, h0)
+        return path
+
+    def restore_checkpoint(self, path: Optional[str] = None, *,
+                           fresh_clients: bool = True) -> None:
+        """Restore a ``save_checkpoint`` bundle (fingerprint-validated —
+        a mismatched config or model shape raises
+        ``CheckpointMismatchError``).  ``fresh_clients=True`` is the
+        live fleet restart: every client is rebased on the restored
+        global (fresh decode base, current version, seq watermarks
+        reset) and ``start()`` re-bootstraps them.  ``False`` keeps the
+        exact per-client state for a driver that reconstructs its
+        clients from the checkpoint (the bit-equal resume path)."""
+        from repro import checkpoint as ck
+        path = path or self._ckpt_path
+        fp = ck.run_fingerprint(self.cfg, "serve", self.global_params)
+        st = ck.load_run_state(path, fp)
+        h0 = self.obs.host_now() if self.obs is not None else 0.0
+        self.processed = int(st["processed"])
+        self.server_version = int(st["server_version"])
+        self.model_version = np.asarray(st["model_version"], int).copy()
+        self._last_seq = np.asarray(st["last_seq"], np.int64).copy()
+        self.global_params = ck.tree_to_device(st["global_params"])
+        self.prev_global = ck.tree_to_device(st["prev_global"])
+        self.prev_prev_global = ck.tree_to_device(st["prev_prev_global"])
+        self.client_base = [ck.tree_to_device(t)
+                            for t in st["client_base"]]
+        self._buffer = [ck.tree_to_device(t) for t in st["buffer"]]
+        self._buf_stale = list(st["buf_stale"])
+        self._buf_recv = [0.0] * len(self._buffer)
+        self.comm.__dict__.update(st["comm"])
+        self.records = list(st["records"])
+        if st["policy"] is not None:
+            self.policy.set_state(st["policy"])
+        self.sched.restore(st["sched"])
+        self.accepted_by_client = np.asarray(
+            st["accepted_by_client"], np.int64).copy()
+        for k, v in st["counters"].items():
+            setattr(self, {"duplicates": "duplicates",
+                           "evictions": "evictions",
+                           "readmissions": "readmissions",
+                           "exchange_expired": "exchange_expired",
+                           "wire_errors": "wire_errors",
+                           "restarts": "restarts"}[k], int(v))
+        if self.obs is not None and st["obs"] is not None:
+            self.obs.metrics.restore(st["obs"])
+        N = self.cfg.num_clients
+        if fresh_clients:
+            self.client_base = [self.global_params] * N
+            self.model_version = np.full(N, self.server_version, int)
+            self._last_seq = np.full(N, -1, np.int64)
+            self._last_reply = {}
+            self._pending = {}
+        self._evicted = set()
+        self._last_heard = np.full(N, time.monotonic())
+        if self.obs is not None:
+            self.obs.checkpoint(self.processed, h0, restored=True)
 
     # ------------------------------------------------------------ shutdown ---
 
@@ -334,7 +598,7 @@ class FLServer:
             n = self.step(timeout=0.01)
             if n == 0 and time.monotonic() > deadline:
                 break
-        for i, (t, _carry) in sorted(self._pending.items()):
+        for i, (t, _carry, _deadline) in sorted(self._pending.items()):
             # a client accepted for upload never delivered its payload
             # (killed worker): discard, count the failure, move on
             if self.obs is not None:

@@ -8,10 +8,15 @@ queue the ``inproc`` transport uses, so the ``FLServer`` hot loop is
 transport-agnostic.  Broadcasts are written back on the same connection
 (one writer lock per socket).
 
-Failure semantics: a connection that dies mid-frame (killed worker)
-raises on the reader thread, which records the client as dead and
-enqueues nothing — the server's stall timeout + pending-exchange
-discard path (``obs.failure``) handles the rest.  Per-client FIFO holds
+Failure semantics: a connection that dies mid-frame (killed worker) or
+fails the frame checks (``WireError``: bad magic, oversized length,
+undecodable body) raises on the reader thread, which records the
+client as dead WITH a reason (``"disconnect"`` / ``"wire-error"``) and
+enqueues nothing — the server's liveness tracker polls
+``dead_clients()``/``dead_reasons()`` each step and turns them into
+eviction events, and a client that reconnects (new hello on a fresh
+socket) is surfaced through ``poll_reconnects()`` for re-admission
+with a fresh decode base (docs/RESILIENCE.md).  Per-client FIFO holds
 because TCP preserves byte order per connection.
 
 Payload trees are converted to numpy before pickling
@@ -19,15 +24,14 @@ Payload trees are converted to numpy before pickling
 """
 from __future__ import annotations
 
-import pickle
 import queue
 import socket
 import threading
 import time
 from typing import Dict, List, Optional
 
-from repro.serve.messages import (WIRE_SCHEMA, UploadMsg, msg_from_wire,
-                                  msg_to_wire, read_frame)
+from repro.serve.messages import (WIRE_SCHEMA, UploadMsg, WireError,
+                                  msg_from_wire, msg_to_wire, read_frame)
 from repro.serve.transport import ClientChannel, Transport
 
 _HELLO = "hello"
@@ -58,8 +62,17 @@ class _SocketChannel(ClientChannel):
             body = read_frame(self._sock)
         except socket.timeout:
             return None
+        except WireError:
+            # a corrupt server->client frame desyncs the stream; close
+            # so the next send fails loudly (the worker loop bails, the
+            # server's liveness deadline evicts) instead of misparsing
+            self.close()
+            return None
         finally:
-            self._sock.settimeout(None)
+            try:
+                self._sock.settimeout(None)
+            except OSError:
+                pass
         return None if body is None else msg_from_wire(body)
 
     def close(self) -> None:
@@ -86,6 +99,11 @@ class SocketTransport(Transport):
         # lock — the moment its hello lands
         self._pending_bcast: Dict[int, List[bytes]] = {}
         self._dead: set = set()
+        # why each dead client died ("disconnect" | "wire-error") and
+        # which dead clients have since presented a fresh hello — the
+        # server's liveness tracker drains both surfaces every step
+        self._dead_reasons: Dict[int, str] = {}
+        self._reconnected: set = set()
         self._threads: List[threading.Thread] = []
         self._closing = False
         self._listener = socket.socket(socket.AF_INET, socket.SOCK_STREAM)
@@ -119,6 +137,14 @@ class SocketTransport(Transport):
                 raise ConnectionError("expected hello frame")
             client = int(hello[1])
             with self._lock_for(client):
+                if client in self._dead:
+                    # a previously-dead client came back on a fresh
+                    # socket: clear the tombstone and surface the
+                    # reconnect so the server can re-admit it (fresh
+                    # init broadcast, fresh decode base)
+                    self._dead.discard(client)
+                    self._dead_reasons.pop(client, None)
+                    self._reconnected.add(client)
                 self._conns[client] = conn
                 for frame in self._pending_bcast.pop(client, []):
                     conn.sendall(frame)
@@ -129,14 +155,23 @@ class SocketTransport(Transport):
                 msg = msg_from_wire(body)
                 msg.recv_host = time.monotonic()
                 self._uploads.put(msg)         # bounded: blocks the reader
-        except (ConnectionError, OSError, pickle.UnpicklingError):
-            if client is not None:
-                self._dead.add(client)
+        except WireError:
+            # corrupt/truncated/oversized frame: the structured failure
+            # path — the stream past it is garbage, so the client is
+            # dead until it reconnects; the server counts a wire error
+            self._mark_dead(client, "wire-error")
+        except (ConnectionError, OSError):
+            self._mark_dead(client, "disconnect")
         finally:
             try:
                 conn.close()
             except OSError:
                 pass
+
+    def _mark_dead(self, client: Optional[int], reason: str) -> None:
+        if client is not None:
+            self._dead.add(client)
+            self._dead_reasons[client] = reason
 
     # -------------------------------------------------------- Transport ---
 
@@ -156,6 +191,19 @@ class SocketTransport(Transport):
         """Clients whose connection died mid-stream (discard path)."""
         return set(self._dead)
 
+    def dead_reasons(self) -> Dict[int, str]:
+        """Why each currently-dead client died: ``"disconnect"`` (peer
+        vanished) or ``"wire-error"`` (corrupt frame tripped the
+        ``MAGIC``/size/decode checks)."""
+        return dict(self._dead_reasons)
+
+    def poll_reconnects(self) -> set:
+        """Drain the set of clients that reconnected (fresh hello after
+        being marked dead) since the last poll — the server re-admits
+        each with a fresh init broadcast."""
+        out, self._reconnected = self._reconnected, set()
+        return out
+
     def _lock_for(self, client: int) -> threading.Lock:
         # dict.setdefault is GIL-atomic: concurrent first touches from
         # the reader thread and the serve loop agree on one lock
@@ -174,7 +222,7 @@ class SocketTransport(Transport):
             try:
                 conn.sendall(frame)
             except OSError:
-                self._dead.add(client)
+                self._mark_dead(client, "disconnect")
 
     def client_channel(self, client: int) -> ClientChannel:
         host, port = self.address

@@ -22,9 +22,11 @@ broadcast mailbox per client.  Semantics every implementation must keep
   forbids indefinite blocking inside the drain loop).
 
 Builtins: ``inproc`` (bounded ``queue.Queue`` pair — threads in one
-process, zero serialization: trees and payloads pass by reference) and
+process, zero serialization: trees and payloads pass by reference),
 ``socket`` (``repro.serve.socket_transport`` — localhost TCP with
-length-prefixed pickle frames for real client processes).
+magic-prefixed, length-bounded pickle frames for real client
+processes) and ``chaos`` (``repro.resilience.chaos`` — a fault-
+injecting wrapper around any inner transport, docs/RESILIENCE.md).
 """
 from __future__ import annotations
 
@@ -168,6 +170,7 @@ _BUILTIN_FACTORIES: Tuple[Tuple[str, str, str], ...] = (
     # get_transport("inproc") never pays the socket machinery
     ("inproc", "repro.serve.transport", "InprocTransport"),
     ("socket", "repro.serve.socket_transport", "SocketTransport"),
+    ("chaos", "repro.resilience.chaos", "ChaosTransport"),
 )
 _builtins_loaded = False
 
@@ -209,7 +212,7 @@ def get_transport(name: str) -> Callable[..., Transport]:
             f"{', '.join(available_transports())}") from None
 
 
-_PREFERRED = ("inproc", "socket")
+_PREFERRED = ("inproc", "socket", "chaos")
 
 
 def available_transports() -> Tuple[str, ...]:

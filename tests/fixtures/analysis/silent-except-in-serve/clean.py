@@ -1,0 +1,33 @@
+"""Negative fixture: failures surfaced as structured events, and narrow
+handlers a transport legitimately absorbs."""
+
+
+class WireError(ConnectionError):
+    pass
+
+
+def decode(body):
+    import pickle
+    try:
+        return pickle.loads(body)
+    except Exception as e:                # re-raised as a structured error
+        raise WireError(f"undecodable frame body: {e}") from e
+
+
+def reader_loop(self, conn, client):
+    while True:
+        try:
+            self.handle(conn.recv(4096))
+        except WireError:
+            self._mark_dead(client, "wire-error")   # surfaced: a call
+            return
+        except OSError:                   # narrow: not a broad handler
+            pass
+
+
+def counted(obs, frame, decode_fn):
+    try:
+        return decode_fn(frame)
+    except Exception:
+        obs.wire_error()                  # reported through obs
+        return None

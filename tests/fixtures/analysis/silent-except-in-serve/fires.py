@@ -1,0 +1,24 @@
+"""Positive fixture: broad excepts that swallow failures silently."""
+
+
+def reader_loop(conn, handle):
+    while True:
+        try:
+            handle(conn.recv(4096))
+        except Exception:                 # the silent reader-thread death
+            pass
+
+
+def poll(transport):
+    try:
+        return transport.recv_upload(timeout=0.1)
+    except:                               # noqa: E722 — bare, still silent
+        return None
+
+
+def tolerant(ch, msg):
+    try:
+        ch.send(msg)
+    except (OSError, Exception):          # broad member of a tuple
+        ok = False                        # records nothing anyone reads
+        return ok

@@ -160,7 +160,7 @@ class TestEntryPoints:
         """table3/fig4/fig5 at smoke scale — the Federation-backed
         benchmark harness end to end (~10 s)."""
         p = _run(["-m", "benchmarks.run", "--smoke",
-                  "--skip", "engine,compress,scenarios,serving"])
+                  "--skip", "engine,compress,scenarios,serving,resilience"])
         assert p.returncode == 0, p.stderr[-2000:]
         assert "[table3]" in p.stdout
         assert "communication_times" in p.stdout or "ccr" in p.stdout
@@ -172,7 +172,8 @@ class TestEntryPoints:
         import json
         p = subprocess.run(
             [sys.executable, str(ROOT / "benchmarks" / "run.py"), "--smoke",
-             "--skip", "table3,fig4,fig5,compress,scenarios,obs,analysis,serving"],
+             "--skip", "table3,fig4,fig5,compress,scenarios,obs,analysis,"
+             "serving,resilience"],
             cwd=tmp_path, timeout=420, capture_output=True, text=True)
         assert p.returncode == 0, p.stderr[-2000:]
         out = tmp_path / "BENCH_engine.json"
@@ -197,7 +198,8 @@ class TestEntryPoints:
         import json
         p = subprocess.run(
             [sys.executable, str(ROOT / "benchmarks" / "run.py"), "--smoke",
-             "--skip", "table3,fig4,fig5,compress,engine,obs,analysis,serving"],
+             "--skip", "table3,fig4,fig5,compress,engine,obs,analysis,"
+             "serving,resilience"],
             cwd=tmp_path, timeout=420, capture_output=True, text=True)
         assert p.returncode == 0, p.stderr[-2000:]
         out = tmp_path / "BENCH_scenarios.json"
@@ -227,7 +229,8 @@ class TestEntryPoints:
         import json
         p = subprocess.run(
             [sys.executable, str(ROOT / "benchmarks" / "run.py"), "--smoke",
-             "--skip", "table3,fig4,fig5,compress,engine,scenarios,analysis,serving"],
+             "--skip", "table3,fig4,fig5,compress,engine,scenarios,analysis,"
+             "serving,resilience"],
             cwd=tmp_path, timeout=420, capture_output=True, text=True)
         assert p.returncode == 0, p.stderr[-2000:]
         out = tmp_path / "BENCH_obs.json"
@@ -253,7 +256,8 @@ class TestEntryPoints:
         import json
         p = subprocess.run(
             [sys.executable, str(ROOT / "benchmarks" / "run.py"), "--smoke",
-             "--skip", "table3,fig4,fig5,compress,engine,scenarios,obs,serving"],
+             "--skip", "table3,fig4,fig5,compress,engine,scenarios,obs,"
+             "serving,resilience"],
             cwd=tmp_path, timeout=420, capture_output=True, text=True)
         assert p.returncode == 0, p.stderr[-2000:]
         out = tmp_path / "BENCH_analysis.json"
@@ -281,7 +285,8 @@ class TestEntryPoints:
         import json
         p = subprocess.run(
             [sys.executable, str(ROOT / "benchmarks" / "run.py"), "--smoke",
-             "--skip", "table3,fig4,fig5,compress,engine,scenarios,obs,analysis"],
+             "--skip", "table3,fig4,fig5,compress,engine,scenarios,obs,"
+             "analysis,resilience"],
             cwd=tmp_path, timeout=420, capture_output=True, text=True)
         assert p.returncode == 0, p.stderr[-2000:]
         out = tmp_path / "BENCH_serving.json"
@@ -304,6 +309,39 @@ class TestEntryPoints:
         # floor is deliberately loose (CI boxes vary) but a wedged hot
         # loop or accidental per-event recompile lands far below it
         assert labels["throughput"]["uploads_per_sec"] > 1.0
+
+    def test_bench_resilience_json_emitted(self, tmp_path):
+        """benchmarks/run.py --smoke must leave BENCH_resilience.json
+        behind (schema bench-resilience/v1): a chaos lap whose
+        committed-update multiset reconciles exactly against the
+        fault-free control (at-least-once retry + seq dedup =
+        exactly-once commit), plus checkpoint-resume economics."""
+        import json
+        p = subprocess.run(
+            [sys.executable, str(ROOT / "benchmarks" / "run.py"), "--smoke",
+             "--skip", "table3,fig4,fig5,compress,engine,scenarios,obs,"
+             "analysis,serving"],
+            cwd=tmp_path, timeout=420, capture_output=True, text=True)
+        assert p.returncode == 0, p.stderr[-2000:]
+        out = tmp_path / "BENCH_resilience.json"
+        assert out.exists(), p.stdout[-2000:]
+        doc = json.loads(out.read_text())
+        assert doc["schema"] == "bench-resilience/v1"
+        # the resilience contract itself, not just artifact shape: the
+        # chaos lap committed exactly the fault-free multiset
+        assert doc["multiset_matches_fault_free"] is True
+        labels = {r["lap"]: r for r in doc["rows"]}
+        assert {"fault-free", "chaos", "resume"} <= set(labels)
+        chaos = labels["chaos"]
+        assert chaos["multiset_matches_fault_free"] is True
+        assert chaos["completed_events"] == \
+            labels["fault-free"]["completed_events"]
+        # the fault schedule actually fired — a chaos lap that injected
+        # nothing proves nothing
+        assert sum(chaos["faults"].values()) > 0
+        resume = labels["resume"]
+        assert resume["checkpoint_bytes"] > 0
+        assert resume["resumed_records"] > 0
 
     @pytest.mark.slow
     def test_benchmarks_smoke_all_sections(self):

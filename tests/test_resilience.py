@@ -1,0 +1,673 @@
+"""repro.resilience — fault injection, retry/backoff, and full-run
+checkpoint-resume (docs/RESILIENCE.md).
+
+The acceptance contract:
+
+* **Seeded chaos** — fault fates are a pure function of
+  (seed, client, frame counter): same spec, same schedule, bit for bit;
+  the default spec is a no-op; invalid rates fail loudly.
+* **Exactly-once under chaos** — a live threaded federation behind
+  ``ChaosTransport`` (drop + duplicate + reorder + blackout) with
+  retrying clients commits EXACTLY the fault-free run's per-client
+  update multiset: at-least-once sending + (client, seq) dedup =
+  exactly-once processing.
+* **Liveness** — silent clients are evicted on deadline, re-admitted on
+  their next message; a restarted client (seq regressed to 0) is
+  rebased on a fresh decode base; wedged two-phase exchanges expire on
+  their own deadline.
+* **Wire hygiene** — bad magic / oversized length / undecodable body
+  raise a structured ``WireError``; a socket reader that trips one
+  records the client dead with reason ``"wire-error"`` instead of
+  dying silently.
+* **Checkpoint-resume** — every runtime (events / batched / rounds /
+  sync / serve-bridge) continues BIT-IDENTICALLY from its last atomic
+  checkpoint; a checkpoint from a different run shape fails loudly
+  (``CheckpointMismatchError``); the bridge driver refuses resumes it
+  cannot make bit-equal (client-side policy or EF state).
+"""
+import socket
+import struct
+import time
+
+import numpy as np
+import pytest
+
+from repro.checkpoint import CheckpointMismatchError
+from repro.core import FLRunConfig, run_event_driven, run_round_based
+from repro.core.client import (LocalSpec, make_evaluator,
+                               make_weighted_classifier_loss)
+from repro.core.scheduler import EventScheduler
+from repro.data.partition import iid_partition
+from repro.data.synthetic import synthetic_mnist
+from repro.models.cnn import MLPConfig, mlp_forward, mlp_init
+from repro.resilience import ChaosTransport, FaultPlan, FaultSpec, RetryPolicy
+from repro.resilience.faults import DROP, DUPLICATE, OK
+from repro.serve import FLServer, InprocTransport, launch_serving, serve_run
+from repro.serve import messages as wire
+from repro.serve.client import _exchange
+from repro.serve.messages import (MAGIC, MAX_FRAME_BYTES, BroadcastMsg,
+                                  UploadMsg, WireError, msg_from_wire,
+                                  msg_to_wire, read_frame)
+from repro.serve.socket_transport import SocketTransport
+from repro.sim import get_scenario
+
+
+@pytest.fixture(scope="module")
+def setup():
+    xtr, ytr, xte, yte = synthetic_mnist(4 * 100 + 200, 200, seed=0)
+    mcfg = MLPConfig(hidden=(16,))
+    loss_fn = make_weighted_classifier_loss(mlp_forward, mcfg)
+    evaluate = make_evaluator(mlp_forward, mcfg, xte, yte, batch=200)
+    fed = iid_partition(xtr, ytr, 4, samples_per_client=100, seed=0)
+    return mcfg, loss_fn, evaluate, fed
+
+
+def _cfg(alg="afl", **kw):
+    base = dict(algorithm=alg, num_clients=4, rounds=2,
+                local=LocalSpec(batch_size=32, local_rounds=1, lr=0.1),
+                target_acc=0.99, events_per_eval=4, seed=7)
+    base.update(kw)
+    return FLRunConfig(**base)
+
+
+def _callables(setup):
+    mcfg, loss_fn, evaluate, fed = setup
+    return dict(init_params_fn=lambda k: mlp_init(mcfg, k),
+                loss_fn=loss_fn, fed_data=fed, evaluate_fn=evaluate)
+
+
+def _upload(client, seq, tree, sim_time=1.0):
+    return UploadMsg(kind=wire.UPDATE, client=client, seq=seq, version=0,
+                     sim_time=sim_time, payload=tree)
+
+
+# ------------------------------------------------------- fault schedules ---
+
+class TestFaultSchedule:
+    def test_same_seed_same_fates(self):
+        spec = FaultSpec(drop=0.2, duplicate=0.15, reorder=0.1,
+                         corrupt=0.05, seed=42)
+        a = FaultPlan(spec, 4)
+        b = FaultPlan(spec, 4)
+        fates = [[p.fate(c) for c in (0, 1, 2, 3) for _ in range(50)]
+                 for p in (a, b)]
+        assert fates[0] == fates[1]
+        other = [FaultPlan(FaultSpec(drop=0.2, duplicate=0.15, reorder=0.1,
+                                     corrupt=0.05, seed=43), 4).fate(c)
+                 for c in (0, 1, 2, 3) for _ in range(50)]
+        assert other != fates[0]
+
+    def test_marginal_rates_are_exact_bands(self):
+        """One uniform per frame cut into disjoint bands: observed
+        fractions track the declared rates."""
+        spec = FaultSpec(drop=0.3, duplicate=0.2, seed=5)
+        plan = FaultPlan(spec, 1)
+        fates = [plan.fate(0) for _ in range(4000)]
+        assert abs(fates.count(DROP) / 4000 - 0.3) < 0.03
+        assert abs(fates.count(DUPLICATE) / 4000 - 0.2) < 0.03
+        assert fates.count(OK) > 0
+
+    def test_default_spec_is_noop(self):
+        plan = FaultPlan(FaultSpec(), 3)
+        assert all(plan.fate(c) == OK for c in range(3) for _ in range(20))
+        assert all(plan.bcast_fate(c) == OK for c in range(3))
+
+    def test_invalid_rates_fail_loudly(self):
+        with pytest.raises(ValueError, match="sum"):
+            FaultSpec(drop=0.6, duplicate=0.5)
+        with pytest.raises(ValueError, match="bcast_drop"):
+            FaultSpec(bcast_drop=1.5)
+
+    def test_downlink_counters_independent_of_uplink(self):
+        """Adding uplink traffic never shifts a client's downlink draws
+        (separate counter axes) — retries can't reshuffle bcast fates."""
+        spec = FaultSpec(drop=0.3, bcast_drop=0.3, seed=9)
+        a = FaultPlan(spec, 2)
+        down_a = [a.bcast_fate(0) for _ in range(30)]
+        b = FaultPlan(spec, 2)
+        for _ in range(17):              # extra uplink frames first
+            b.fate(0)
+        down_b = [b.bcast_fate(0) for _ in range(30)]
+        assert down_a == down_b
+
+    def test_plan_state_roundtrip(self):
+        spec = FaultSpec(drop=0.25, duplicate=0.25, seed=3)
+        a = FaultPlan(spec, 2)
+        for _ in range(13):
+            a.fate(0)
+            a.fate(1)
+        st = a.state()
+        rest = [a.fate(c) for c in (0, 1) for _ in range(20)]
+        b = FaultPlan(spec, 2)
+        b.set_state(st)
+        assert [b.fate(c) for c in (0, 1) for _ in range(20)] == rest
+
+    def test_availability_model_layers_on_top(self):
+        """A frame sent while the availability model fails the client's
+        round is dropped regardless of the fault bands."""
+        class _Down:
+            active = True
+
+            def round_fails(self, client):
+                return True
+
+        plan = FaultPlan(FaultSpec(seed=1), 2, availability=_Down())
+        assert plan.fate(0) == DROP
+
+
+class TestRetryPolicy:
+    def test_validation(self):
+        with pytest.raises(ValueError, match="max_attempts"):
+            RetryPolicy(max_attempts=0)
+        with pytest.raises(ValueError, match="jitter"):
+            RetryPolicy(jitter=1.5)
+
+    def test_backoff_bounds_and_cap(self):
+        rp = RetryPolicy(base_s=0.1, factor=2.0, max_backoff_s=0.3,
+                         jitter=0.5, seed=11)
+        for attempt, nominal in ((1, 0.1), (2, 0.2), (3, 0.3), (6, 0.3)):
+            b = rp.backoff(attempt, client=2, nonce=7)
+            assert nominal * 0.5 <= b <= nominal * 1.5
+
+    def test_backoff_deterministic_per_frame(self):
+        rp = RetryPolicy(seed=4)
+        assert rp.backoff(2, 1, 9) == rp.backoff(2, 1, 9)
+        assert rp.backoff(2, 1, 9) != rp.backoff(2, 1, 10)
+
+    def test_zero_jitter_is_exact(self):
+        rp = RetryPolicy(base_s=0.05, factor=2.0, max_backoff_s=1.0,
+                         jitter=0.0)
+        assert rp.backoff(3, 0, 0) == pytest.approx(0.2)
+
+
+# --------------------------------------------------- stop-and-wait retry ---
+
+class _ScriptedChannel:
+    """A channel that answers sends from a script: replies[i] answers
+    the i-th send (None = the reply was lost)."""
+
+    def __init__(self, replies):
+        self._replies = list(replies)
+        self._inbox = []
+        self.sends = 0
+
+    def send(self, msg, timeout=None):
+        if self._replies:
+            reply = self._replies.pop(0)
+            if reply is not None:
+                self._inbox.append(reply)
+        self.sends += 1
+        return True
+
+    def recv(self, timeout=None):
+        if self._inbox:
+            return self._inbox.pop(0)
+        time.sleep(min(timeout or 0.01, 0.01))
+        return None
+
+
+_FAST = RetryPolicy(max_attempts=4, attempt_timeout_s=0.15, base_s=0.005,
+                    max_backoff_s=0.02, seed=0)
+
+
+def _msg(seq):
+    return UploadMsg(kind=wire.REPORT, client=0, seq=seq, version=0)
+
+
+class TestExchangeRetry:
+    def test_lost_reply_recovered_by_retry(self):
+        ch = _ScriptedChannel([None, BroadcastMsg(
+            kind=wire.DOWNLOAD, version=1, ack_seq=3)])
+        stats = {}
+        reply = _exchange(ch, _msg(3), recv_timeout=5.0, retry=_FAST,
+                          stats=stats)
+        assert reply is not None and reply.ack_seq == 3
+        assert ch.sends == 2 and stats["retries"] == 1
+
+    def test_stale_reply_discarded_on_ack_seq(self):
+        """A late reply to a PREVIOUS exchange (ack_seq mismatch) is
+        skipped, not consumed as this exchange's answer."""
+        stale = BroadcastMsg(kind=wire.DOWNLOAD, version=1, ack_seq=4)
+        good = BroadcastMsg(kind=wire.DOWNLOAD, version=1, ack_seq=5)
+        ch = _ScriptedChannel([None])
+        ch._inbox = [stale, good]
+        reply = _exchange(ch, _msg(5), recv_timeout=5.0, retry=_FAST)
+        assert reply is good
+
+    def test_exhaustion_returns_none(self):
+        ch = _ScriptedChannel([])
+        stats = {}
+        t0 = time.monotonic()
+        reply = _exchange(ch, _msg(0), recv_timeout=5.0, retry=_FAST,
+                          stats=stats)
+        assert reply is None
+        assert ch.sends == _FAST.max_attempts
+        assert stats["retries"] == _FAST.max_attempts - 1
+        assert time.monotonic() - t0 < 3.0
+
+    def test_no_retry_without_policy(self):
+        ch = _ScriptedChannel([])
+        assert _exchange(ch, _msg(0), recv_timeout=0.1) is None
+        assert ch.sends == 1
+
+
+# ----------------------------------------------- liveness / evict / dedup ---
+
+class TestLiveness:
+    def _server(self, setup, alg="afl", **kw):
+        cb = _callables(setup)
+        tr = InprocTransport(4)
+        server = FLServer(_cfg(alg), init_params_fn=cb["init_params_fn"],
+                          evaluate_fn=cb["evaluate_fn"], transport=tr, **kw)
+        return server, tr
+
+    def test_silent_client_evicted_then_readmitted(self, setup):
+        server, tr = self._server(setup, liveness_timeout=0.05)
+        server._last_heard[:] = time.monotonic() - 1.0
+        server._police()
+        assert server.evictions == 4
+        assert server._evicted == {0, 1, 2, 3}
+        # the next message from an evicted client re-admits it in place
+        tr.client_channel(0).send(_upload(0, 0, server.global_params))
+        server.step(timeout=0.2)
+        assert 0 not in server._evicted
+        assert server.readmissions == 1 and server.processed == 1
+        tr.close()
+
+    def test_restarted_client_rebased_fresh(self, setup):
+        """seq regressing to 0 from an evicted client is a RESTART, not
+        a duplicate: fresh decode base, watermark reset, new init
+        broadcast, and the message is processed."""
+        server, tr = self._server(setup)
+        ch = tr.client_channel(0)
+        ch.send(_upload(0, 0, server.global_params))
+        ch.send(_upload(0, 1, server.global_params))
+        server.step(timeout=0.2)
+        assert server.processed == 2 and server._last_seq[0] == 1
+        server._evict(0, reason="test")
+        ch.send(_upload(0, 0, server.global_params))   # fresh process
+        server.step(timeout=0.2)
+        assert server.restarts == 1 and server.duplicates == 0
+        assert server.processed == 3 and server._last_seq[0] == 0
+        kinds = []
+        while True:
+            msg = ch.recv(timeout=0.1)
+            if msg is None:
+                break
+            kinds.append(msg.kind)
+        assert wire.INIT in kinds        # re-bootstrap broadcast
+        tr.close()
+
+    def test_wedged_exchange_expires_on_deadline(self, setup):
+        server, tr = self._server(setup, alg="vafl", exchange_timeout=0.05)
+        tr.client_channel(0).send(UploadMsg(
+            kind=wire.REPORT, client=0, seq=0, version=0, sim_time=1.0,
+            value=1e9))
+        server.step(timeout=0.2)
+        assert 0 in server._pending      # accepted, payload never lands
+        time.sleep(0.1)
+        server._police()
+        assert server.exchange_expired == 1
+        assert not server._pending
+        tr.close()
+
+    def test_transport_dead_client_evicted_with_reason(self, setup):
+        """The chaos transport's blackout surfaces through
+        dead_clients()/dead_reasons() and the server evicts."""
+        cb = _callables(setup)
+        chaos = ChaosTransport(4, faults=FaultSpec(seed=1))
+        chaos._dark_until[2] = time.monotonic() + 5.0
+        server = FLServer(_cfg("afl"), init_params_fn=cb["init_params_fn"],
+                          evaluate_fn=cb["evaluate_fn"], transport=chaos)
+        server._police()
+        assert 2 in server._evicted and server.evictions == 1
+        chaos.close()
+
+    def test_corrupt_frames_counted_via_poll(self, setup):
+        cb = _callables(setup)
+        chaos = ChaosTransport(4, faults=FaultSpec(seed=1))
+        chaos._wire_errors = 3
+        server = FLServer(_cfg("afl"), init_params_fn=cb["init_params_fn"],
+                          evaluate_fn=cb["evaluate_fn"], transport=chaos)
+        server._police()
+        assert server.wire_errors == 3
+        assert chaos.poll_wire_errors() == 0    # drained
+        chaos.close()
+
+
+# ------------------------------------------------------------ wire frames ---
+
+class TestWireFrames:
+    def test_bad_magic_is_wire_error(self):
+        a, b = socket.socketpair()
+        try:
+            a.sendall(b"XXXX" + struct.pack("!I", 4) + b"body")
+            with pytest.raises(WireError, match="magic"):
+                read_frame(b)
+        finally:
+            a.close()
+            b.close()
+
+    def test_oversized_length_is_wire_error(self):
+        a, b = socket.socketpair()
+        try:
+            a.sendall(MAGIC + struct.pack("!I", MAX_FRAME_BYTES + 1))
+            with pytest.raises(WireError, match="MAX_FRAME_BYTES"):
+                read_frame(b)
+        finally:
+            a.close()
+            b.close()
+
+    def test_clean_eof_returns_none_midframe_raises(self):
+        a, b = socket.socketpair()
+        a.close()
+        assert read_frame(b) is None           # EOF at a frame boundary
+        b.close()
+        a, b = socket.socketpair()
+        try:
+            a.sendall(MAGIC + struct.pack("!I", 100) + b"short")
+            a.close()
+            with pytest.raises(ConnectionError, match="mid-frame"):
+                read_frame(b)
+        finally:
+            b.close()
+
+    def test_undecodable_body_is_wire_error(self):
+        with pytest.raises(WireError, match="undecodable"):
+            msg_from_wire(b"\x00garbage that is not a pickle")
+
+    def test_send_side_size_guard(self, monkeypatch):
+        monkeypatch.setattr(wire, "MAX_FRAME_BYTES", 64)
+        with pytest.raises(WireError, match="exceeds"):
+            msg_to_wire(_upload(0, 0, {"w": np.zeros(1024, np.float32)}))
+
+    def test_socket_reader_survives_garbage_as_dead_client(self, setup):
+        """The satellite fix: a corrupt frame no longer kills the reader
+        thread silently — the client lands in dead_clients() with reason
+        "wire-error", the server evicts it and counts the wire error,
+        and a fresh hello re-admits it."""
+        cb = _callables(setup)
+        tr = SocketTransport(1)
+        server = FLServer(_cfg("afl", num_clients=1, events_per_eval=1),
+                          init_params_fn=cb["init_params_fn"],
+                          evaluate_fn=cb["evaluate_fn"], transport=tr)
+        host, port = tr.address
+        raw = socket.create_connection((host, port))
+        raw.sendall(msg_to_wire(("hello", 0)))
+        raw.sendall(b"\xde\xad\xbe\xef garbage, not a frame")
+        deadline = time.monotonic() + 5
+        while not tr.dead_clients() and time.monotonic() < deadline:
+            time.sleep(0.01)
+        assert tr.dead_clients() == {0}
+        assert tr.dead_reasons()[0] == "wire-error"
+        server._police()
+        assert 0 in server._evicted and server.wire_errors >= 1
+        raw.close()
+        # a fresh hello on a new socket surfaces as a reconnect and the
+        # server re-admits with a fresh init broadcast
+        fresh = socket.create_connection((host, port))
+        fresh.sendall(msg_to_wire(("hello", 0)))
+        deadline = time.monotonic() + 5
+        readmitted = False
+        while time.monotonic() < deadline:
+            server._police()
+            if 0 not in server._evicted:
+                readmitted = True
+                break
+            time.sleep(0.01)
+        assert readmitted and server.readmissions == 1
+        fresh.close()
+        tr.close()
+
+
+# -------------------------------------------------------- chaos acceptance ---
+
+class TestChaosAcceptance:
+    def _lap(self, setup, transport, *, retry=None, **kw):
+        cb = _callables(setup)
+        server, workers, tr = launch_serving(
+            _cfg("afl", rounds=3), transport=transport, recv_timeout=10.0,
+            retry=retry, **kw, **cb)
+        try:
+            server.start()
+            for w in workers:
+                w.start()
+            server.run(stall_timeout=30.0)
+            for w in workers:
+                w.stop()
+            for w in workers:
+                w.join(timeout=10.0)
+        finally:
+            tr.close()
+        return server, workers
+
+    def test_chaos_commits_fault_free_multiset(self, setup):
+        """THE resilience acceptance: under seeded drop + duplicate +
+        reorder + blackout with retrying clients, every client commits
+        exactly as many updates as the fault-free run — and the fault
+        schedule demonstrably fired."""
+        s0, _ = self._lap(setup, "inproc")
+        base = [int(x) for x in s0.accepted_by_client]
+        assert s0.processed == 3 * 4 and base == [3, 3, 3, 3]
+
+        chaos = ChaosTransport(4, faults=FaultSpec(
+            drop=0.15, duplicate=0.1, reorder=0.1, blackout=0.03,
+            blackout_s=0.3, seed=11))
+        retry = RetryPolicy(max_attempts=8, attempt_timeout_s=0.5,
+                            base_s=0.02, max_backoff_s=0.25, seed=11)
+        s1, workers = self._lap(setup, chaos, retry=retry,
+                                exchange_timeout=10.0,
+                                liveness_timeout=30.0)
+        assert [int(x) for x in s1.accepted_by_client] == base
+        assert s1.processed == s0.processed
+        injected = sum(chaos.stats[k] for k in
+                       ("drop", "duplicate", "reorder", "blackout"))
+        assert injected > 0, "fault schedule never fired"
+        if chaos.stats["drop"] or chaos.stats["blackout"]:
+            assert sum(w.stats["retries"] for w in workers) > 0
+
+
+# --------------------------------------------------------- checkpoint-resume ---
+
+class TestCheckpointResume:
+    """Kill-at-event-k, bit-equal: a run checkpointed every k events is
+    killed (its budget simply ends), a fresh process resumes from the
+    last checkpoint, and the final records/ledgers equal the
+    uninterrupted run's exactly."""
+
+    def _records(self, res):
+        return [(r.round, r.time, r.global_acc, r.uploads_so_far)
+                for r in res.records]
+
+    def test_events_runtime_bit_equal(self, setup, tmp_path):
+        cb = _callables(setup)
+        path = str(tmp_path / "ev.ckpt")
+        ref = run_event_driven(_cfg("vafl", rounds=2), **cb)
+        mid = run_event_driven(_cfg("vafl", rounds=2, checkpoint_path=path,
+                                    checkpoint_every=3), **cb)
+        # checkpointing itself never perturbs the run
+        assert self._records(mid) == self._records(ref)
+        res = run_event_driven(_cfg("vafl", rounds=2, checkpoint_path=path,
+                                    resume=True), **cb)
+        assert self._records(res) == self._records(ref)
+        assert res.comm.model_uploads == ref.comm.model_uploads
+        assert res.comm.uplink_bytes == ref.comm.uplink_bytes
+
+    def test_events_resume_extends_budget(self, setup, tmp_path):
+        """A resume may EXTEND the run (rounds is excluded from the
+        fingerprint): continue a finished 1-round checkpoint to 2 rounds
+        and land bit-equal with the uninterrupted 2-round run."""
+        cb = _callables(setup)
+        path = str(tmp_path / "ext.ckpt")
+        ref = run_event_driven(_cfg("afl", rounds=2), **cb)
+        run_event_driven(_cfg("afl", rounds=1, checkpoint_path=path,
+                              checkpoint_every=4), **cb)
+        res = run_event_driven(_cfg("afl", rounds=2, checkpoint_path=path,
+                                    resume=True), **cb)
+        assert self._records(res) == self._records(ref)
+
+    def test_batched_engine_bit_equal(self, setup, tmp_path):
+        """The hard case: the one-window-deep pipeline plus a FedBuff
+        buffer crossing the checkpoint boundary."""
+        cb = _callables(setup)
+        path = str(tmp_path / "bat.ckpt")
+        kw = dict(engine="batched", max_batch=2, buffer_size=2)
+        ref = run_event_driven(_cfg("vafl", rounds=2, **kw), **cb)
+        run_event_driven(_cfg("vafl", rounds=2, checkpoint_path=path,
+                              checkpoint_every=3, **kw), **cb)
+        res = run_event_driven(_cfg("vafl", rounds=2, checkpoint_path=path,
+                                    resume=True, **kw), **cb)
+        assert self._records(res) == self._records(ref)
+        assert res.comm.uplink_bytes == ref.comm.uplink_bytes
+
+    def test_batched_codec_ef_bit_equal(self, setup, tmp_path):
+        """Client codec state rides along: top-k + int8 with error
+        feedback resumes bit-equal (EF residuals are in the bundle)."""
+        cb = _callables(setup)
+        path = str(tmp_path / "ef.ckpt")
+        kw = dict(engine="batched", max_batch=2, buffer_size=2,
+                  compressor="topk0.5_int8", error_feedback=True)
+        ref = run_event_driven(_cfg("afl", rounds=2, **kw), **cb)
+        run_event_driven(_cfg("afl", rounds=2, checkpoint_path=path,
+                              checkpoint_every=3, **kw), **cb)
+        res = run_event_driven(_cfg("afl", rounds=2, checkpoint_path=path,
+                                    resume=True, **kw), **cb)
+        assert self._records(res) == self._records(ref)
+        assert res.comm.upload_payload_bytes == ref.comm.upload_payload_bytes
+
+    def test_rounds_runtime_bit_equal(self, setup, tmp_path):
+        """Round-grained checkpoints under a reactive scenario with
+        partial participation: the participation RNG, scenario model
+        counters and simulated clock all resume exactly."""
+        cb = _callables(setup)
+        path = str(tmp_path / "rd.ckpt")
+        kw = dict(scenario="flaky_edge", participation=0.75, rounds=4,
+                  events_per_eval=1)
+        ref = run_round_based(_cfg("vafl", **kw), **cb)
+        run_round_based(_cfg("vafl", checkpoint_path=path,
+                             checkpoint_every=2, **kw), **cb)
+        res = run_round_based(_cfg("vafl", checkpoint_path=path,
+                                   resume=True, **kw), **cb)
+        assert self._records(res) == self._records(ref)
+        assert res.sim_time == ref.sim_time
+        assert res.comm.model_uploads == ref.comm.model_uploads
+
+    def test_sync_runtime_bit_equal(self, setup, tmp_path):
+        cb = _callables(setup)
+        path = str(tmp_path / "sy.ckpt")
+        kw = dict(rounds=4, participation=0.75, events_per_eval=1)
+        ref = run_event_driven(_cfg("fedavg", **kw), **cb)
+        run_event_driven(_cfg("fedavg", checkpoint_path=path,
+                              checkpoint_every=2, **kw), **cb)
+        res = run_event_driven(_cfg("fedavg", checkpoint_path=path,
+                                    resume=True, **kw), **cb)
+        assert self._records(res) == self._records(ref)
+        assert res.sim_time == ref.sim_time
+
+    def test_serve_bridge_bit_equal(self, setup, tmp_path):
+        """The live-service path: FLServer checkpoints mid-run, the
+        sequential bridge driver reconstructs every client's exact state
+        from the bundle and continues bit-identically."""
+        cb = _callables(setup)
+        path = str(tmp_path / "sv.ckpt")
+        ref = serve_run(_cfg("afl", rounds=2), driver="sequential", **cb)
+        serve_run(_cfg("afl", rounds=2, checkpoint_path=path,
+                       checkpoint_every=3), driver="sequential", **cb)
+        res = serve_run(_cfg("afl", rounds=2, checkpoint_path=path,
+                             resume=True), driver="sequential", **cb)
+        assert self._records(res) == self._records(ref)
+        assert res.comm.model_uploads == ref.comm.model_uploads
+
+    def test_bridge_refuses_client_side_state(self, setup, tmp_path):
+        """Bit-equal bridge resume is refused LOUDLY when client-side
+        state (prev-grads for needs_values policies, EF residuals) is
+        not in the server checkpoint — never silently wrong."""
+        cb = _callables(setup)
+        path = str(tmp_path / "vf.ckpt")
+        serve_run(_cfg("vafl", rounds=2, checkpoint_path=path,
+                       checkpoint_every=3), driver="sequential", **cb)
+        with pytest.raises(ValueError, match="needs_values"):
+            serve_run(_cfg("vafl", rounds=2, checkpoint_path=path,
+                           resume=True), driver="sequential", **cb)
+        path2 = str(tmp_path / "ef.ckpt")
+        kw = dict(compressor="topk0.5_int8", error_feedback=True)
+        serve_run(_cfg("afl", rounds=2, checkpoint_path=path2,
+                       checkpoint_every=3, **kw), driver="sequential", **cb)
+        with pytest.raises(ValueError, match="error_feedback"):
+            serve_run(_cfg("afl", rounds=2, checkpoint_path=path2,
+                           resume=True, **kw), driver="sequential", **cb)
+
+    def test_mismatched_config_fails_loudly(self, setup, tmp_path):
+        """A checkpoint written by a different run shape raises
+        CheckpointMismatchError naming the differing field — resuming
+        garbage is never silent."""
+        cb = _callables(setup)
+        path = str(tmp_path / "mm.ckpt")
+        run_event_driven(_cfg("afl", rounds=1, checkpoint_path=path,
+                              checkpoint_every=4), **cb)
+        with pytest.raises(CheckpointMismatchError, match="seed"):
+            run_event_driven(_cfg("afl", rounds=1, seed=8,
+                                  checkpoint_path=path, resume=True), **cb)
+
+    def test_missing_checkpoint_starts_fresh(self, setup, tmp_path):
+        """resume=True with no file on disk is a fresh start (the
+        first launch of a crash-looping job), not an error."""
+        cb = _callables(setup)
+        path = str(tmp_path / "absent.ckpt")
+        ref = run_event_driven(_cfg("afl", rounds=1), **cb)
+        res = run_event_driven(_cfg("afl", rounds=1, checkpoint_path=path,
+                                    resume=True), **cb)
+        assert self._records(res) == self._records(ref)
+
+
+# ------------------------------------------- scheduler mid-window restore ---
+
+class TestSchedulerMidWindowRestore:
+    """EventScheduler.snapshot()/restore() taken MID-WINDOW — after
+    pop_window handed events out but before their reschedules — under a
+    reactive scenario (byte-aware network + availability), the exact
+    state the batched engine checkpoints."""
+
+    def _build(self):
+        c, n, a = get_scenario("flaky_edge").build(6, seed=3)
+        return EventScheduler(6, c, network=n, availability=a)
+
+    def _drive(self, sched, windows, start=0):
+        trace = []
+        for w in range(start, windows):
+            times, clients = sched.pop_window(3)
+            for j, c in enumerate(clients):
+                trace.append((float(times[j]), int(c)))
+                sched.schedule(int(c), upload_bytes=90_000 + 1000 * w,
+                               download_bytes=40_000)
+        return trace
+
+    def test_mid_window_snapshot_resumes_bit_equal(self):
+        ref = self._drive(self._build(), 40)
+
+        s = self._build()
+        trace = self._drive(s, 20)
+        # the mid-window cut: events popped, reschedules still pending
+        times, clients = s.pop_window(3)
+        snap = s.snapshot()
+        held = [(float(t), int(c)) for t, c in zip(times, clients)]
+
+        s2 = self._build().restore(snap)
+        assert s2.now == s.now and len(s2) == len(s)
+        for j, (t, c) in enumerate(held):
+            trace.append((t, c))
+            s2.schedule(c, upload_bytes=90_000 + 1000 * 20,
+                        download_bytes=40_000)
+        trace += self._drive(s2, 40, start=21)
+        assert trace == ref
+
+    def test_restored_reactive_counters_match(self):
+        s = self._build()
+        self._drive(s, 15)
+        s2 = self._build().restore(s.snapshot())
+        assert (s2.client_up_bytes == s.client_up_bytes).all()
+        assert (s2.client_failed_rounds == s.client_failed_rounds).all()
+        assert (s2.busy_until == s.busy_until).all()
+        # availability draws continue from the same counters
+        a, b = s.pop_window(3), s2.pop_window(3)
+        assert (a[0] == b[0]).all() and (a[1] == b[1]).all()

@@ -165,17 +165,27 @@ class TestTransportSemantics:
         assert InprocTransport(1).drain_uploads(4, timeout=0.15) == []
         assert time.monotonic() - t0 >= 0.15
 
-    def test_server_asserts_per_client_fifo(self, setup):
+    def test_server_dedups_replayed_seq(self, setup):
+        """A replayed seq (an at-least-once retry or a chaos duplicate)
+        is absorbed: processed once, counted as a duplicate, and the
+        cached reply is re-sent with the matching ack_seq."""
         cb = _callables(setup)
         tr = InprocTransport(4)
         server = FLServer(_cfg("afl"), init_params_fn=cb["init_params_fn"],
                           evaluate_fn=cb["evaluate_fn"], transport=tr)
         tree = server.global_params
-        tr.client_channel(0).send(_upload(0, 5, tree))
+        ch = tr.client_channel(0)
+        ch.send(_upload(0, 5, tree))
         server.step(timeout=0.2)
-        tr.client_channel(0).send(_upload(0, 5, tree))   # replayed seq
-        with pytest.raises(RuntimeError, match="FIFO"):
-            server.step(timeout=0.2)
+        assert server.processed == 1
+        first = ch.recv(timeout=1.0)
+        assert first.kind == wire.DOWNLOAD and first.ack_seq == 5
+        ch.send(_upload(0, 5, tree))   # replayed seq
+        server.step(timeout=0.2)
+        assert server.processed == 1          # NOT re-processed
+        assert server.duplicates == 1
+        replay = ch.recv(timeout=1.0)          # cached reply re-sent
+        assert replay.kind == wire.DOWNLOAD and replay.ack_seq == 5
         tr.close()
 
     def test_socket_round_trip_preserves_bits(self):

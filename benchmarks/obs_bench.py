@@ -15,6 +15,13 @@ Two claims, measured:
   with ``CommStats``, and the Chrome ``trace_event`` export must be
   loadable JSON with one event per traced record.
 
+* **The live plane is cheap.**  A serving federation is lapped plain
+  and again with the full ``repro.obs.live`` stack on — background
+  MetricsSampler, HTTP plane, and a concurrent ``/metrics`` +
+  ``/healthz`` scraper — and the slowdown is recorded as the top-level
+  ``live`` dict (<5% is the contract, asserted at ``--full`` where the
+  lap is long enough to resolve a stable percentage).
+
     PYTHONPATH=src python -m benchmarks.obs_bench \
         [--smoke] [--full] [--ns 64,256] [--json BENCH_obs.json]
 
@@ -24,6 +31,7 @@ asserted by tier-1 (tests/test_public_api.py).
 from __future__ import annotations
 
 import argparse
+import dataclasses
 import json
 import os
 import sys
@@ -40,6 +48,114 @@ def _lap(problem, N, rounds, obs, *, engine="batched", seed=0):
     res, _ = _run(problem, "vafl", engine, N, rounds, seed=seed,
                   events_per_eval=N, obs=obs)
     return res, time.perf_counter() - t0
+
+
+def _serve_lap(cfg, pieces, *, live: bool, sample_interval=0.05):
+    """One live-service lap; with ``live`` the full telemetry stack is
+    up — sampler thread, HTTP plane, and a scraper hammering /metrics +
+    /healthz from another thread — so the measured delta is the whole
+    plane, not just the sampler.  Returns (res, seconds, polls)."""
+    import threading
+    import urllib.request
+
+    import repro.serve.run as serve_mod
+    from repro.obs import ObsConfig
+    from repro.obs.live import ObsHttpServer
+
+    run_cfg = dataclasses.replace(
+        cfg, obs=ObsConfig(sample_interval=sample_interval) if live
+        else ObsConfig())
+    server, workers, tr = serve_mod.launch_serving(run_cfg, **pieces)
+    plane = poller = None
+    stop = threading.Event()
+    polls = [0]
+    if live:
+        plane = ObsHttpServer([server]).start()
+
+        def scrape():
+            while not stop.is_set():
+                for path in ("/metrics", "/healthz"):
+                    try:
+                        with urllib.request.urlopen(plane.url + path,
+                                                    timeout=2) as r:
+                            r.read()
+                        polls[0] += 1
+                    except OSError:
+                        pass
+                stop.wait(0.02)
+
+        poller = threading.Thread(target=scrape, daemon=True)
+    try:
+        t0 = time.perf_counter()
+        server.start()
+        for w in workers:
+            w.start()
+        if poller is not None:
+            poller.start()
+        res = server.run()
+        for w in workers:
+            w.stop()
+        for w in workers:
+            w.join(timeout=5.0)
+        server.absorb_client_stats(workers)
+        elapsed = time.perf_counter() - t0
+    finally:
+        stop.set()
+        if poller is not None:
+            poller.join(timeout=5.0)
+        if plane is not None:
+            plane.stop()
+        tr.close()
+    return res, elapsed, polls[0]
+
+
+def live_overhead(*, smoke=False, full=False):
+    """The live-plane overhead lap: plain serve vs serve + sampler +
+    HTTP plane + concurrent scraper, interleaved best-of-3."""
+    from benchmarks.fl_common import BenchScale, build_problem
+    from repro.core import FLRunConfig
+    from repro.core.client import (LocalSpec, make_evaluator,
+                                   make_weighted_classifier_loss)
+
+    clients = 8
+    rounds = 2 if smoke else 8 if full else 4
+    scale = BenchScale(samples_per_client=120 if smoke else 400,
+                       test_samples=200 if smoke else 500)
+    fed_data, (fwd, init, mcfg), (xte, yte) = build_problem(
+        "mlp", scale, clients, True)
+    cfg = FLRunConfig(
+        algorithm="afl", num_clients=clients, rounds=rounds,
+        local=LocalSpec(batch_size=32, local_rounds=1, lr=0.1),
+        target_acc=0.99, events_per_eval=clients, seed=scale.seed)
+    pieces = dict(
+        init_params_fn=lambda k: init(mcfg, k),
+        loss_fn=make_weighted_classifier_loss(fwd, mcfg),
+        fed_data=fed_data,
+        evaluate_fn=make_evaluator(fwd, mcfg, xte, yte,
+                                   batch=min(500, len(yte))))
+    _serve_lap(cfg, pieces, live=False)          # warm the compiles
+    sec_plain = sec_live = float("inf")
+    samples = polls = 0
+    for _ in range(3):
+        _, dt, _ = _serve_lap(cfg, pieces, live=False)
+        sec_plain = min(sec_plain, dt)
+        res, dt, n = _serve_lap(cfg, pieces, live=True)
+        sec_live = min(sec_live, dt)
+        samples = int(res.metrics["gauges"].get("metric_samples", 0))
+        polls = n
+    overhead = 100.0 * (sec_live - sec_plain) / max(sec_plain, 1e-9)
+    row = {"clients": clients, "rounds": rounds,
+           "sec_plain": round(sec_plain, 3),
+           "sec_live": round(sec_live, 3),
+           "live_overhead_pct": round(overhead, 2),
+           "metric_samples": samples, "http_polls": polls}
+    print(f"[live] plain {sec_plain:.2f}s  live {sec_live:.2f}s  "
+          f"overhead {overhead:+.1f}%  samples {samples}  polls {polls}")
+    if full:
+        assert overhead < 5.0, (
+            f"live telemetry overhead {overhead:.1f}% breaches the <5% "
+            "contract")
+    return row
 
 
 def run(Ns=None, *, smoke=False, full=False, out_json=None):
@@ -117,11 +233,14 @@ def run(Ns=None, *, smoke=False, full=False, out_json=None):
                                                "total_wire_mb")},
         })
 
+    live = live_overhead(smoke=smoke, full=full)
+
     if out_json:
         if os.path.dirname(out_json):
             os.makedirs(os.path.dirname(out_json), exist_ok=True)
         with open(out_json, "w") as f:
-            json.dump({"schema": "bench-obs/v1", "rows": rows}, f, indent=2)
+            json.dump({"schema": "bench-obs/v1", "rows": rows,
+                       "live": live}, f, indent=2)
         print(f"[json] {out_json}")
     return rows
 

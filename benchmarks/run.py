@@ -15,6 +15,8 @@ Sections:
              queue depth, commit latency under paper_testbed traffic)
   [resilience] repro.resilience chaos soak + checkpoint-resume (seeded
              fault injection, retry/dedup reconciliation, restore time)
+  [trend]    cross-PR trend: every BENCH_*.json's headline numbers
+             appended to BENCH_trend.json with regression bands
   [kernels]  grad_diff_norm / linear_scan microbenchmarks
   [roofline] three-term roofline per (arch x shape) from dry-run artifacts
   [gated]    cross-pod gated-collective accounting (multi-pod artifacts)
@@ -199,6 +201,19 @@ def main() -> None:
         print("== [gated] cross-pod gated collective ==")
         from benchmarks.gated_collective import run as gc
         gc("artifacts/dryrun")
+        print()
+
+    if "trend" not in skip:
+        print("== [trend] cross-PR benchmark trend (bench-trend/v1) ==")
+        from benchmarks.trend import run as tb
+        # last on purpose: folds every BENCH_*.json the sweep above just
+        # emitted into one BENCH_trend.json lap (schema bench-trend/v1)
+        # with direction-aware regression bands vs the previous lap —
+        # tier-1 asserts the artifact (tests/test_public_api.py); a
+        # --skip'd section simply drops out of the headline
+        tb(out_json=os.path.join(
+            "artifacts" if os.path.isdir("artifacts") else "",
+            "BENCH_trend.json"))
         print()
 
 

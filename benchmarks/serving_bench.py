@@ -30,7 +30,7 @@ sys.path.insert(0, os.path.join(os.path.dirname(__file__), ".."))
 
 
 def _lap(fed, *, algorithm, compressor, rounds, pace, label):
-    from repro.obs import ObsConfig
+    from repro.obs import ObsConfig, snapshot_percentile
     t0 = time.perf_counter()
     res = fed.serve(rounds=rounds, pace=pace, algorithm=algorithm,
                     compressor=compressor, obs=ObsConfig())
@@ -60,8 +60,10 @@ def _lap(fed, *, algorithm, compressor, rounds, pace, label):
         "queue_depth_max": qd.get("max"),
         "queue_depth_mean": (round(qd["mean"], 2)
                              if qd.get("mean") is not None else None),
+        "queue_depth_p95": snapshot_percentile(qd, 95),
         "commit_latency_ms_mean": (round(cl["mean"], 3)
                                    if cl.get("mean") is not None else None),
+        "commit_latency_ms_p95": snapshot_percentile(cl, 95),
         "final_acc": res.records[-1].global_acc if res.records else None,
         "trace_reconciled": reconciled,
     }

@@ -1,0 +1,187 @@
+"""Cross-PR benchmark trend tracking (schema ``bench-trend/v1``).
+
+Every bench section already emits a machine-readable ``BENCH_*.json``;
+this module is the memory between runs: it folds each artifact's
+headline numbers into one lap record, appends the lap to
+``BENCH_trend.json``, and grades the new lap against the previous one
+with direction-aware tolerance bands — loose for wall-clock throughput
+(shared-CPU laps drift), tight for correctness-ish scalars (byte CCR,
+open findings, reconciliation booleans).
+
+A detected regression is *recorded and printed*, never fatal by
+default: the trend file is the evidence trail a reviewer reads, and a
+noisy CI box must not turn timing jitter into a red build.  ``--strict``
+(or ``strict=True``) upgrades regressions to an exit error for local
+perf work.
+
+    PYTHONPATH=src python -m benchmarks.trend \
+        [--json BENCH_trend.json] [--dir artifacts] [--strict]
+
+Wired as the final ``[trend]`` section of ``benchmarks.run`` so every
+sweep — including the tier-1 ``--smoke`` sweep — leaves a trend lap
+behind (tests/test_public_api.py asserts the artifact).
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import sys
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), ".."))
+
+SCHEMA = "bench-trend/v1"
+
+# headline metric -> (direction, relative tolerance, absolute slack).
+# "higher" means bigger is better.  Throughput numbers get the loose
+# 35% band (interleaved best-of-3 on a shared CPU still drifts);
+# correctness scalars get tight bands; count-like metrics get zero
+# relative slack so any real increase flags.
+SPEC = {
+    "engine_batched_events_per_sec": ("higher", 0.35, 0.0),
+    "engine_byte_ccr": ("higher", 0.02, 0.001),
+    "serving_uploads_per_sec": ("higher", 0.35, 0.0),
+    "serving_events_per_sec": ("higher", 0.35, 0.0),
+    "obs_overhead_pct": ("lower", 0.50, 5.0),
+    "obs_live_overhead_pct": ("lower", 0.50, 5.0),
+    "resilience_exactly_once": ("higher", 0.0, 0.0),
+    "resilience_events_per_sec": ("higher", 0.35, 0.0),
+    "analysis_open_findings": ("lower", 0.0, 0.0),
+    "serving_reconciled": ("higher", 0.0, 0.0),
+}
+
+
+def _load(path):
+    try:
+        with open(path) as f:
+            return json.load(f)
+    except (OSError, ValueError):
+        return None
+
+
+def collect(search_dir: str = ".") -> dict:
+    """The headline dict for one lap: every BENCH_*.json the sweep left
+    in ``search_dir``, reduced to the scalars worth tracking across
+    PRs.  Artifacts that are absent (a ``--skip``'d section) are simply
+    not represented — the trend never fails on a partial sweep."""
+    head = {}
+
+    d = _load(os.path.join(search_dir, "BENCH_engine.json"))
+    if d and d.get("rows"):
+        row = max(d["rows"], key=lambda r: r.get("N", 0))
+        if row.get("batched_events_per_sec") is not None:
+            head["engine_batched_events_per_sec"] = \
+                row["batched_events_per_sec"]
+        if row.get("byte_ccr") is not None:
+            head["engine_byte_ccr"] = row["byte_ccr"]
+
+    d = _load(os.path.join(search_dir, "BENCH_serving.json"))
+    if d and d.get("rows"):
+        thr = next((r for r in d["rows"] if r.get("lap") == "throughput"),
+                   d["rows"][0])
+        head["serving_uploads_per_sec"] = thr.get("uploads_per_sec")
+        head["serving_events_per_sec"] = thr.get("events_per_sec")
+        head["serving_reconciled"] = float(bool(d.get("trace_reconciled")))
+
+    d = _load(os.path.join(search_dir, "BENCH_obs.json"))
+    if d and d.get("rows"):
+        head["obs_overhead_pct"] = d["rows"][-1].get("overhead_pct")
+        live = d.get("live") or {}
+        if live.get("live_overhead_pct") is not None:
+            head["obs_live_overhead_pct"] = live["live_overhead_pct"]
+
+    d = _load(os.path.join(search_dir, "BENCH_resilience.json"))
+    if d and d.get("rows"):
+        head["resilience_exactly_once"] = float(
+            bool(d.get("multiset_matches_fault_free")))
+        free = next((r for r in d["rows"] if r.get("lap") == "fault-free"),
+                    None)
+        if free and free.get("events_per_sec") is not None:
+            head["resilience_events_per_sec"] = free["events_per_sec"]
+
+    d = _load(os.path.join(search_dir, "BENCH_analysis.json"))
+    if d and "summary" in d:
+        head["analysis_open_findings"] = d["summary"].get("open", 0)
+
+    return {k: v for k, v in head.items() if v is not None}
+
+
+def grade(prev: dict, cur: dict) -> list:
+    """Direction-aware regression check of ``cur`` against ``prev``;
+    returns one record per metric that moved outside its band."""
+    regressions = []
+    for name, (direction, rel, slack) in SPEC.items():
+        if name not in prev or name not in cur:
+            continue
+        p, c = float(prev[name]), float(cur[name])
+        if direction == "higher":
+            floor = p * (1.0 - rel) - slack
+            bad = c < floor
+        else:
+            ceil = p * (1.0 + rel) + slack
+            bad = c > ceil
+        if bad:
+            regressions.append({"metric": name, "prev": p, "cur": c,
+                                "direction": direction})
+    return regressions
+
+
+def append_lap(trend_path: str, headline: dict) -> dict:
+    """Append one lap to the trend file (created on first use) and
+    grade it against the previous lap; returns the lap record."""
+    doc = _load(trend_path)
+    if not doc or doc.get("schema") != SCHEMA:
+        doc = {"schema": SCHEMA, "laps": []}
+    prev = doc["laps"][-1]["headline"] if doc["laps"] else {}
+    lap = {"lap": len(doc["laps"]) + 1, "headline": headline,
+           "regressions": grade(prev, headline)}
+    doc["laps"].append(lap)
+    if os.path.dirname(trend_path):
+        os.makedirs(os.path.dirname(trend_path), exist_ok=True)
+    with open(trend_path, "w") as f:
+        json.dump(doc, f, indent=2)
+    return lap
+
+
+def run(*, out_json="BENCH_trend.json", search_dir=None, strict=False):
+    """Collect + append + report one trend lap."""
+    if search_dir is None:
+        search_dir = os.path.dirname(out_json) or "."
+    headline = collect(search_dir)
+    if not headline:
+        print(f"[trend] no BENCH_*.json artifacts in {search_dir!r}; "
+              "nothing to record")
+        return None
+    lap = append_lap(out_json, headline)
+    for k in sorted(headline):
+        print(f"  {k:<34s} {headline[k]}")
+    if lap["regressions"]:
+        for r in lap["regressions"]:
+            arrow = "fell" if r["direction"] == "higher" else "rose"
+            print(f"  REGRESSION {r['metric']}: {arrow} "
+                  f"{r['prev']} -> {r['cur']}")
+        if strict:
+            raise SystemExit(
+                f"[trend] {len(lap['regressions'])} regression(s) vs the "
+                f"previous lap in {out_json}")
+    else:
+        print(f"  lap {lap['lap']}: no regressions vs previous lap")
+    print(f"[json] {out_json}")
+    return lap
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--json", default="BENCH_trend.json")
+    ap.add_argument("--dir", default=None,
+                    help="directory holding the BENCH_*.json artifacts "
+                         "(default: the --json file's directory)")
+    ap.add_argument("--strict", action="store_true",
+                    help="exit non-zero on any regression")
+    args = ap.parse_args()
+    run(out_json=args.json, search_dir=args.dir, strict=args.strict)
+
+
+if __name__ == "__main__":
+    main()

@@ -23,6 +23,7 @@ _BUILTIN_MODULES = (
     "repro.analysis.rules.architecture",
     "repro.analysis.rules.serving",
     "repro.analysis.rules.resilience",
+    "repro.analysis.rules.obs",
 )
 _builtins_loaded = False
 

@@ -84,8 +84,10 @@ class WallClockInCore(Rule):
     scope = ("repro/core/", "repro/obs/")
     # the serve loop is sanctioned: its host clock IS the data (arrival
     # stamps, commit latency, stall deadlines — docs/SERVING.md); the
-    # serve-blocking-in-hotloop rule polices its loops instead
-    exempt = ("repro/serve/",)
+    # serve-blocking-in-hotloop rule polices its loops instead.  The
+    # live telemetry plane (repro.obs.live) is host-facing the same way:
+    # sample timestamps and probe staleness are real host time.
+    exempt = ("repro/serve/", "repro/obs/live/")
     example = "t0 = time.time()   # inside a runtime"
 
     _CLOCKS = {"time.time", "time.perf_counter", "time.monotonic",

@@ -1,0 +1,104 @@
+"""Observability rules: the metric namespace stays bounded.
+
+The live plane (repro.obs.live) exports every registry metric to
+Prometheus on each scrape.  A metric name interpolated from an
+unbounded identifier — ``f"uploads_{client}"``, ``"lat_%d" % i`` —
+creates one time series PER CLIENT/EVENT, which bloats every snapshot,
+checkpoint and exposition for the run's whole life (registry entries
+are never dropped).  Per-client data has a first-class home: the
+``/clients`` scoreboard.  Bounded interpolations (a failure *kind*, a
+probe *status* — fixed small sets) are the sanctioned pattern and stay
+clean.
+"""
+from __future__ import annotations
+
+import ast
+from typing import Iterator, Set
+
+from repro.analysis.finding import Finding
+from repro.analysis.registry import _register_builtin
+from repro.analysis.rules.base import Rule
+from repro.analysis.source import ParsedModule
+
+# registry get-or-create methods whose first argument IS the metric name
+_METRIC_METHODS = {"counter", "gauge", "hist"}
+
+# identifier names that smell like unbounded ids: per-client, per-event,
+# per-worker, per-sequence — anything that grows with the run, not with
+# the code.  (Bounded interpolations use names like kind/status/name.)
+_UNBOUNDED_IDS: Set[str] = {
+    "client", "cid", "client_id", "i", "j", "idx", "index", "seq",
+    "tenant", "tenant_id", "rank", "worker", "worker_id", "step",
+    "round", "round_", "event", "event_id", "pid", "uid", "msg",
+}
+
+
+def _terminal(node: ast.AST) -> str:
+    """The rightmost identifier of a Name/Attribute chain
+    (``msg.client`` -> "client")."""
+    if isinstance(node, ast.Name):
+        return node.id
+    if isinstance(node, ast.Attribute):
+        return node.attr
+    return ""
+
+
+def _unbounded_in(expr: ast.AST) -> str:
+    """An unbounded-looking identifier referenced anywhere inside
+    ``expr``, or ""."""
+    for node in ast.walk(expr):
+        t = _terminal(node)
+        if t in _UNBOUNDED_IDS:
+            return t
+    return ""
+
+
+@_register_builtin
+class MetricCardinality(Rule):
+    name = "metric-cardinality"
+    description = ("metric name interpolated from an unbounded id "
+                   "(client/seq/tenant/...) — one Prometheus series per "
+                   "entity; per-client data belongs in the /clients "
+                   "scoreboard, not the metric namespace")
+    example = 'm.counter(f"uploads_{client}").inc()'
+
+    def check(self, mod: ParsedModule) -> Iterator[Finding]:
+        for node in mod.walk():
+            if not (isinstance(node, ast.Call)
+                    and isinstance(node.func, ast.Attribute)
+                    and node.func.attr in _METRIC_METHODS
+                    and node.args):
+                continue
+            culprit = self._dynamic_name(node.args[0])
+            if culprit:
+                yield self.finding(
+                    mod, node,
+                    f"metric name built from unbounded id {culprit!r} — "
+                    f"every distinct value becomes its own registry "
+                    f"entry and Prometheus series for the run's whole "
+                    f"life; put per-entity data on the /clients "
+                    f"scoreboard (docs/OBSERVABILITY.md) and keep "
+                    f"interpolations to fixed sets (kind, status)")
+
+    @staticmethod
+    def _dynamic_name(arg: ast.AST) -> str:
+        """An unbounded id interpolated into the name argument via
+        f-string, ``str.format``, ``%`` or ``+`` concatenation."""
+        if isinstance(arg, ast.JoinedStr):
+            for part in arg.values:
+                if isinstance(part, ast.FormattedValue):
+                    hit = _unbounded_in(part.value)
+                    if hit:
+                        return hit
+        elif (isinstance(arg, ast.Call)
+              and isinstance(arg.func, ast.Attribute)
+              and arg.func.attr == "format"):
+            for a in list(arg.args) + [kw.value for kw in arg.keywords]:
+                hit = _unbounded_in(a)
+                if hit:
+                    return hit
+        elif isinstance(arg, ast.BinOp) and isinstance(arg.op, ast.Mod):
+            return _unbounded_in(arg.right)
+        elif isinstance(arg, ast.BinOp) and isinstance(arg.op, ast.Add):
+            return (_unbounded_in(arg.left) or _unbounded_in(arg.right))
+        return ""

@@ -173,7 +173,7 @@ class Federation:
               driver: str = "thread", pace=None, speed=None,
               retry=None, exchange_timeout: Optional[float] = None,
               liveness_timeout: Optional[float] = None,
-              verbose: bool = False, **overrides):
+              live=None, verbose: bool = False, **overrides):
         """Run the federation as a live service (``repro.serve``,
         docs/SERVING.md): real client workers push uploads through a
         transport into a server hot loop driving the same algorithm
@@ -182,7 +182,9 @@ class Federation:
         ``buffer_size=1``); ``transport`` is a registry name ("inproc",
         "socket", "chaos") or a ready ``Transport``.  ``retry`` /
         ``exchange_timeout`` / ``liveness_timeout`` are the resilience
-        knobs (docs/RESILIENCE.md), forwarded to ``serve_run``."""
+        knobs (docs/RESILIENCE.md), forwarded to ``serve_run``;
+        ``live`` turns on the HTTP telemetry plane (/metrics, /healthz,
+        /clients, /trace — docs/OBSERVABILITY.md) for the run."""
         if "num_clients" in overrides:
             raise ValueError("num_clients is fixed by the federation's "
                              "data; it cannot be overridden per run")
@@ -198,4 +200,5 @@ class Federation:
                          transport=transport, driver=driver, pace=pace,
                          speed=speed, retry=retry,
                          exchange_timeout=exchange_timeout,
-                         liveness_timeout=liveness_timeout, verbose=verbose)
+                         liveness_timeout=liveness_timeout, live=live,
+                         verbose=verbose)

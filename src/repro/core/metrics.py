@@ -164,6 +164,11 @@ class RunResult:
         scenario_bench, async_engine_bench, obs_bench) instead of
         hand-rolling its own result dict."""
         c = self.comm
+        # scalar percentiles from the pow2 histograms (repro.obs) where
+        # a BENCH writer wants one number, not a bucket dict; None when
+        # the run had obs off or never touched the histogram
+        from repro.obs.metrics import snapshot_percentile
+        hists = (self.metrics or {}).get("histograms", {})
         return {
             "algorithm": self.algorithm,
             "target_acc": self.target_acc,
@@ -184,5 +189,11 @@ class RunResult:
                           else round(self.idle_fraction, 4)),
             "failed_rounds": (None if self.client_failed_rounds is None
                               else int(sum(self.client_failed_rounds))),
+            "staleness_p95": snapshot_percentile(
+                hists.get("staleness"), 95),
+            "queue_depth_p95": snapshot_percentile(
+                hists.get("queue_depth"), 95),
+            "commit_latency_ms_p95": snapshot_percentile(
+                hists.get("commit_latency_ms"), 95),
             "trace_path": self.trace_path,
         }

@@ -324,6 +324,7 @@ def _run_event_batched(run_cfg, policy, aggregator, init_params_fn, loss_fn,
                          if total_events else (np.empty(0), np.empty(0, int)))
     if obs is not None:                # opt-in device profiler (hot loop)
         obs.profile_start()
+        obs.sampler_start()            # opt-in live metric sampler
     while len(idx_np):
         t_now = float(times[-1])
         w = len(idx_np)
@@ -600,6 +601,7 @@ def _run_event_batched(run_cfg, policy, aggregator, init_params_fn, loss_fn,
 
     if obs is not None:
         obs.profile_stop()
+        obs.sampler_stop()
     if buffer:  # partial buffer at run end — flush so no update is lost
         flush(float(sched.now))
 

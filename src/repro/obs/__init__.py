@@ -22,11 +22,12 @@ hook site a dead branch — zero overhead, bit-exact either way.
 from repro.obs.compile_tracking import compile_count, compile_secs, install
 from repro.obs.config import ObsConfig, resolve_obs
 from repro.obs.exporters import read_jsonl
-from repro.obs.metrics import MetricsRegistry
+from repro.obs.metrics import MetricsRegistry, snapshot_percentile
 from repro.obs.observer import Observer
 from repro.obs.tracer import Tracer
 
 __all__ = [
     "ObsConfig", "Observer", "Tracer", "MetricsRegistry", "resolve_obs",
-    "compile_count", "compile_secs", "install", "read_jsonl",
+    "snapshot_percentile", "compile_count", "compile_secs", "install",
+    "read_jsonl",
 ]

@@ -37,6 +37,12 @@ class ObsConfig:
     # jax.profiler.start_trace(jax_profile) / stop_trace — a TensorBoard-
     # loadable device profile of the window pipeline
     jax_profile: Optional[str] = None
+    # opt-in live telemetry (repro.obs.live): seconds between background
+    # MetricsSampler snapshots of the registry (None = no sampler thread,
+    # the default — a run without it is byte-for-byte the pre-live path)
+    sample_interval: Optional[float] = None
+    # ring-buffer capacity of the sampler's time series (oldest dropped)
+    sample_capacity: int = 512
     # free-form tags merged into the trace header / summary
     metadata: dict = field(default_factory=dict)
 

@@ -60,6 +60,54 @@ class Histogram:
     def mean(self):
         return self.total / self.count if self.count else 0.0
 
+    def percentile(self, q):
+        """The q-th percentile (q in [0, 100]) estimated from the pow2
+        buckets: find the bucket holding the target rank, then
+        interpolate linearly inside its value range, clamped to the
+        observed [min, max].  Exact at the extremes (p0 = min,
+        p100 = max); elsewhere within one bucket's width — the right
+        resolution for threshold probes and summary scalars.  None when
+        nothing was observed."""
+        return _bucket_percentile(self.count, self.min, self.max,
+                                  self.buckets, q)
+
+
+def _bucket_percentile(count, lo_obs, hi_obs, buckets, q):
+    if not count:
+        return None
+    q = min(100.0, max(0.0, float(q)))
+    if q <= 0.0:
+        return float(lo_obs)
+    if q >= 100.0:
+        return float(hi_obs)
+    rank = q / 100.0 * count
+    seen = 0
+    for k in sorted(buckets):
+        n = buckets[k]
+        if seen + n >= rank:
+            # bucket k spans (2^(k-1), 2^k]; k=0 holds everything <= 1
+            lo = float(lo_obs) if k == 0 else float(2 ** (k - 1))
+            hi = 1.0 if k == 0 else float(2 ** k)
+            lo = max(lo, float(lo_obs))
+            hi = min(hi, float(hi_obs))
+            if hi <= lo:
+                return lo
+            frac = (rank - seen) / n
+            return lo + frac * (hi - lo)
+        seen += n
+    return float(hi_obs)
+
+
+def snapshot_percentile(hist_snap, q):
+    """``Histogram.percentile`` over a ``snapshot()`` histogram dict
+    ({count, sum, min, max, buckets}) — the form BENCH writers and the
+    live exposition hold after a run sealed.  None for None/empty."""
+    if not hist_snap or not hist_snap.get("count"):
+        return None
+    return _bucket_percentile(
+        hist_snap["count"], hist_snap["min"], hist_snap["max"],
+        {int(k): v for k, v in hist_snap["buckets"].items()}, q)
+
 
 class MetricsRegistry:
     """Name -> metric, get-or-create.  A name is one kind only — asking

@@ -56,6 +56,10 @@ class Observer:
         # per committed update (both host-side, single clock domain)
         self._m_queue_depth = m.hist("queue_depth")
         self._m_commit_latency = m.hist("commit_latency_ms")
+        # live telemetry (repro.obs.live, docs/OBSERVABILITY.md): the
+        # background MetricsSampler, created on sampler_start when
+        # cfg.sample_interval is set
+        self.sampler = None
 
     # ------------------------------------------------------ time access ---
 
@@ -200,6 +204,36 @@ class Observer:
         """Corrupt frames discarded by the wire-format checks."""
         self.metrics.counter("wire_errors").inc(n)
 
+    def fault(self, kind, n=1):
+        """Chaos-injected faults drained from the transport's ground
+        truth (``ChaosTransport.poll_fault_stats``), promoted to
+        first-class metrics so the soak's injection schedule is visible
+        live.  ``kind`` is one of the transport's fixed fate codes —
+        a bounded set, so the interpolated name stays low-cardinality."""
+        self.metrics.counter("chaos_faults").inc(n)
+        self.metrics.counter(f"chaos_faults_{kind}").inc(n)
+
+    def retry(self, n=1):
+        """Client-side exchange retries absorbed after the fleet joined
+        (``FLServer.absorb_client_stats``) — the at-least-once half of
+        the exactly-once reconciliation."""
+        self.metrics.counter("client_retries").inc(n)
+
+    def alert(self, probe, status, *, value=None, detail=None):
+        """A health-probe transition (repro.obs.live.probes): the probe
+        crossed into ``status`` ("warn"/"crit", or back to "ok").
+        Status names are a fixed three-element set — bounded metric
+        cardinality by construction."""
+        self.metrics.counter("alerts").inc()
+        self.metrics.counter(f"alerts_{status}").inc()
+        if self.tracer:
+            tags = {"probe": probe, "status": status}
+            if value is not None:
+                tags["value"] = value
+            if detail:
+                tags["detail"] = detail
+            self.tracer.event("alert", None, None, **tags)
+
     def checkpoint(self, step, host_start, *, restored=False):
         """One run-state checkpoint written (or, ``restored``, loaded)."""
         self.metrics.counter("resumes" if restored
@@ -242,12 +276,32 @@ class Observer:
         finally:
             self.profile_stop()
 
+    def sampler_start(self):
+        """Start the opt-in background MetricsSampler
+        (``cfg.sample_interval`` = seconds between registry snapshots;
+        None — the default — is a no-op).  The engines bracket their
+        hot loops with start/stop exactly like the device profiler, so
+        live runs stream and default runs pay one ``if``."""
+        if self.cfg.sample_interval and self.sampler is None:
+            from repro.obs.live import MetricsSampler
+            self.sampler = MetricsSampler(
+                self.metrics, interval=self.cfg.sample_interval,
+                capacity=self.cfg.sample_capacity)
+            self.sampler.start()
+
+    def sampler_stop(self):
+        if self.sampler is not None:
+            self.sampler.stop()
+
     # ------------------------------------------------------- finish ---
 
     def finish(self, result=None):
         """Seal the run: fill the compile gauge, export configured trace
         files, attach ``metrics``/``trace_path`` to the ``RunResult``,
         and print the summary if asked.  Returns the metrics snapshot."""
+        self.sampler_stop()
+        if self.sampler is not None:
+            self.metrics.gauge("metric_samples").set(len(self.sampler))
         self.metrics.gauge("jit_compiles").set(
             compile_tracking.compile_count() - self._compiles0)
         if self.tracer is not None:

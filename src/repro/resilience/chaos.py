@@ -95,6 +95,7 @@ class ChaosTransport(Transport):
             k: 0 for k in (DROP, CORRUPT, RESET, BLACKOUT, DUPLICATE,
                            REORDER, DELAY, "bcast_drop", "sent",
                            "delivered")}
+        self._fault_drained: Dict[str, int] = {}   # poll_fault_stats marks
 
     # ------------------------------------------------------ fault paths ---
 
@@ -233,6 +234,24 @@ class ChaosTransport(Transport):
         with self._lock:
             n, self._wire_errors = self._wire_errors, 0
         return n
+
+    def poll_fault_stats(self) -> Dict[str, int]:
+        """Injected-fault counts since the last poll — {fate: delta}
+        for the fault fates only (drop/corrupt/reset/blackout/duplicate/
+        reorder/delay/bcast_drop; sent/delivered stay internal).  The
+        server drains this into first-class obs metrics
+        (``Observer.fault``), so ``MetricsRegistry`` cross-checks
+        against ``self.stats`` — the ground truth — at run end."""
+        out = {}
+        with self._lock:
+            for k, v in self.stats.items():
+                if k in ("sent", "delivered"):
+                    continue
+                delta = v - self._fault_drained.get(k, 0)
+                if delta:
+                    out[k] = delta
+                    self._fault_drained[k] = v
+        return out
 
     def close(self) -> None:
         self._inner.close()

@@ -21,7 +21,7 @@ from repro.serve.messages import (MAGIC, MAX_FRAME_BYTES, WIRE_SCHEMA,
                                   BroadcastMsg, UploadMsg, WireError,
                                   msg_from_wire, msg_to_wire)
 from repro.serve.multitenant import MultiTenantServer
-from repro.serve.run import launch_serving, serve_run
+from repro.serve.run import launch_serving, resolve_live, serve_run
 from repro.serve.server import FLServer
 from repro.serve.transport import (ClientChannel, InprocTransport,
                                    Transport, available_transports,
@@ -34,5 +34,5 @@ __all__ = [
     "get_transport", "register_transport", "available_transports",
     "FLServer", "ClientCompute", "ThreadClientWorker",
     "ProcessClientWorker", "SequentialDriver", "ScenarioPacer",
-    "MultiTenantServer", "serve_run", "launch_serving",
+    "MultiTenantServer", "serve_run", "launch_serving", "resolve_live",
 ]

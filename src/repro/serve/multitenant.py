@@ -26,16 +26,24 @@ _IDLE_SLEEP = 0.002
 class MultiTenantServer:
     """Round-robin executor over independent :class:`FLServer`\\ s."""
 
-    def __init__(self, servers: Sequence):
+    def __init__(self, servers: Sequence, *, live=None):
         if not servers:
             raise ValueError("MultiTenantServer needs at least one server")
         self.servers = list(servers)
         self._stopping = False
+        # the live telemetry plane (repro.obs.live): ONE HTTP endpoint
+        # over every tenant, each labelled tenant="<server.name>" in the
+        # /metrics exposition; built on start(), stopped after run()
+        self._live_req = live
+        self.live = None
 
     def stop(self) -> None:
         self._stopping = True
 
     def start(self) -> None:
+        if self._live_req and self.live is None:
+            from repro.serve.run import resolve_live
+            self.live = resolve_live(self._live_req, self.servers)
         for s in self.servers:
             s.start()
 
@@ -43,14 +51,17 @@ class MultiTenantServer:
         """Interleave every tenant's windows until all federations hit
         their event totals (or the whole fleet stalls); returns each
         tenant's finalized ``RunResult`` in construction order."""
+        for s in self.servers:     # opt-in live metric samplers
+            if s.obs is not None:
+                s.obs.sampler_start()
         last_msg = time.monotonic()
         while not self._stopping:
-            live = [s for s in self.servers
-                    if s.processed < s.total_events]
-            if not live:
+            active = [s for s in self.servers
+                      if s.processed < s.total_events]
+            if not active:
                 break
             drained = 0
-            for s in live:
+            for s in active:
                 drained += s.step(timeout=0)
             if drained:
                 last_msg = time.monotonic()
@@ -58,4 +69,9 @@ class MultiTenantServer:
                 if time.monotonic() - last_msg > stall_timeout:
                     break
                 time.sleep(_IDLE_SLEEP)
-        return [s.finalize() for s in self.servers]
+        try:
+            return [s.finalize() for s in self.servers]
+        finally:
+            if self.live is not None:
+                self.live.stop()
+                self.live = None

@@ -32,6 +32,32 @@ from repro.serve.transport import Transport, get_transport
 DRIVERS = ("thread", "sequential")
 
 
+def resolve_live(live, servers):
+    """Normalise a user-facing ``live=`` value into a STARTED
+    ``ObsHttpServer`` over ``servers`` (or None): True — defaults
+    (127.0.0.1, ephemeral port), an int — that port, a dict —
+    ``ObsHttpServer`` kwargs (host/port/probes).  The plane is attached
+    to each server as ``.live`` so callers holding only the server (or
+    the RunResult path) can find the bound port."""
+    if live is None or live is False:
+        return None
+    if live is True:
+        kw = {}
+    elif isinstance(live, int):
+        kw = {"port": live}
+    elif isinstance(live, dict):
+        kw = dict(live)
+    else:
+        raise ValueError(
+            "live must be None/False (off), True (ephemeral port), an "
+            f"int port, or a dict of ObsHttpServer kwargs; got {live!r}")
+    from repro.obs.live import ObsHttpServer
+    plane = ObsHttpServer(servers, **kw).start()
+    for s in servers:
+        s.live = plane
+    return plane
+
+
 def _resolve_transport(transport, num_clients: int, capacity: int):
     if isinstance(transport, Transport):
         return transport, False
@@ -60,7 +86,7 @@ def launch_serving(run_cfg, *, init_params_fn, loss_fn, fed_data,
                    recv_timeout: float = 30.0, retry=None,
                    exchange_timeout: Optional[float] = None,
                    liveness_timeout: Optional[float] = None,
-                   verbose: bool = False):
+                   verbose: bool = False, name: str = "default"):
     """Build (but do not start) one federation's serving pieces:
     ``(server, workers, transport)``.  The caller owns the lifecycle:
     ``server.start()``, start the workers, then ``server.run()`` or
@@ -69,14 +95,16 @@ def launch_serving(run_cfg, *, init_params_fn, loss_fn, fed_data,
     Resilience knobs (docs/RESILIENCE.md): ``retry`` — a
     ``repro.resilience.RetryPolicy`` for every client's exchanges;
     ``exchange_timeout`` / ``liveness_timeout`` — the server's
-    per-exchange and dead-client deadlines (seconds; None = off)."""
+    per-exchange and dead-client deadlines (seconds; None = off).
+    ``name`` is the tenant label the live telemetry plane
+    (docs/OBSERVABILITY.md) tags this federation with."""
     tr, _owned = _resolve_transport(transport, run_cfg.num_clients,
                                     capacity)
     server = FLServer(run_cfg, init_params_fn=init_params_fn,
                       evaluate_fn=evaluate_fn, transport=tr, speed=speed,
                       exchange_timeout=exchange_timeout,
                       liveness_timeout=liveness_timeout,
-                      verbose=verbose)
+                      verbose=verbose, name=name)
     compute = ClientCompute.for_run(
         run_cfg, loss_fn=loss_fn, fed_data=fed_data,
         client_eval_fn=client_eval_fn or evaluate_fn)
@@ -95,11 +123,20 @@ def serve_run(run_cfg, *, init_params_fn, loss_fn, fed_data, evaluate_fn,
               recv_timeout: float = 30.0, retry=None,
               exchange_timeout: Optional[float] = None,
               liveness_timeout: Optional[float] = None,
-              verbose: bool = False) -> RunResult:
-    """Run one federation as a live service and return its RunResult."""
+              verbose: bool = False, live=None) -> RunResult:
+    """Run one federation as a live service and return its RunResult.
+
+    ``live`` turns on the HTTP telemetry plane for the run's duration
+    (True / port / dict — see ``resolve_live``); the bound plane is
+    reachable as ``server.live`` while the run is up."""
     if driver not in DRIVERS:
         raise ValueError(f"unknown driver {driver!r}; known: {DRIVERS}")
     if driver == "sequential":
+        if live:
+            raise ValueError(
+                "live telemetry needs the thread driver — the "
+                "sequential bridge runs in one thread with nothing to "
+                "watch concurrently")
         tr, owned = _resolve_transport(transport, run_cfg.num_clients,
                                        capacity)
         # resume_fresh_clients=False: the bridge driver reconstructs each
@@ -126,7 +163,9 @@ def serve_run(run_cfg, *, init_params_fn, loss_fn, fed_data, evaluate_fn,
         recv_timeout=recv_timeout, retry=retry,
         exchange_timeout=exchange_timeout,
         liveness_timeout=liveness_timeout, verbose=verbose)
+    plane = None
     try:
+        plane = resolve_live(live, [server])
         server.start()
         for w in workers:
             w.start()
@@ -135,6 +174,11 @@ def serve_run(run_cfg, *, init_params_fn, loss_fn, fed_data, evaluate_fn,
             w.stop()
         for w in workers:
             w.join(timeout=5.0)
+        # fold client-side stats (retry counts) into the sealed metrics
+        # — the counters the chaos soak reconciles live on the result
+        server.absorb_client_stats(workers)
         return res
     finally:
+        if plane is not None:
+            plane.stop()
         tr.close()

@@ -85,7 +85,8 @@ class FLServer:
                  account_bytes: bool = True, verbose: bool = False,
                  exchange_timeout: Optional[float] = None,
                  liveness_timeout: Optional[float] = None,
-                 resume_fresh_clients: bool = True):
+                 resume_fresh_clients: bool = True,
+                 name: str = "default"):
         alg, policy, aggregator = run_cfg.make_algorithm()
         if alg.event_mode != "async":
             raise ValueError(
@@ -93,6 +94,9 @@ class FLServer:
                 "(event_mode='sync-barrier') — the live serve loop has no "
                 "barrier; use an async algorithm (afl/vafl/eaflm/fedasync)")
         self.cfg = run_cfg
+        # the tenant label the live telemetry plane (repro.obs.live)
+        # tags this federation's metrics/scoreboard with
+        self.name = name
         self.policy, self.aggregator = policy, aggregator
         N = run_cfg.num_clients
         policy.begin_run(N)
@@ -159,6 +163,7 @@ class FLServer:
         self.liveness_timeout = liveness_timeout
         self._last_reply: dict = {}       # client -> last reply sent
         self._evicted: set = set()
+        self.dead_reason: dict = {}       # client -> why it was evicted
         self._last_heard = np.full(N, time.monotonic())
         self.accepted_by_client = np.zeros(N, np.int64)  # committed updates
         self.duplicates = 0
@@ -214,6 +219,8 @@ class FLServer:
         events completed, ``stop()`` was called, or no message arrived
         for ``stall_timeout`` seconds (dead fleet — drain and return
         rather than wedge)."""
+        if self.obs is not None:       # opt-in live metric sampler
+            self.obs.sampler_start()
         last_msg = time.monotonic()
         while self.processed < self.total_events and not self._stopping:
             if self.step(timeout=_POLL):
@@ -258,6 +265,11 @@ class FLServer:
                 if self.obs is not None:
                     self.obs.failure(i, t, kind="exchange-timeout")
         tr = self.transport
+        if hasattr(tr, "poll_fault_stats") and self.obs is not None:
+            # chaos ground truth -> first-class metrics (repro.obs.live):
+            # the soak reconciles these counters against transport.stats
+            for kind, n in tr.poll_fault_stats().items():
+                self.obs.fault(kind, n)
         if hasattr(tr, "poll_wire_errors"):
             n = tr.poll_wire_errors()
             if n:
@@ -289,6 +301,7 @@ class FLServer:
         """Mark a client dead: discard its wedged exchange (the failure
         path) and stop expecting traffic until it re-admits."""
         self._evicted.add(i)
+        self.dead_reason[i] = reason
         self.evictions += 1
         pend = self._pending.pop(i, None)
         if self.obs is not None:
@@ -303,6 +316,7 @@ class FLServer:
         cache dropped, and a new init broadcast so the fresh process
         can bootstrap."""
         self._evicted.discard(i)
+        self.dead_reason.pop(i, None)
         self.readmissions += 1
         self._last_heard[i] = time.monotonic()
         if fresh:
@@ -484,6 +498,33 @@ class FLServer:
     def _server_delta(self):
         return _tree_delta(self.prev_global, self.prev_prev_global)
 
+    # ------------------------------------------------------ live plane ---
+
+    def scoreboard(self) -> dict:
+        """The per-client health scoreboard (repro.obs.live): byte
+        ledgers, staleness, liveness — the /clients payload."""
+        from repro.obs.live import client_scoreboard
+        return client_scoreboard(self)
+
+    def absorb_client_stats(self, workers) -> None:
+        """Fold the fleet's client-side stats (retry counts) into the
+        obs metrics after the workers joined.  Idempotent — the counter
+        is SET to the fleet total, not incremented — and it refreshes an
+        already-sealed result's snapshot, because client threads only
+        stop after ``finalize()`` returned."""
+        if self.obs is None:
+            return
+        total = sum(getattr(w, "stats", {}).get("retries", 0)
+                    for w in workers)
+        self.obs.metrics.counter("client_retries").value = int(total)
+        tr = self.transport    # faults injected between finalize and the
+        if hasattr(tr, "poll_fault_stats"):     # last join land here too
+            for kind, n in tr.poll_fault_stats().items():
+                self.obs.fault(kind, n)
+        if (self._finalized is not None
+                and self._finalized.metrics is not None):
+            self._finalized.metrics = self.obs.metrics.snapshot()
+
     # ---------------------------------------------------- checkpointing ---
 
     def save_checkpoint(self, path: Optional[str] = None) -> str:
@@ -579,6 +620,7 @@ class FLServer:
             self._last_reply = {}
             self._pending = {}
         self._evicted = set()
+        self.dead_reason = {}
         self._last_heard = np.full(N, time.monotonic())
         if self.obs is not None:
             self.obs.checkpoint(self.processed, h0, restored=True)
@@ -593,6 +635,8 @@ class FLServer:
         Idempotent — the first call's result is returned thereafter."""
         if self._finalized is not None:
             return self._finalized
+        if self.obs is not None:
+            self.obs.sampler_stop()
         deadline = time.monotonic() + drain_timeout
         while self.processed < self.total_events:
             n = self.step(timeout=0.01)
@@ -610,6 +654,10 @@ class FLServer:
             self.transport.send_broadcast(
                 i, BroadcastMsg(kind=wire.FINAL,
                                 version=self.server_version))
+        tr = self.transport    # last fault-stat drain before obs seals
+        if hasattr(tr, "poll_fault_stats") and self.obs is not None:
+            for kind, n in tr.poll_fault_stats().items():
+                self.obs.fault(kind, n)
         res = RunResult(self.cfg.algorithm, self.records, self.comm,
                         self.cfg.target_acc).finalize_target()
         res = _finish_obs(_attach_sim_result(res, self.sched), self.obs)

@@ -1,0 +1,17 @@
+"""Clean fixture: literal names and bounded interpolations (a failure
+*kind*, a probe *status*, a span *name* — fixed small sets) are the
+sanctioned metric-naming patterns; per-entity data goes to the
+/clients scoreboard instead."""
+
+
+def bounded_names(m, kind, status, name):
+    m.counter("uploads").inc()
+    m.counter(f"failures_{kind}").inc()             # bounded: fate codes
+    m.counter(f"alerts_{status}").inc()             # bounded: ok/warn/crit
+    m.counter(f"{name}_calls").inc()                # bounded: span names
+    m.hist("staleness").observe(1.0)
+    m.gauge("jit_compiles").set(2)
+
+
+def scoreboard_is_the_home(rows, client, nbytes):
+    rows.append({"client": client, "up_bytes": nbytes})

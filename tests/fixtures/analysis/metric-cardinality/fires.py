@@ -1,0 +1,10 @@
+"""Positive fixture: metric names interpolated from unbounded ids —
+one registry entry / Prometheus series per client or event."""
+
+
+def per_client_series(m, client, i, msg):
+    m.counter(f"uploads_{client}").inc()            # f-string
+    m.gauge("staleness_{}".format(i)).set(3)        # str.format
+    m.hist("lat_%d" % client).observe(2.0)          # percent format
+    m.counter("bytes_" + str(client)).inc(10)       # concatenation
+    m.counter(f"seen_{msg.client}").inc()           # attribute terminal

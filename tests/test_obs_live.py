@@ -1,0 +1,618 @@
+"""repro.obs.live — the live telemetry plane (docs/OBSERVABILITY.md).
+
+Unit floors first: pow2-bucket percentiles (exact at the extremes),
+the background MetricsSampler's ring/delta/rate arithmetic under an
+injectable clock, the Prometheus text exposition golden format
+(HELP/TYPE once per family, label escaping, the _bucket/_sum/_count
+histogram suffixes), and the probe registry contract (lazy builtins,
+loud unknown names, transition-based alerting).
+
+Then the acceptance runs: a live threaded federation (N >= 16)
+answering ``/metrics`` + ``/healthz`` + ``/clients`` + ``/trace`` over
+real HTTP *mid-run*, with the client scoreboard's byte totals
+reconciling EXACTLY against the final ``CommStats``; a two-tenant
+plane with per-tenant label isolation; and a chaos run whose
+dead-client probe flips to WARN with the structured alert landing in
+the exported trace.  The retry/fault ledger reconciliation (obs
+counters == ``ChaosTransport.stats`` ground truth, ``client_retries``
+== the fleet's retry sum) closes the loop with repro.resilience.
+"""
+import json
+import threading
+import time
+import types
+import urllib.error
+import urllib.request
+
+import pytest
+
+from repro.core import FLRunConfig
+from repro.core.client import (LocalSpec, make_evaluator,
+                               make_weighted_classifier_loss)
+from repro.core.metrics import CommStats, RunResult
+from repro.data.partition import iid_partition
+from repro.data.synthetic import synthetic_mnist
+from repro.models.cnn import MLPConfig, mlp_forward, mlp_init
+from repro.obs import (MetricsRegistry, Observer, ObsConfig, read_jsonl,
+                       snapshot_percentile)
+from repro.obs.live import (CRIT, OK, WARN, LiveTarget, MetricsSampler,
+                            ObsHttpServer, ProbeContext, ProbeResult,
+                            ProbeSet, available_probes, client_scoreboard,
+                            get_probe, register_probe, render_prometheus,
+                            worst)
+from repro.obs.metrics import Histogram
+from repro.resilience import ChaosTransport, FaultSpec, RetryPolicy
+from repro.serve import MultiTenantServer, launch_serving, serve_run
+
+
+@pytest.fixture(scope="module")
+def setup():
+    xtr, ytr, xte, yte = synthetic_mnist(16 * 60 + 200, 200, seed=0)
+    mcfg = MLPConfig(hidden=(16,))
+    loss_fn = make_weighted_classifier_loss(mlp_forward, mcfg)
+    evaluate = make_evaluator(mlp_forward, mcfg, xte, yte, batch=200)
+    return mcfg, loss_fn, evaluate, (xtr, ytr)
+
+
+def _cfg(n_clients, alg="afl", **kw):
+    base = dict(algorithm=alg, num_clients=n_clients, rounds=2,
+                local=LocalSpec(batch_size=32, local_rounds=1, lr=0.1),
+                target_acc=0.99, events_per_eval=n_clients, seed=7,
+                obs=ObsConfig(sample_interval=0.02))
+    base.update(kw)
+    return FLRunConfig(**base)
+
+
+def _pieces(setup, n_clients, samples=60):
+    mcfg, loss_fn, evaluate, (xtr, ytr) = setup
+    fed = iid_partition(xtr, ytr, n_clients, samples_per_client=samples,
+                        seed=0)
+    return dict(init_params_fn=lambda k: mlp_init(mcfg, k),
+                loss_fn=loss_fn, fed_data=fed, evaluate_fn=evaluate)
+
+
+def _drive(server, workers, tr, *, stall=30.0, absorb=True):
+    try:
+        server.start()
+        for w in workers:
+            w.start()
+        server.run(stall_timeout=stall)
+        for w in workers:
+            w.stop()
+        for w in workers:
+            w.join(timeout=10.0)
+        res = server.finalize()
+        if absorb:
+            server.absorb_client_stats(workers)
+    finally:
+        tr.close()
+    return res
+
+
+def _get(url, timeout=5.0):
+    with urllib.request.urlopen(url, timeout=timeout) as r:
+        return r.status, r.read().decode()
+
+
+# ------------------------------------------------------------ percentiles ---
+
+class TestPercentiles:
+    def test_uniform_1_to_100(self):
+        h = Histogram()
+        for v in range(1, 101):
+            h.observe(v)
+        assert h.percentile(0) == 1.0
+        assert h.percentile(100) == 100.0
+        # within one pow2 bucket's interpolation of the true quantile
+        assert abs(h.percentile(50) - 50.0) < 16.0
+        assert abs(h.percentile(95) - 95.0) < 8.0
+        assert h.percentile(99) <= 100.0
+
+    def test_extremes_and_single_value(self):
+        h = Histogram()
+        h.observe(42.0)
+        for q in (0, 50, 99, 100):
+            assert h.percentile(q) == 42.0
+        assert Histogram().percentile(50) is None
+
+    def test_monotone_in_q(self):
+        h = Histogram()
+        for v in (1, 2, 3, 100, 1000, 5000):
+            h.observe(v)
+        ps = [h.percentile(q) for q in (0, 25, 50, 75, 95, 100)]
+        assert ps == sorted(ps)
+        assert ps[0] == 1.0 and ps[-1] == 5000.0
+
+    def test_snapshot_percentile_string_bucket_keys(self):
+        reg = MetricsRegistry()
+        for v in range(1, 101):
+            reg.hist("lat").observe(v)
+        snap = json.loads(json.dumps(reg.snapshot()))  # str bucket keys
+        live = reg.hist("lat").percentile(95)
+        assert snapshot_percentile(snap["histograms"]["lat"], 95) == live
+        assert snapshot_percentile(None, 95) is None
+        assert snapshot_percentile({}, 95) is None
+
+    def test_run_summary_percentile_scalars(self):
+        res = RunResult("afl", [], CommStats(), 0.9)
+        s = res.to_summary()          # obs off -> all None, keys present
+        assert s["staleness_p95"] is None
+        assert s["queue_depth_p95"] is None
+        assert s["commit_latency_ms_p95"] is None
+        reg = MetricsRegistry()
+        for v in (1, 2, 3, 4, 8):
+            reg.hist("staleness").observe(v)
+        res.metrics = reg.snapshot()
+        assert res.to_summary()["staleness_p95"] == \
+            reg.hist("staleness").percentile(95)
+
+
+# ---------------------------------------------------------------- sampler ---
+
+class TestMetricsSampler:
+    def test_validation(self):
+        reg = MetricsRegistry()
+        with pytest.raises(ValueError, match="interval"):
+            MetricsSampler(reg, interval=0)
+        with pytest.raises(ValueError, match="capacity"):
+            MetricsSampler(reg, capacity=1)
+
+    def test_ring_deltas_rates_with_injected_clock(self):
+        reg = MetricsRegistry()
+        clock = iter(float(t) for t in range(100))
+        s = MetricsSampler(reg, interval=1.0, capacity=3,
+                           clock=lambda: next(clock))
+        reg.counter("uploads").inc(10)
+        s.sample_once()                     # t=0: uploads=10
+        reg.counter("uploads").inc(5)
+        reg.gauge("depth").set(7)
+        s.sample_once()                     # t=1: uploads=15
+        reg.counter("uploads").inc(5)
+        s.sample_once()                     # t=2: uploads=20
+        assert len(s) == 3
+        assert s.deltas() == {"uploads": 10}
+        assert s.rates() == {"uploads": 5.0}
+        assert s.series("uploads") == [(0.0, 10), (1.0, 15), (2.0, 20)]
+        assert s.series("depth")[-1] == (2.0, 7)
+        # capacity bound: a 4th sample drops the oldest
+        reg.counter("uploads").inc(100)
+        s.sample_once()                     # t=3: uploads=120
+        assert len(s) == 3
+        assert s.samples()[0][0] == 1.0
+        assert s.deltas() == {"uploads": 105}
+        assert s.latest()[1]["counters"]["uploads"] == 120
+
+    def test_counter_born_mid_window_deltas_from_zero(self):
+        reg = MetricsRegistry()
+        clock = iter(float(t) for t in range(10))
+        s = MetricsSampler(reg, clock=lambda: next(clock))
+        s.sample_once()
+        reg.counter("late").inc(4)
+        s.sample_once()
+        assert s.deltas() == {"late": 4}
+        assert s.rates() == {"late": 4.0}
+
+    def test_background_thread(self):
+        reg = MetricsRegistry()
+        s = MetricsSampler(reg, interval=0.01)
+        s.start()
+        s.start()                           # idempotent
+        deadline = time.monotonic() + 5.0
+        while len(s) < 3 and time.monotonic() < deadline:
+            time.sleep(0.01)
+        s.stop()
+        s.stop()                            # idempotent
+        assert len(s) >= 3
+
+    def test_observer_opt_in(self):
+        obs = Observer(ObsConfig())         # no sample_interval
+        obs.sampler_start()
+        assert obs.sampler is None
+        obs2 = Observer(ObsConfig(sample_interval=0.01))
+        obs2.sampler_start()
+        assert obs2.sampler is not None
+        obs2.finish()
+        assert obs2.metrics.gauge("metric_samples").value >= 1
+
+
+# ------------------------------------------------------- prometheus format ---
+
+class TestPrometheusFormat:
+    def test_counter_and_gauge_families(self):
+        reg = MetricsRegistry()
+        reg.counter("uploads").inc(8)
+        reg.gauge("jit_compiles").set(3)
+        txt = render_prometheus([({}, reg.snapshot())])
+        assert "# HELP repro_uploads_total repro.obs counter uploads" in txt
+        assert "# TYPE repro_uploads_total counter" in txt
+        assert "repro_uploads_total 8" in txt
+        assert "# TYPE repro_jit_compiles gauge" in txt
+        assert "repro_jit_compiles 3" in txt
+        assert txt.endswith("\n")
+
+    def test_histogram_family_golden(self):
+        reg = MetricsRegistry()
+        h = reg.hist("lat")
+        # buckets: k=0 (v<=1) holds 0.5 and 1.0; k=1 (1,2] holds 2.0;
+        # k=2 (2,4] holds 3.0; k=3 (4,8] holds 7.0
+        for v in (0.5, 1.0, 2.0, 3.0, 7.0):
+            h.observe(v)
+        txt = render_prometheus([({}, reg.snapshot())])
+        lines = txt.splitlines()
+        assert "# TYPE repro_lat histogram" in lines
+        assert 'repro_lat_bucket{le="1"} 2' in lines
+        assert 'repro_lat_bucket{le="2"} 3' in lines      # cumulative
+        assert 'repro_lat_bucket{le="4"} 4' in lines
+        assert 'repro_lat_bucket{le="8"} 5' in lines
+        assert 'repro_lat_bucket{le="+Inf"} 5' in lines
+        assert "repro_lat_sum 13.5" in txt
+        assert "repro_lat_count 5" in lines
+        # derived percentile gauges are their own families
+        assert "# TYPE repro_lat_p95 gauge" in lines
+        for suffix in ("_p50", "_p95", "_p99"):
+            assert f"repro_lat{suffix} " in txt
+
+    def test_label_escaping_and_tenant_labels(self):
+        reg_a, reg_b = MetricsRegistry(), MetricsRegistry()
+        reg_a.counter("uploads").inc(1)
+        reg_b.counter("uploads").inc(2)
+        evil = 'we"ird\\ten\nant'
+        txt = render_prometheus([({"tenant": "a"}, reg_a.snapshot()),
+                                 ({"tenant": evil}, reg_b.snapshot())])
+        assert 'repro_uploads_total{tenant="a"} 1' in txt
+        assert ('repro_uploads_total{tenant="we\\"ird\\\\ten\\nant"} 2'
+                in txt)
+        # HELP/TYPE emitted once per family even across sources
+        assert txt.count("# TYPE repro_uploads_total counter") == 1
+
+    def test_metric_name_sanitised(self):
+        reg = MetricsRegistry()
+        reg.counter("weird-name.v2").inc(1)
+        txt = render_prometheus([({}, reg.snapshot())])
+        assert "repro_weird_name_v2_total 1" in txt
+
+    def test_rates_rendered_as_rate_gauge(self):
+        reg = MetricsRegistry()
+        reg.counter("uploads").inc(4)
+        txt = render_prometheus([({}, reg.snapshot())],
+                                rates={0: {"uploads": 2.5}})
+        assert 'repro_counter_rate{metric="uploads"} 2.5' in txt
+        assert "# TYPE repro_counter_rate gauge" in txt
+
+
+# ---------------------------------------------------------- probe registry ---
+
+class TestProbeRegistry:
+    def test_builtins_listed(self):
+        names = available_probes()
+        assert names[:5] == ("staleness-p99", "queue-depth",
+                             "commit-latency", "dead-client-fraction",
+                             "accuracy-stall")
+
+    def test_unknown_name_fails_loudly(self):
+        with pytest.raises(ValueError, match="staleness-p99"):
+            get_probe("no-such-probe")
+
+    def test_register_duplicate_and_overwrite(self):
+        name = "test-probe-dup"
+        factory = lambda **kw: lambda ctx: ProbeResult(name, OK)  # noqa: E731
+        register_probe(name, factory)
+        with pytest.raises(ValueError, match="already registered"):
+            register_probe(name, factory)
+        register_probe(name, factory, overwrite=True)
+        assert name in available_probes()
+        assert get_probe(name) is factory
+
+    def test_worst(self):
+        assert worst([]) == OK
+        assert worst([OK, WARN, OK]) == WARN
+        assert worst([WARN, CRIT]) == CRIT
+
+
+class TestBuiltinProbes:
+    def _snap_with(self, hist_name, values):
+        reg = MetricsRegistry()
+        for v in values:
+            reg.hist(hist_name).observe(v)
+        return reg.snapshot()
+
+    def test_staleness_thresholds(self):
+        probe = get_probe("staleness-p99")(warn=8.0, crit=32.0)
+        assert probe(ProbeContext({})).status == OK     # no signal
+        ok = probe(ProbeContext(self._snap_with("staleness", [1] * 50)))
+        assert ok.status == OK
+        w = probe(ProbeContext(self._snap_with("staleness", [16] * 50)))
+        assert w.status == WARN
+        c = probe(ProbeContext(self._snap_with("staleness", [64] * 50)))
+        assert c.status == CRIT
+        assert "staleness p99" in c.detail
+
+    def test_queue_and_latency_thresholds(self):
+        qd = get_probe("queue-depth")(warn=64.0, crit=256.0)
+        assert qd(ProbeContext(
+            self._snap_with("queue_depth", [300] * 20))).status == CRIT
+        cl = get_probe("commit-latency")(warn_ms=250.0, crit_ms=2000.0)
+        assert cl(ProbeContext(
+            self._snap_with("commit_latency_ms", [500] * 20))).status == WARN
+
+    def test_dead_client_fraction(self):
+        probe = get_probe("dead-client-fraction")()
+        assert probe(ProbeContext({})).status == OK     # no server
+        srv = types.SimpleNamespace(
+            cfg=types.SimpleNamespace(num_clients=8), _evicted={1, 2, 3})
+        r = probe(ProbeContext({}, server=srv))
+        assert r.status == WARN and r.value == 0.375
+        srv._evicted = {0, 1, 2, 3}
+        assert probe(ProbeContext({}, server=srv)).status == CRIT
+
+    def test_accuracy_stall(self):
+        probe = get_probe("accuracy-stall")(window=3)
+        rec = lambda a: types.SimpleNamespace(global_acc=a)  # noqa: E731
+        srv = types.SimpleNamespace(records=[rec(0.1), rec(0.2)])
+        assert probe(ProbeContext({}, server=srv)).status == OK  # too few
+        srv.records = [rec(a) for a in (0.1, 0.5, 0.5, 0.5, 0.5)]
+        assert probe(ProbeContext({}, server=srv)).status == WARN
+        srv.records = [rec(a) for a in (0.1, 0.2, 0.3, 0.4, 0.5)]
+        assert probe(ProbeContext({}, server=srv)).status == OK
+
+    def test_probeset_transition_alerts(self):
+        """Entering WARN alerts once, staying silent while steady, and
+        the recovery to OK alerts once more — all as structured trace
+        events + counters."""
+        obs = Observer(ObsConfig())
+        statuses = iter([OK, WARN, WARN, CRIT, OK])
+
+        def flapper(ctx):
+            return ProbeResult("flapper", next(statuses), 1.0, "d")
+
+        ps = ProbeSet([flapper], obs=obs)
+        verdicts = [ps.verdict(ps.evaluate(ProbeContext({})))
+                    for _ in range(5)]
+        assert verdicts == [OK, WARN, WARN, CRIT, OK]
+        snap = obs.metrics.snapshot()["counters"]
+        assert snap["alerts"] == 3          # ok->warn, warn->crit, crit->ok
+        assert snap["alerts_warn"] == 1
+        assert snap["alerts_crit"] == 1
+        alerts = [e for e in obs.tracer.events if e["name"] == "alert"]
+        assert [e["status"] for e in alerts] == [WARN, CRIT, OK]
+        assert all(e["probe"] == "flapper" for e in alerts)
+
+
+# ------------------------------------------------------- live serve (HTTP) ---
+
+class TestLiveServe:
+    def test_http_plane_mid_run_and_exact_reconciliation(self, setup):
+        """THE acceptance: a 16-client threaded federation answers all
+        four endpoints over real HTTP while the run is in flight, and
+        the scoreboard's byte totals reconcile exactly with the final
+        CommStats."""
+        N = 16
+        server, workers, tr = launch_serving(_cfg(N), **_pieces(setup, N))
+        plane = ObsHttpServer([server]).start()
+        seen = {}
+        stop = threading.Event()
+
+        def scrape():
+            while not stop.is_set():
+                for path in ("/metrics", "/healthz", "/clients", "/trace"):
+                    try:
+                        st, body = _get(plane.url + path, timeout=2)
+                        if st == 200:
+                            seen[path] = body
+                    except OSError:
+                        pass
+                stop.wait(0.01)
+
+        poller = threading.Thread(target=scrape, daemon=True)
+        poller.start()
+        try:
+            res = _drive(server, workers, tr)
+        finally:
+            stop.set()
+            poller.join(timeout=5.0)
+        # every endpoint answered while the federation was live
+        assert set(seen) == {"/metrics", "/healthz", "/clients", "/trace"}
+        assert "repro_uploads_total" in seen["/metrics"]
+        health = json.loads(seen["/healthz"])
+        assert health["status"] in (OK, WARN, CRIT)
+        assert {p["name"] for p in health["probes"]} == set(
+            available_probes()[:5])
+        board = json.loads(seen["/clients"])
+        assert len(board["clients"]) == N
+        assert json.loads(seen["/trace"])["default"] is not None
+        # the final scoreboard reconciles EXACTLY against CommStats
+        final = server.scoreboard()
+        assert final["totals"]["up_bytes"] == res.comm.uplink_bytes
+        assert final["totals"]["down_bytes"] == res.comm.downlink_bytes
+        assert final["totals"]["accepted_updates"] == \
+            res.comm.model_uploads
+        assert final["processed"] == N * 2
+        # the sealed plane still serves the final counters
+        st, txt = _get(plane.url + "/metrics")
+        assert f"repro_uploads_total {res.comm.model_uploads}" in txt
+        assert res.metrics["gauges"]["metric_samples"] >= 2
+        plane.stop()
+
+    def test_routes_404_index_and_crit_503(self, setup):
+        server, workers, tr = launch_serving(_cfg(4),
+                                             **_pieces(setup, 4))
+        always_crit = lambda ctx: ProbeResult("boom", CRIT, 1.0)  # noqa: E731
+        plane = ObsHttpServer([server],
+                              probes=[always_crit]).start()
+        try:
+            st, body = _get(plane.url + "/")
+            assert st == 200
+            assert set(json.loads(body)["endpoints"]) >= {"/metrics",
+                                                          "/healthz"}
+            with pytest.raises(urllib.error.HTTPError) as e404:
+                _get(plane.url + "/nope")
+            assert e404.value.code == 404
+            with pytest.raises(urllib.error.HTTPError) as e503:
+                _get(plane.url + "/healthz")
+            assert e503.value.code == 503
+            assert json.loads(e503.value.read())["status"] == CRIT
+        finally:
+            plane.stop()
+            tr.close()
+
+    def test_serve_run_live_flag_and_sequential_guard(self, setup):
+        with pytest.raises(ValueError, match="thread driver"):
+            serve_run(_cfg(4), driver="sequential", live=True,
+                      **_pieces(setup, 4))
+        with pytest.raises(ValueError, match="live must be"):
+            serve_run(_cfg(4), live="yes", **_pieces(setup, 4))
+        res = serve_run(_cfg(4), live=True, **_pieces(setup, 4))
+        assert res.metrics["counters"]["uploads"] == res.comm.model_uploads
+        assert res.metrics["gauges"]["metric_samples"] >= 2
+
+
+# ------------------------------------------------------------ multi-tenant ---
+
+class TestMultiTenantLive:
+    def test_two_tenants_isolated_metrics_one_plane(self, setup):
+        """One HTTP plane over two federations: the exposition labels
+        every sample with its tenant, and each tenant's registry
+        reconciles against its OWN CommStats (nothing bleeds across)."""
+        sa, wa, ta = launch_serving(_cfg(4), name="tenant-a",
+                                    **_pieces(setup, 4))
+        sb, wb, tb = launch_serving(_cfg(4, alg="vafl"), name="tenant-b",
+                                    **_pieces(setup, 4))
+        mt = MultiTenantServer([sa, sb], live=True)
+        scraped = []
+        stop = threading.Event()
+        try:
+            mt.start()
+            assert mt.live is not None
+            url = mt.live.url          # pin: mt.live is None after run()
+
+            def scrape():
+                while not stop.is_set():
+                    try:
+                        st, txt = _get(url + "/metrics", timeout=2)
+                        scraped.append(txt)
+                    except OSError:
+                        pass
+                    stop.wait(0.01)
+
+            poller = threading.Thread(target=scrape, daemon=True)
+            poller.start()
+            for w in wa + wb:
+                w.start()
+            res_a, res_b = mt.run(stall_timeout=30.0)
+            stop.set()
+            poller.join(timeout=5.0)
+            for w in wa + wb:
+                w.stop()
+            for w in wa + wb:
+                w.join(timeout=10.0)
+            sa.absorb_client_stats(wa)
+            sb.absorb_client_stats(wb)
+        finally:
+            stop.set()
+            ta.close()
+            tb.close()
+        assert mt.live is None              # plane stopped after run
+        assert scraped, "the plane never answered mid-run"
+        assert 'tenant="tenant-a"' in scraped[-1]
+        assert 'tenant="tenant-b"' in scraped[-1]
+        # isolation: each registry carries its own federation's ledger
+        for res, srv in ((res_a, sa), (res_b, sb)):
+            c = res.metrics["counters"]
+            assert c["uploads"] == res.comm.model_uploads
+            assert c["upload_payload_bytes"] == \
+                res.comm.upload_payload_bytes
+        assert sa.obs.metrics is not sb.obs.metrics
+        # vafl gates uploads, afl ships every event — the ledgers differ
+        assert res_a.comm.upload_payload_bytes != \
+            res_b.comm.upload_payload_bytes
+
+
+# ----------------------------------------------- chaos: probes + ledgers ---
+
+class TestChaosTelemetry:
+    def test_fault_and_retry_counters_reconcile_exactly(self, setup):
+        """The obs fault counters are a VIEW of the chaos ground truth:
+        chaos_faults_<kind> == ChaosTransport.stats[kind] for every
+        injected fate, and client_retries == the fleet's retry sum."""
+        chaos = ChaosTransport(4, faults=FaultSpec(
+            drop=0.15, duplicate=0.1, reorder=0.1, seed=11))
+        retry = RetryPolicy(max_attempts=8, attempt_timeout_s=0.5,
+                            base_s=0.02, max_backoff_s=0.25, seed=11)
+        server, workers, tr = launch_serving(
+            _cfg(4, rounds=3), transport=chaos, retry=retry,
+            recv_timeout=10.0, exchange_timeout=10.0,
+            **_pieces(setup, 4))
+        res = _drive(server, workers, tr)
+        c = res.metrics["counters"]
+        injected = {k: v for k, v in chaos.stats.items()
+                    if k not in ("sent", "delivered") and v}
+        assert injected, "fault schedule never fired"
+        for kind, n in injected.items():
+            assert c.get(f"chaos_faults_{kind}", 0) == n, kind
+        assert c.get("chaos_faults", 0) == sum(injected.values())
+        assert c.get("client_retries", 0) == \
+            sum(w.stats["retries"] for w in workers)
+        # absorb is idempotent: a second pass must not double-count
+        server.absorb_client_stats(workers)
+        c2 = server._finalized.metrics["counters"]
+        assert c2.get("client_retries", 0) == c.get("client_retries", 0)
+        assert c2.get("chaos_faults", 0) == c.get("chaos_faults", 0)
+
+    def test_chaos_flips_probe_and_alert_lands_in_trace(self, setup,
+                                                        tmp_path):
+        """A blackout-heavy chaos run evicts clients; the dead-client
+        probe flips to WARN/CRIT, and the transition alert is a
+        structured event in the exported trace."""
+        out = tmp_path / "trace.jsonl"
+        chaos = ChaosTransport(4, faults=FaultSpec(
+            blackout=0.5, blackout_s=1.0, seed=3))
+        retry = RetryPolicy(max_attempts=8, attempt_timeout_s=0.3,
+                            base_s=0.02, max_backoff_s=0.2, seed=3)
+        cfg = _cfg(4, rounds=3,
+                   obs=ObsConfig(trace_jsonl=str(out),
+                                 sample_interval=0.02))
+        server, workers, tr = launch_serving(
+            cfg, transport=chaos, retry=retry, recv_timeout=5.0,
+            exchange_timeout=5.0, liveness_timeout=0.2,
+            **_pieces(setup, 4))
+        target = LiveTarget(server, probes=[
+            get_probe("dead-client-fraction")(warn=0.01, crit=0.9)])
+        worst_seen = [OK]
+        stop = threading.Event()
+
+        def watch():
+            while not stop.is_set():
+                h = target.health()
+                worst_seen[0] = worst([worst_seen[0], h["status"]])
+                stop.wait(0.01)
+
+        watcher = threading.Thread(target=watch, daemon=True)
+        watcher.start()
+        try:
+            server.start()
+            for w in workers:
+                w.start()
+            server.run(stall_timeout=20.0)
+            for w in workers:
+                w.stop()
+            for w in workers:
+                w.join(timeout=10.0)
+        finally:
+            stop.set()
+            watcher.join(timeout=5.0)
+        # one final evaluation so an eviction surviving to the end is
+        # seen even if every mid-run poll raced the eviction window
+        final = target.health()
+        server.finalize()
+        tr.close()
+        assert server.evictions > 0, "blackout never tripped liveness"
+        flipped = worst([worst_seen[0], final["status"]])
+        assert flipped in (WARN, CRIT)
+        header, events = read_jsonl(str(out))
+        alerts = [e for e in events if e["name"] == "alert"]
+        assert alerts, "no alert event in the exported trace"
+        assert alerts[0]["probe"] == "dead-client-fraction"
+        assert alerts[0]["status"] in (WARN, CRIT)
+        # the alert counters sealed into the result agree
+        snap = server._finalized.metrics["counters"]
+        assert snap["alerts"] == len(alerts)

@@ -246,6 +246,16 @@ class TestEntryPoints:
             assert row["bit_exact_with_obs"] is True
             assert row["trace_events"] > 0
             assert np.isfinite(row["sec_obs_on"])
+        # the live-plane lap (repro.obs.live): plain serve vs serve +
+        # sampler + HTTP plane + concurrent scraper.  Smoke laps are too
+        # short to gate the <5% contract (that's --full), but the stack
+        # must have actually run: samples taken, endpoints answered.
+        live = doc["live"]
+        for key in ("sec_plain", "sec_live", "live_overhead_pct",
+                    "metric_samples", "http_polls"):
+            assert key in live, f"missing live.{key}"
+        assert live["metric_samples"] > 0
+        assert live["http_polls"] > 0
 
     def test_bench_analysis_json_emitted(self, tmp_path):
         """benchmarks/run.py --smoke must leave BENCH_analysis.json behind
@@ -342,6 +352,33 @@ class TestEntryPoints:
         resume = labels["resume"]
         assert resume["checkpoint_bytes"] > 0
         assert resume["resumed_records"] > 0
+
+    def test_bench_trend_json_emitted(self, tmp_path):
+        """benchmarks/run.py --smoke must leave BENCH_trend.json behind
+        (schema bench-trend/v1): the final [trend] section folds every
+        BENCH_*.json the sweep emitted into one appended lap with
+        direction-aware regression grading — run twice, the second lap
+        must grade itself against the first."""
+        import json
+        cmd = [sys.executable, str(ROOT / "benchmarks" / "run.py"),
+               "--smoke", "--skip", "table3,fig4,fig5,compress,engine,"
+               "scenarios,obs,serving,resilience"]
+        for _ in range(2):
+            p = subprocess.run(cmd, cwd=tmp_path, timeout=420,
+                               capture_output=True, text=True)
+            assert p.returncode == 0, p.stderr[-2000:]
+        out = tmp_path / "BENCH_trend.json"
+        assert out.exists(), p.stdout[-2000:]
+        doc = json.loads(out.read_text())
+        assert doc["schema"] == "bench-trend/v1"
+        assert len(doc["laps"]) == 2
+        for i, lap in enumerate(doc["laps"]):
+            assert lap["lap"] == i + 1
+            # the analysis section ran, so its headline must be present
+            assert lap["headline"]["analysis_open_findings"] == 0
+            assert "regressions" in lap
+        # identical back-to-back analysis laps cannot regress
+        assert doc["laps"][1]["regressions"] == []
 
     @pytest.mark.slow
     def test_benchmarks_smoke_all_sections(self):
